@@ -1,0 +1,30 @@
+"""App. B: quantization granularity must tighten as models grow.
+
+The paper reports: GPT-125M trains with per-token/channel FP4 everywhere;
+GPT-335M needs per-block wgrad; GPT-774M+ needs per-block forward AND FP8
+wgrad (= the final recipe).  At CPU scale we reproduce the *mechanism*:
+on a fixed model, coarser-granularity FP4 recipes lose more loss, and the
+ordering  per-token < per-block < paper(fp8-wgrad)  holds for stability.
+"""
+from __future__ import annotations
+
+from benchmarks.common import BENCH_LLAMA, emit, train_once
+
+ROWS = ["gpt125m_fp4", "gpt335m_fp4", "paper_fp4", "bf16"]
+
+
+def run(steps: int = 300) -> dict:
+    out = {}
+    for name in ROWS:
+        r = train_once(BENCH_LLAMA, name, steps=steps)
+        out[name] = r
+        emit(f"appb/{name}", r["us_per_step"],
+             f"val_loss={r['val_loss']:.4f};val_ppl={r['val_ppl']:.3f}")
+    ordered = sorted(ROWS[:3], key=lambda n: out[n]["val_loss"])
+    emit("appb/granularity_ranking", 0.0,
+         "best_to_worst=" + ">".join(ordered))
+    return out
+
+
+if __name__ == "__main__":
+    run()

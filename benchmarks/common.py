@@ -1,0 +1,68 @@
+"""Shared benchmark scaffolding: tiny-but-meaningful training runs + CSV."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train.trainer import Trainer
+
+# The benchmark model: a GPT2-small-shaped micro config.  Big enough that
+# FP4 noise is visible, small enough for CPU.
+BENCH_GPT = ModelConfig(
+    name="bench-gpt", family="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=4, head_dim=32, d_ff=512, vocab_size=512,
+    activation="gelu", norm="layernorm", pos_emb="learned", max_seq_len=128,
+    tie_embeddings=True, attention_chunk=128)
+BENCH_LLAMA = ModelConfig(
+    name="bench-llama", family="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=4, head_dim=32, d_ff=352, vocab_size=512,
+    activation="swiglu", norm="rmsnorm", pos_emb="rope",
+    rope_theta=10000.0, max_seq_len=128, attention_chunk=128)
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def train_once(cfg: ModelConfig, recipe: str, steps: int = 300,
+               seed: int = 0, lr: float = 3e-3,
+               seq: int = 64, batch: int = 16) -> Dict[str, float]:
+    """Train the bench model; returns losses + wall-time per step."""
+    model = build_model(cfg)
+    tcfg = TrainConfig(recipe=recipe, total_steps=steps, global_batch=batch,
+                       seq_len=seq, learning_rate=lr, log_every=0, seed=seed)
+    pipe = SyntheticLM(cfg.vocab_size, seq, batch, seed=seed)
+    tr = Trainer(model, tcfg, pipe)
+    t0 = time.time()
+    st = tr.train()
+    wall = time.time() - t0
+    ev = tr.evaluate(st, n_batches=4)
+    train_tail = float(np.mean([r["loss"] for r in tr.history[-20:]]))
+    return {"train_loss": train_tail, "val_loss": ev["val_loss"],
+            "val_ppl": ev["val_ppl"],
+            "us_per_step": wall / steps * 1e6,
+            "state": st, "trainer": tr}
+
+
+def timeit(fn, *args, n: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in microseconds (blocking on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)

@@ -1,0 +1,120 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from
+artifacts/dryrun JSONs.  Run after the sweep:
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments > /tmp/sections.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from collections import defaultdict
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+ARCH_ORDER = [
+    "nemotron-4-15b", "llama3.2-3b", "h2o-danube-3-4b", "granite-34b",
+    "mixtral-8x22b", "olmoe-1b-7b", "llama-3.2-vision-90b", "whisper-base",
+    "mamba2-780m", "jamba-1.5-large-398b",
+]
+CELL_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh):
+    out = {}
+    for path in glob.glob(os.path.join(ART, f"*__{mesh}__*.json")):
+        with open(path) as f:
+            d = json.load(f)
+        out[(d["arch"], d["cell"])] = d
+    return out
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def dryrun_section(single, multi):
+    print("## Dry-run (16x16 single-pod and 2x16x16 multi-pod)\n")
+    print("Every (arch x shape) cell lowered + compiled with"
+          " `.lower().compile()` on both production meshes"
+          " (`repro.launch.dryrun`).  `mem/chip` = argument+temp+output"
+          " bytes per device from `memory_analysis()` (XLA:CPU's bf16->f32"
+          " legalization inflates temp ~2-3x vs a TPU build; see DESIGN.md"
+          " §8).  Skips are per-assignment (sub-quadratic-only cells).\n")
+    print("| arch | cell | multi-pod compile | multi mem/chip | single-pod"
+          " compile | status |")
+    print("|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for c in CELL_ORDER:
+            m = multi.get((a, c))
+            s = single.get((a, c))
+            if m is None and s is None:
+                continue
+            if (m or s)["status"] == "skipped":
+                print(f"| {a} | {c} | — | — | — | skipped:"
+                      f" {(m or s)['reason'][:58]} |")
+                continue
+            mm = (f"{m['compile_s']:.1f}s" if m and m["status"] == "ok"
+                  else (m or {}).get("status", "—"))
+            mg = (f"{m['memory']['peak_estimate_gb']:.1f} GB"
+                  if m and m["status"] == "ok" else "—")
+            ss = (f"{s['compile_s']:.1f}s" if s and s["status"] == "ok"
+                  else (s or {}).get("status", "—"))
+            ok = "ok" if (not m or m["status"] == "ok") and \
+                (not s or s["status"] == "ok") else "PARTIAL"
+            print(f"| {a} | {c} | {mm} | {mg} | {ss} | {ok} |")
+    print()
+
+
+def roofline_section(single):
+    print("## Roofline (single-pod 16x16 = 256 chips, TPU v5e terms)\n")
+    print("Terms in per-chip seconds: compute = FLOPs/197e12, memory ="
+          " bytes/819e9, collective = ring-effective bytes/50e9."
+          "  FLOPs from unrolled-probe differencing (exact for the layer"
+          " stack) + analytic corrections for interior scans;"
+          " `useful` = MODEL_FLOPS/(HLO_FLOPs*chips); `MFU@bound` ="
+          " MODEL_FLOPS/(chips*peak*bound).\n")
+    print("| arch | cell | compute | memory | collective | bottleneck |"
+          " useful | MFU@bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for c in CELL_ORDER:
+            d = single.get((a, c))
+            if d is None or d["status"] == "skipped":
+                continue
+            if d["status"] != "ok":
+                print(f"| {a} | {c} | — | — | — | {d['status']} | — | — |")
+                continue
+            t = d["roofline"]
+            print(f"| {a} | {c} | {fmt_s(t['compute_s'])} |"
+                  f" {fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} |"
+                  f" {t['bottleneck']} |"
+                  f" {t.get('useful_flops_ratio', 0):.3f} |"
+                  f" {t.get('mfu_at_bound', 0):.3f} |")
+    print()
+    # bottleneck histogram + worst cells (hillclimb candidates)
+    by = defaultdict(list)
+    for (a, c), d in single.items():
+        if d["status"] == "ok":
+            by[d["roofline"]["bottleneck"]].append(
+                (d["roofline"].get("mfu_at_bound", 0), a, c))
+    print("### Bottleneck summary\n")
+    for k, v in sorted(by.items()):
+        worst = sorted(v)[:3]
+        print(f"- **{k}**: {len(v)} cells; worst MFU@bound: "
+              + ", ".join(f"{a}/{c} ({m:.3f})" for m, a, c in worst))
+    print()
+
+
+def main():
+    single, multi = load("single"), load("multi")
+    dryrun_section(single, multi)
+    roofline_section(single)
+
+
+if __name__ == "__main__":
+    main()

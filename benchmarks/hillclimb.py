@@ -1,0 +1,105 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver: run one dry-run cell with overrides and report the
+roofline deltas vs the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --arch llama3.2-3b --shape train_4k --tag seqpar --seq-parallel
+
+Results accumulate under artifacts/hillclimb/<arch>__<cell>__<tag>.json.
+"""
+import argparse
+import json
+
+from repro.configs.base import SHAPE_CELLS
+from repro.launch import dryrun
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--recipe", default="paper_fp4")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--attn-seq-shard", action="store_true",
+                    help="context-parallel attention: q-seq over 'model'")
+    ap.add_argument("--free-head-shard", action="store_true",
+                    help="shard QKV/O weight dims ignoring head granules")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat-policy", default=None)
+    ap.add_argument("--attention-chunk", type=int, default=None)
+    ap.add_argument("--loss-chunk", type=int, default=None)
+    ap.add_argument("--moe-group", type=int, default=None)
+    ap.add_argument("--experts-axis", default=None,
+                    help="mesh axis for the experts dim, e.g. data")
+    ap.add_argument("--mamba-chunk", type=int, default=None)
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    args = ap.parse_args()
+
+    cell = {c.name: c for c in SHAPE_CELLS}[args.shape]
+
+    def patch(cfg):
+        kw = {}
+        if args.remat_policy:
+            kw["remat_policy"] = args.remat_policy
+        if args.attention_chunk:
+            kw["attention_chunk"] = args.attention_chunk
+        if args.loss_chunk is not None:
+            kw["loss_chunk"] = args.loss_chunk
+        if args.moe_group and cfg.moe is not None:
+            import dataclasses
+            kw["moe"] = dataclasses.replace(cfg.moe,
+                                            group_size=args.moe_group)
+        if args.mamba_chunk and cfg.mamba is not None:
+            import dataclasses
+            kw["mamba"] = dataclasses.replace(cfg.mamba,
+                                              chunk=args.mamba_chunk)
+        return cfg.replace(**kw) if kw else cfg
+
+    overrides = {}
+    if args.experts_axis:
+        overrides["experts"] = (args.experts_axis,)
+    act_overrides = {}
+    if args.attn_seq_shard:
+        act_overrides["seq_q"] = ("model",)
+
+    res = dryrun.run_cell(
+        args.arch, cell, "single", recipe=args.recipe,
+        fsdp=not args.no_fsdp, seq_parallel=args.seq_parallel,
+        free_head_shard=args.free_head_shard,
+        cfg_patch=patch, rules_overrides=overrides or None,
+        act_overrides=act_overrides or None)
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out,
+                        f"{args.arch}__{cell.name}__{args.tag}.json")
+    res["tag"] = args.tag
+    res["overrides"] = {k: v for k, v in vars(args).items()
+                        if v not in (None, False) and k not in
+                        ("arch", "shape", "out")}
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+
+    # delta vs baseline artifact
+    base_path = os.path.join(
+        "artifacts/dryrun",
+        f"{args.arch}__{cell.name}__single__{args.recipe}.json")
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+        bt, nt = base["roofline"], res["roofline"]
+        print("\n=== delta vs baseline ===")
+        for k in ("compute_s", "memory_s", "collective_s",
+                  "step_time_lower_bound_s"):
+            b, n = bt[k], nt[k]
+            print(f"  {k:26s} {b:10.3f} -> {n:10.3f}   "
+                  f"({(n - b) / max(b, 1e-12) * 100:+.1f}%)")
+        print(f"  bottleneck {bt['bottleneck']} -> {nt['bottleneck']};  "
+              f"MFU@bound {bt.get('mfu_at_bound', 0):.3f} -> "
+              f"{nt.get('mfu_at_bound', 0):.3f}")
+
+
+if __name__ == "__main__":
+    main()

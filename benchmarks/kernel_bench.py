@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+path), so wall-times here measure (a) the pure-jnp QDQ+matmul simulation
+(what training actually pays on CPU) and (b) the chunked-flash vs naive
+attention — both meaningful CPU comparisons.  TPU wall-times come from the
+roofline analysis instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.qlinear import qlinear
+from repro.core.recipe import RECIPES
+from repro.kernels.ref import fp4_matmul_ref
+from repro.models.attention import chunked_attention
+from repro.kernels.ref import flash_attention_ref
+
+
+def run() -> None:
+    m, k, n = 512, 512, 512
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32) * 0.05
+
+    f_bf = jax.jit(lambda a, b: a @ b)
+    f_q = jax.jit(lambda a, b: fp4_matmul_ref(a, b))
+    t_bf = timeit(f_bf, x, w)
+    t_q = timeit(f_q, x, w)
+    emit("kernel/matmul_plain_512", t_bf, "impl=xla_dot")
+    emit("kernel/matmul_fp4qdq_512", t_q,
+         f"impl=simulated_qdq;overhead_x={t_q / t_bf:.2f}")
+
+    rcp = RECIPES["paper_fp4"].ffn_linear
+    f_lin = jax.jit(lambda a, b: qlinear(a, b, rcp))
+    emit("kernel/qlinear_paper_fp4_512", timeit(f_lin, x, w),
+         "fwd=fp4_block")
+
+    b, s, h, d = 2, 512, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    kk = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    f_naive = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v))
+    f_chunk = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, pos, pos, causal=True, chunk=128))
+    t_n = timeit(f_naive, q, kk, v, n=10)
+    t_c = timeit(f_chunk, q, kk, v, n=10)
+    emit("kernel/attention_naive_512", t_n, "memory=O(S^2)")
+    emit("kernel/attention_chunked_512", t_c,
+         f"memory=O(S*chunk);rel={t_c / t_n:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Render the §Roofline table from the dry-run artifacts (artifacts/dryrun).
+
+Also usable as a module: ``rows()`` returns the parsed records for
+EXPERIMENTS.md generation.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def rows(mesh: str = "single") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}__*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run() -> None:
+    recs = rows("single")
+    if not recs:
+        emit("roofline/missing", 0.0, f"no artifacts under {ART}")
+        return
+    for r in recs:
+        tag = f"roofline/{r['arch']}/{r['cell']}"
+        if r["status"] == "skipped":
+            emit(tag, 0.0, "status=skipped;" + r["reason"][:60])
+            continue
+        if r["status"] != "ok":
+            emit(tag, 0.0, f"status={r['status']}")
+            continue
+        t = r["roofline"]
+        emit(tag, t["step_time_lower_bound_s"] * 1e6,
+             f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+             f"collective_s={t['collective_s']:.4f};"
+             f"bottleneck={t['bottleneck']};"
+             f"useful_ratio={t.get('useful_flops_ratio', 0):.3f};"
+             f"mfu_bound={t.get('mfu_at_bound', 0):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Sections:
+  table1   FP4 vs BF16 pretraining (paper Table 1 contract)
+  table2   module-precision ablation + theoretical cost (Table 2)
+  table3   target-precision schedule (Table 3)
+  fig1     compute share / underflow rates / attention entropy (Fig. 1)
+  kernel   micro-benchmarks
+  roofline dry-run roofline table (reads artifacts/dryrun)
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,fig1,appb,kernel,"
+                         "roofline")
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def go(name):
+        return want is None or name in want
+
+    print("name,us_per_call,derived")
+    if go("cost"):
+        from repro.core.cost_model import paper_calibrated_cost
+        from repro.core.recipe import RECIPES
+        from benchmarks.common import emit
+        for r in ("all_fp4", "t2_fp8_fp4_fp4", "t2_fp8_fp4_fp8",
+                  "t2_fp4_fp8_fp8", "paper_fp4", "fp8", "bf16"):
+            emit(f"cost_model/{r}", 0.0,
+                 f"paper_calibrated={paper_calibrated_cost(RECIPES[r]):.3f}")
+    if go("table1"):
+        from benchmarks import table1_fp4_vs_bf16
+        table1_fp4_vs_bf16.run(steps=args.steps)
+    if go("table2"):
+        from benchmarks import table2_module_ablation
+        table2_module_ablation.run(steps=args.steps)
+    if go("table3"):
+        from benchmarks import table3_schedule
+        table3_schedule.run(steps=max(args.steps, 400))
+    if go("fig1"):
+        from benchmarks import fig1_diagnostics
+        fig1_diagnostics.run()
+    if go("appb"):
+        from benchmarks import appb_scaling
+        appb_scaling.run(steps=args.steps)
+    if go("kernel"):
+        from benchmarks import kernel_bench
+        kernel_bench.run()
+    if go("roofline"):
+        from benchmarks import roofline_table
+        roofline_table.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper §4.2 in miniature: train the same model under each precision
+recipe and print the Table-2-style comparison.
+
+    PYTHONPATH=src python examples/precision_ablation.py --steps 200
+"""
+import argparse
+
+from benchmarks.common import BENCH_LLAMA, train_once
+from repro.core.cost_model import paper_calibrated_cost
+from repro.core.recipe import RECIPES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    rows = ["all_fp4", "t2_fp8_fp4_fp8", "paper_fp4", "fp8", "bf16"]
+    print(f"{'recipe':18s} {'train':>8s} {'val':>8s} {'ppl':>8s} {'cost':>6s}")
+    for name in rows:
+        r = train_once(BENCH_LLAMA, name, steps=args.steps)
+        cost = paper_calibrated_cost(RECIPES[name])
+        print(f"{name:18s} {r['train_loss']:8.4f} {r['val_loss']:8.4f} "
+              f"{r['val_ppl']:8.3f} {cost:6.3f}")
+
+
+if __name__ == "__main__":
+    main()

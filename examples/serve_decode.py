@@ -1,0 +1,45 @@
+"""Batched serving example: prefill + greedy decode with a KV cache.
+
+Trains a tiny model briefly so generation shows the learned periodic
+structure, then serves a batch of prompts.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig, get_config
+from repro.core.recipe import RECIPES
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train.serve import generate
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    cfg = get_config("tiny")
+    model = build_model(cfg)
+    tcfg = TrainConfig(recipe="paper_fp4", total_steps=500, global_batch=8,
+                       seq_len=64, learning_rate=3e-3, log_every=50)
+    pipe = SyntheticLM(cfg.vocab_size, 64, 8, noise=0.0)
+    trainer = Trainer(model, tcfg, pipe)
+    state = trainer.train(log=print)
+
+    # serve: prompts from the same distribution; model should continue the
+    # periodic pattern
+    batch = pipe.batch(12345)
+    prompts = jnp.asarray(batch["tokens"][:4, :16])
+    truth = np.asarray(batch["tokens"][:4, 16:32])
+    out = generate(model, state.params, prompts, max_new_tokens=16,
+                   recipe=RECIPES["bf16"])
+    gen = np.asarray(out[:, 16:])
+    acc = float((gen == truth).mean())
+    for i in range(4):
+        print(f"prompt {np.asarray(prompts)[i, -8:].tolist()} -> "
+              f"gen {gen[i, :8].tolist()} | truth {truth[i, :8].tolist()}")
+    print(f"continuation accuracy: {acc:.2%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end training driver: the paper's GPT-2 pretraining, scaled by CLI.
+
+Default runs a reduced GPT-2 for a few hundred steps on CPU with
+checkpointing + resume; ``--full`` selects the real GPT-2-125M config
+(paper Table 4: 12L/768d, seq 1024, batch 480, lr 6e-4 — for real hardware).
+
+    PYTHONPATH=src python examples/train_fp4_gpt2.py --steps 300
+    PYTHONPATH=src python examples/train_fp4_gpt2.py --resume   # continues
+"""
+import argparse
+
+from repro.configs.base import TrainConfig, get_config
+from repro.data import ByteCorpus, SyntheticLM
+from repro.models import build_model
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale GPT-2 125M (needs accelerators)")
+    ap.add_argument("--recipe", default="paper_fp4")
+    ap.add_argument("--data", default="synthetic",
+                    choices=["synthetic", "bytes"])
+    ap.add_argument("--ckpt", default="/tmp/repro_gpt2_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = get_config("gpt2-125m")
+        tcfg = TrainConfig(recipe=args.recipe, total_steps=args.steps,
+                           global_batch=480, seq_len=1024,
+                           learning_rate=6e-4, weight_decay=0.1,
+                           checkpoint_every=100, checkpoint_dir=args.ckpt,
+                           keep_checkpoints=3, async_checkpoint=True)
+    else:
+        import importlib
+        cfg = importlib.import_module("repro.configs.gpt2_125m").REDUCED
+        cfg = cfg.replace(n_layers=4, d_model=128, d_ff=512)
+        tcfg = TrainConfig(recipe=args.recipe, total_steps=args.steps,
+                           global_batch=16, seq_len=128, learning_rate=2e-3,
+                           checkpoint_every=100, checkpoint_dir=args.ckpt,
+                           log_every=25)
+
+    model = build_model(cfg)
+    if args.data == "bytes":
+        pipe = ByteCorpus(tcfg.seq_len, tcfg.global_batch)
+        cfg = cfg.replace(vocab_size=256)
+        model = build_model(cfg)
+    else:
+        pipe = SyntheticLM(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch)
+
+    trainer = Trainer(model, tcfg, pipe)
+    state = trainer.resume() if args.resume else None
+    if state is not None:
+        print(f"resumed from step {state.step}")
+    state = trainer.train(state, log=print)
+    print("final eval:", trainer.evaluate(state))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.roofline import HW_V5E, roofline_terms, model_flops
+
+__all__ = ["collective_bytes", "parse_collectives", "HW_V5E",
+           "roofline_terms", "model_flops"]

@@ -1,0 +1,106 @@
+"""Parse collective ops (and their per-shard operand bytes) from post-
+optimization HLO text (``compiled.as_text()``).
+
+Shapes in post-SPMD HLO are per-device shard shapes, so the sums here are
+per-chip bytes moved, matching the roofline convention
+``collective_bytes / (chips * link_bw)`` when collective_bytes is global.
+
+Ring-model cost factors (bytes actually crossing links per operand byte):
+  all-reduce        2(N-1)/N  ~ 2   (reduce-scatter + all-gather)
+  all-gather         (N-1)/N  ~ 1   (operand = the gathered result)
+  reduce-scatter     (N-1)/N  ~ 1
+  all-to-all         (N-1)/N  ~ 1
+  collective-permute        1
+
+While-loop bodies appear once in HLO text but execute trip-count times; the
+roofline pass therefore unrolls layer loops (see launch.dryrun) and applies
+analytic corrections for the remaining interior scans (analysis.roofline).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+__all__ = ["parse_collectives", "collective_bytes", "COLLECTIVE_FACTORS"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_FACTORS = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# e.g.:  %all-gather.3 = bf16[4,1024,512]{2,1,0} all-gather(%param.1), ...
+#        %ags = (bf16[8],bf16[8]) all-gather-start(...)
+_KIND_RE = re.compile(
+    r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    if not dims:
+        return nb
+    return int(np.prod([int(d) for d in dims.split(",")])) * nb
+
+
+def parse_collectives(hlo_text: str) -> List[Tuple[str, str, int]]:
+    """[(op_kind, result_type, per_shard_bytes)] for every collective.
+
+    ``-start`` ops count once (their tuple result holds operand+destination
+    buffers; the payload is the largest element); the paired ``-done`` is
+    skipped.  Bytes are per-shard (post-SPMD HLO shapes).
+    """
+    out = []
+    for line in hlo_text.splitlines():
+        m = _KIND_RE.search(line)
+        if not m or m.group(2) == "-done":
+            continue
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        shapes = _SHAPE_RE.findall(line[eq:m.start()])
+        if not shapes:
+            continue
+        dtype, dims = max(shapes, key=lambda s: _shape_bytes(*s))
+        out.append((m.group(1), f"{dtype}[{dims}]",
+                    _shape_bytes(dtype, dims)))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind raw and ring-model effective per-chip bytes.
+
+    ``effective_total_bf16eq`` additionally halves f32 payloads: this
+    framework computes activations/gradients in bf16, so f32 collective
+    payloads in XLA:CPU HLO are bf16-legalization artifacts that a TPU
+    build would move at half the bytes (scalar f32 metric reductions are
+    byte-negligible).  Report both; bf16eq is the TPU-faithful figure.
+    """
+    ops = parse_collectives(hlo_text)
+    raw = defaultdict(float)
+    eff_bf16 = 0.0
+    for kind, shape, b in ops:
+        raw[kind] += b
+        scale = 0.5 if shape.startswith("f32") else 1.0
+        eff_bf16 += COLLECTIVE_FACTORS[kind] * b * scale
+    eff = sum(COLLECTIVE_FACTORS[k] * v for k, v in raw.items())
+    out = {f"raw_{k}": v for k, v in raw.items()}
+    out["raw_total"] = sum(raw.values())
+    out["effective_total"] = eff
+    out["effective_total_bf16eq"] = eff_bf16
+    out["n_ops"] = len(ops)
+    return out

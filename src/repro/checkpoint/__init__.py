@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing: atomic, retained, async, reshardable."""
+from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]

@@ -1,0 +1,155 @@
+"""Atomic, retained, optionally-async checkpointing (no orbax dependency).
+
+Layout:  <dir>/step_<N>/  arrays.npz  +  manifest.json
+Writes go to ``<dir>/.tmp_step_<N>`` then ``os.replace`` — a crash mid-save
+never corrupts the latest checkpoint (the restore path only considers
+directories with a valid manifest).  Retention keeps the newest K.
+
+The saved pytree is flattened to ``path/like/this`` npz keys; restore
+rebuilds against a reference pytree structure (so dtypes/Shapes are
+validated at load).  ``elastic_reshard`` re-maps arrays onto a new mesh —
+see distributed.elastic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_pytree(tree, directory: str, extra: Optional[dict] = None) -> None:
+    """Atomic save of a pytree (+ json-able ``extra`` metadata)."""
+    parent = os.path.dirname(os.path.abspath(directory)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent, ".tmp_" + os.path.basename(directory)
+                       + f"_{os.getpid()}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {"keys": sorted(flat), "time": time.time(),
+                "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.replace(tmp, directory)
+
+
+def load_pytree(directory: str, like) -> Any:
+    """Restore a pytree saved by ``save_pytree`` against a reference
+    structure ``like`` (arrays or ShapeDtypeStructs)."""
+    with np.load(os.path.join(directory, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, ref in leaves_like:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+        out.append(arr.astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+def load_manifest(directory: str) -> dict:
+    with open(os.path.join(directory, "manifest.json")) as f:
+        return json.load(f)
+
+
+class CheckpointManager:
+    """step-indexed checkpoints with retention and optional async save."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- helpers -----------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if not name.startswith("step_"):
+                continue
+            full = os.path.join(self.dir, name)
+            if not os.path.exists(os.path.join(full, "manifest.json")):
+                continue  # incomplete/corrupt -> ignored (fault tolerance)
+            try:
+                steps.append(int(name.split("_")[1]))
+            except ValueError:
+                continue
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save / restore ----------------------------------------------------
+
+    def save(self, step: int, tree, extra: Optional[dict] = None) -> None:
+        tree = jax.tree.map(lambda x: np.asarray(x), tree)  # device -> host
+        extra = dict(extra or {}, step=step)
+
+        def do_save():
+            save_pytree(tree, self._step_dir(step), extra)
+            self._retain()
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=do_save, daemon=True)
+            self._thread.start()
+        else:
+            do_save()
+
+    def wait(self) -> None:
+        """Block until any in-flight async save finishes."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, like, step: Optional[int] = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self._step_dir(step)
+        return load_pytree(d, like), load_manifest(d)["extra"]
+
+    def _retain(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

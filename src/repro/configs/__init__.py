@@ -1,0 +1,12 @@
+"""Architecture configs: 10 assigned archs + the paper's own models.
+
+``get_config(name)`` loads ``CONFIG`` from the arch module; each module also
+exposes ``REDUCED`` (a tiny same-family config for CPU smoke tests) and
+``SKIP_CELLS`` ({cell_name: reason} for inapplicable input-shape cells).
+"""
+from repro.configs.base import (ModelConfig, MoESettings, MambaSettings,
+                                TrainConfig, ShapeCell, SHAPE_CELLS,
+                                get_config, list_archs)
+
+__all__ = ["ModelConfig", "MoESettings", "MambaSettings", "TrainConfig",
+           "ShapeCell", "SHAPE_CELLS", "get_config", "list_archs"]

@@ -1,0 +1,24 @@
+"""Core FP4 mixed-precision machinery (the paper's contribution).
+
+Public API:
+  formats          low-bit float grids + RTN/stochastic rounding
+  quantize         scaled QDQ with tensor/token/block/tile granularity
+  qlinear          custom_vjp quantized matmul / linear (STE)
+  recipe           per-module-class precision recipes (paper + ablations)
+  schedule         two-stage target-precision training schedule
+  cost_model       the paper's theoretical compute-cost accounting
+"""
+from repro.core.formats import (FORMATS, FP4_E2M1, FP8_E4M3, FP8_E5M2,
+                                FloatFormat, round_to_format)
+from repro.core.quantize import QuantSpec, qdq, underflow_rate
+from repro.core.qlinear import qlinear, qmatmul
+from repro.core.recipe import (RECIPES, MatmulRecipe, PrecisionRecipe,
+                               named_recipe)
+from repro.core.schedule import TargetPrecisionSchedule
+
+__all__ = [
+    "FORMATS", "FP4_E2M1", "FP8_E4M3", "FP8_E5M2", "FloatFormat",
+    "round_to_format", "QuantSpec", "qdq", "underflow_rate", "qlinear",
+    "qmatmul", "RECIPES", "MatmulRecipe", "PrecisionRecipe", "named_recipe",
+    "TargetPrecisionSchedule",
+]

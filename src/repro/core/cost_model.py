@@ -1,0 +1,133 @@
+"""The paper's theoretical compute-cost model (App. B / Tables 2-3).
+
+Counts matmul FLOPs of a transformer block per role (fwd / dgrad / wgrad) and
+weights them by the assumed low-precision speedups: FP8 = 2x FP16 throughput,
+FP4 = 4x.  The "computation cost" reported in Tables 2/3 is
+
+    cost(recipe) / cost(fp16-everything)   (matmul time only).
+
+Also reproduces Fig. 1(a): the share of block compute held by attention
+linears (QKV+O), the attention scores/context matmuls, and the FFN.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.quantize import QuantSpec
+from repro.core.recipe import MatmulRecipe, PrecisionRecipe
+
+__all__ = ["block_flops", "theoretical_cost", "compute_share", "speed_factor"]
+
+_SPEED = {"fp32": 0.5, "fp16": 1.0, "bf16": 1.0,
+          "fp8_e4m3": 2.0, "fp8_e5m2": 2.0,
+          "fp6_e2m3": 2.0, "fp6_e3m2": 2.0,
+          "fp4_e2m1": 4.0, "fp4_e1m2": 4.0}
+
+
+def speed_factor(spec_a: QuantSpec, spec_b: QuantSpec) -> float:
+    """Throughput multiplier of a matmul = min of its operand formats."""
+    return min(_SPEED[spec_a.fmt], _SPEED[spec_b.fmt])
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDims:
+    d_model: int
+    d_ff: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    seq_len: int
+    n_ff_matmuls: int = 2  # 2 for gelu MLP, 3 for swiglu
+    moe_top_k: int = 1     # active experts per token (1 for dense)
+
+
+def block_flops(d: BlockDims) -> Dict[str, float]:
+    """Forward matmul FLOPs per token for one transformer block, by component.
+
+    Returns {'attn_linear', 'attn_sdpa', 'ffn'} in FLOPs/token (x2 mults+adds).
+    """
+    dm, hd = d.d_model, d.head_dim
+    q_out = d.n_heads * hd
+    kv_out = 2 * d.n_kv_heads * hd
+    attn_linear = 2 * dm * (q_out + kv_out) + 2 * q_out * dm  # QKV + O
+    # scores QK^T + context AV, causal -> seq/2 effective
+    attn_sdpa = 2 * 2 * d.n_heads * hd * (d.seq_len / 2)
+    ffn = d.n_ff_matmuls * 2 * dm * d.d_ff
+    if d.n_ff_matmuls == 3:  # swiglu: gate+up (dm->dff) and down (dff->dm)
+        ffn = 2 * (2 * dm * d.d_ff) + 2 * d.d_ff * dm
+    ffn *= d.moe_top_k
+    return {"attn_linear": attn_linear, "attn_sdpa": attn_sdpa, "ffn": ffn}
+
+
+def compute_share(d: BlockDims) -> Dict[str, float]:
+    """Fig. 1(a): fractional share of block forward compute per component."""
+    f = block_flops(d)
+    tot = sum(f.values())
+    return {k: v / tot for k, v in f.items()}
+
+
+def _mm_time(flops: float, spec_a: QuantSpec, spec_b: QuantSpec) -> float:
+    return flops / speed_factor(spec_a, spec_b)
+
+
+def _linear_time(flops_fwd: float, mm: MatmulRecipe) -> float:
+    """fwd + dgrad + wgrad matmul time for a linear of given forward FLOPs."""
+    t = _mm_time(flops_fwd, mm.fwd_x, mm.fwd_w)
+    t += _mm_time(flops_fwd, mm.dgrad_g, mm.dgrad_w)
+    t += _mm_time(flops_fwd, mm.wgrad_x, mm.wgrad_g)
+    return t
+
+
+def theoretical_cost(recipe: PrecisionRecipe, d: BlockDims) -> float:
+    """Tables 2/3 "Computation cost": matmul time vs the FP16 baseline.
+
+    Attention SDPA always runs at FP16 speed (FlashAttention, §App. B), and
+    its backward costs ~2x its forward.
+    """
+    f = block_flops(d)
+    t = _linear_time(f["attn_linear"], recipe.attn_linear)
+    t += _linear_time(f["ffn"], recipe.ffn_linear)
+    t += 3.0 * f["attn_sdpa"]  # fwd + bwd at FP16 speed
+    baseline = 3.0 * (f["attn_linear"] + f["ffn"] + f["attn_sdpa"])
+    return t / baseline
+
+
+def schedule_adjusted_cost(recipe: PrecisionRecipe, d: BlockDims) -> float:
+    """Cost including the stage-2 high-precision tail (Table 3 rows)."""
+    frac = recipe.target_precision_frac
+    lo = theoretical_cost(recipe, d)
+    return (1.0 - frac) * lo + frac * 1.0
+
+
+# ---------------------------------------------------------------------------
+# Paper-calibrated variant.
+#
+# The paper's exact accounting is underdetermined (it reports only the final
+# percentages).  Fitting shares (attn-linear a, FFN f, FP16-fixed s) and a
+# bwd:fwd weight w to the four low-precision Table-2 rows gives
+#     a = 0.14, f = 0.43, s = 0.43, w = 1.0      (rmse 0.001)
+# — i.e. they hold ~43% of block-adjacent compute at FP16 (SDPA + LM head +
+# other non-quantized matmuls for a 125M model) and weight backward equal to
+# forward.  ``paper_calibrated_cost`` reproduces Table 2 to 3 decimal places;
+# ``theoretical_cost`` above is our from-first-principles version (identical
+# ordering, more aggressive savings because it counts dgrad+wgrad = 2x fwd
+# and only SDPA as fixed).
+# ---------------------------------------------------------------------------
+
+_CAL = {"a": 0.14, "f": 0.43, "w": 1.0}
+
+
+def paper_calibrated_cost(recipe: PrecisionRecipe) -> float:
+    a, f, w = _CAL["a"], _CAL["f"], _CAL["w"]
+    s = 1.0 - a - f
+    fwd, bwd = 1.0 / (1.0 + w), w / (1.0 + w)
+
+    def lin(mm: MatmulRecipe) -> float:
+        sf = speed_factor(mm.fwd_x, mm.fwd_w)
+        # backward speed: slowest of the two backward matmuls
+        sb = min(speed_factor(mm.dgrad_g, mm.dgrad_w),
+                 speed_factor(mm.wgrad_x, mm.wgrad_g))
+        return fwd / sf + bwd / sb
+
+    return a * lin(recipe.attn_linear) + f * lin(recipe.ffn_linear) + s

@@ -1,0 +1,184 @@
+"""Low-bit floating-point formats and round-to-nearest codecs.
+
+Implements the quantization grid of App. A of the paper (Eq. 2-7):
+a signed float format with ``e`` exponent bits and ``m`` mantissa bits has
+
+    Q_max = (2 - 2^-m) * 2^emax            (Eq. 2, emax = 2^e - b - 1)
+
+and values are rounded onto the per-binade grid with step ``2^(floor(log2|x|) - m)``
+(Eq. 5-7).  Subnormals (exponent below the minimum normal) round on the fixed
+grid ``2^(emin - m)``.
+
+Formats follow OCP / FP8-paper conventions the paper cites
+(Micikevicius et al. 2022; Liu et al. 2023):
+
+  * FP4  E2M1 : bias 1, max 6.0, min subnormal 0.5  -> {0, .5, 1, 1.5, 2, 3, 4, 6}
+  * FP8  E4M3 : bias 7, max 448 (S.1111.111 reserved for NaN -> max mantissa 1.75)
+  * FP8  E5M2 : bias 15, max 57344 (IEEE-consistent specials)
+  * FP6  E2M3 / E3M2 : OCP MX auxiliary formats (used in ablations)
+  * BF16/FP16/FP32 : passthrough (treated as "infinite" grid here; FP16 clips)
+
+Everything is pure jnp and differentiable-free (meant to be wrapped in STE by
+``core.qlinear``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FloatFormat",
+    "FP4_E2M1",
+    "FP4_E1M2",
+    "FP6_E2M3",
+    "FP6_E3M2",
+    "FP8_E4M3",
+    "FP8_E5M2",
+    "BF16",
+    "FP16",
+    "FP32",
+    "FORMATS",
+    "round_to_format",
+    "format_values",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """A signed low-bit float format (no inf; optionally reserved NaN encodings).
+
+    Attributes:
+      name: canonical name, e.g. ``fp4_e2m1``.
+      ebits / mbits: exponent and mantissa field widths.
+      max_value: largest finite magnitude (Q_max in Eq. 2; format-specific
+        because E4M3 reserves the top mantissa pattern).
+      emin: minimum *normal* exponent (unbiased). Subnormal step is
+        ``2^(emin - mbits)``.
+      bits: total storage bits (1 + ebits + mbits).
+      passthrough: if True the codec is an identity (bf16/fp32 handled by XLA).
+    """
+
+    name: str
+    ebits: int
+    mbits: int
+    max_value: float
+    emin: int
+    passthrough: bool = False
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.ebits + self.mbits
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (self.emin - self.mbits)
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0 ** self.emin
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.name
+
+
+def _mk(name, e, m, max_value, emin, passthrough=False):
+    return FloatFormat(name=name, ebits=e, mbits=m, max_value=max_value,
+                       emin=emin, passthrough=passthrough)
+
+
+# bias convention: bias = 2^(e-1) - 1 except E2M1/E1M2 which use bias=1 (OCP MX).
+FP4_E2M1 = _mk("fp4_e2m1", 2, 1, 6.0, 0)          # ±{0,.5,1,1.5,2,3,4,6}
+FP4_E1M2 = _mk("fp4_e1m2", 1, 2, 3.5, 0)          # ablation-only variant
+FP6_E2M3 = _mk("fp6_e2m3", 2, 3, 7.5, 0)          # OCP MX FP6
+FP6_E3M2 = _mk("fp6_e3m2", 3, 2, 28.0, -2)        # OCP MX FP6
+FP8_E4M3 = _mk("fp8_e4m3", 4, 3, 448.0, -6)       # OCP FP8 (no inf, 1 NaN)
+FP8_E5M2 = _mk("fp8_e5m2", 5, 2, 57344.0, -14)    # OCP FP8 (IEEE-like)
+BF16 = _mk("bf16", 8, 7, 3.38953139e38, -126, passthrough=True)
+FP16 = _mk("fp16", 5, 10, 65504.0, -14, passthrough=True)
+FP32 = _mk("fp32", 8, 23, 3.4028235e38, -126, passthrough=True)
+
+FORMATS = {
+    f.name: f
+    for f in (FP4_E2M1, FP4_E1M2, FP6_E2M3, FP6_E3M2, FP8_E4M3, FP8_E5M2,
+              BF16, FP16, FP32)
+}
+
+
+def format_values(fmt: FloatFormat) -> jnp.ndarray:
+    """Enumerate every non-negative representable value of a low-bit format.
+
+    Used by tests to verify that ``round_to_format`` lands exactly on the grid.
+    Only sensible for formats with <= 8 bits.
+    """
+    assert not fmt.passthrough and fmt.bits <= 8
+    vals = [0.0]
+    # subnormals
+    step = fmt.min_subnormal
+    for i in range(1, 2 ** fmt.mbits):
+        vals.append(i * step)
+    # normals
+    e = fmt.emin
+    while True:
+        base = 2.0 ** e
+        for i in range(2 ** fmt.mbits):
+            v = base * (1.0 + i / (2 ** fmt.mbits))
+            if v > fmt.max_value:
+                return jnp.asarray(sorted(set(vals)), dtype=jnp.float32)
+            vals.append(v)
+        e += 1
+
+
+def round_to_format(
+    x: jnp.ndarray,
+    fmt: FloatFormat,
+    *,
+    stochastic_key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Round ``x`` elementwise onto ``fmt``'s grid (Eq. 5-7), with clipping.
+
+    The input is assumed to already be scaled (see ``core.quantize``); values
+    beyond ``fmt.max_value`` saturate (the paper's Clip, Eq. 4).
+
+    If ``stochastic_key`` is given, uses unbiased stochastic rounding instead
+    of round-to-nearest-even.  (Beyond-paper option — the paper uses RTN.)
+    """
+    if fmt.passthrough:
+        if fmt is FP16:
+            return jnp.clip(x, -fmt.max_value, fmt.max_value)
+        return x
+
+    # Math follows the input dtype (bf16 in, bf16 through) — intermediate
+    # buffers stay half-size and fuse on TPU; grids/steps are exact powers of
+    # two so bf16 arithmetic only perturbs near-tie roundings.  f32 inputs
+    # get exact f32 rounding (used by tests/oracles).
+    orig_dtype = x.dtype
+    xf = x if jnp.issubdtype(x.dtype, jnp.floating) else x.astype(jnp.float32)
+    sign = jnp.sign(xf)
+    mag = jnp.abs(xf)
+    mag = jnp.minimum(mag, jnp.asarray(fmt.max_value, xf.dtype))
+
+    # Exponent of the containing binade, floored at the min normal exponent so
+    # that subnormals share the fixed grid 2^(emin - m).
+    safe = jnp.maximum(mag, jnp.asarray(fmt.min_subnormal * 0.25, xf.dtype))
+    e = jnp.floor(jnp.log2(safe))
+    e = jnp.maximum(e, jnp.asarray(fmt.emin, xf.dtype))
+    # ldexp, not exp2: XLA:CPU's exp2 is off by >1 ulp even at integer
+    # arguments, which would knock subnormals off the exact grid.
+    step = jnp.ldexp(jnp.asarray(1.0, xf.dtype),
+                     (e - fmt.mbits).astype(jnp.int32))
+
+    t = mag / step
+    if stochastic_key is not None:
+        noise = jax.random.uniform(stochastic_key, shape=x.shape,
+                                   dtype=xf.dtype)
+        q = jnp.floor(t + noise)
+    else:
+        q = jnp.round(t)  # round-half-to-even, IEEE default
+    out = sign * q * step
+    # Rounding up at a binade edge (e.g. 5.9 -> 6) stays on-grid; rounding the
+    # max binade up can exceed max_value -> saturate again.
+    out = jnp.clip(out, -fmt.max_value, fmt.max_value)
+    return out.astype(orig_dtype)

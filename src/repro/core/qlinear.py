@@ -1,0 +1,113 @@
+"""Quantized linear primitive with per-role precision (the paper's §3 core).
+
+``qmatmul(x2d, w, key, recipe)`` computes a matmul whose forward and two
+backward matmuls each quantize their operands according to an independent
+``QuantSpec`` (see ``core.recipe``).  Gradients flow by straight-through
+estimation (App. B: the gradient of the quantized weight is passed to the
+master weight unchanged).
+
+The public entry point ``qlinear`` folds arbitrary leading batch dims.
+Stochastic rounding (beyond-paper option) consumes the ``key`` argument; RTN
+recipes ignore it, and passthrough (bf16) recipes lower to a single dot —
+important for clean roofline baselines.
+
+Notes on backward quantization orientation: each backward matmul is treated
+as a first-class matmul with its own reduction axis, and operand scales are
+grouped relative to *that* matmul (per-token = per non-reduction vector;
+per-block = (1 x 128) along the reduction axis; per-tile = 128x128).  These
+are exactly the groupings an FP4/FP8 tensor-core epilogue can rescale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantSpec, qdq
+from repro.core.recipe import MatmulRecipe
+
+__all__ = ["qmatmul", "qlinear", "dot_qdq"]
+
+
+def _maybe_key(key_data: Optional[jnp.ndarray], spec: QuantSpec,
+               salt: int) -> Optional[jax.Array]:
+    if key_data is None or not spec.stochastic:
+        return None
+    key = jax.random.wrap_key_data(key_data.astype(jnp.uint32))
+    return jax.random.fold_in(key, salt)
+
+
+def dot_qdq(a: jnp.ndarray, b: jnp.ndarray,
+            spec_a: QuantSpec, spec_b: QuantSpec,
+            *, key_data: Optional[jnp.ndarray] = None,
+            salt: int = 0, precision=None) -> jnp.ndarray:
+    """QDQ both operands of ``a @ b`` then run the dot in the input dtype.
+
+    ``a``: (M, K), ``b``: (K, N).  Reduction axes: 1 for a, 0 for b.
+    """
+    aq = qdq(a, spec_a, reduction_axis=1,
+             stochastic_key=_maybe_key(key_data, spec_a, salt))
+    bq = qdq(b, spec_b, reduction_axis=0,
+             stochastic_key=_maybe_key(key_data, spec_b, salt + 1))
+    return jax.lax.dot(aq, bq, precision=precision)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray, key_data: jnp.ndarray,
+            recipe: MatmulRecipe) -> jnp.ndarray:
+    """y = Q(x) @ Q(w) with recipe-defined backward quantization.
+
+    x: (M, K) activations, w: (K, N) weights, key_data: uint32[2] raw PRNG
+    key material (only consumed by stochastic QuantSpecs), y: (M, N).
+    """
+    return dot_qdq(x, w, recipe.fwd_x, recipe.fwd_w, key_data=key_data,
+                   salt=0)
+
+
+def _qmatmul_fwd(x, w, key_data, recipe):
+    y = qmatmul(x, w, key_data, recipe)
+    return y, (x, w, key_data)
+
+
+def _qmatmul_bwd(recipe, res, g):
+    x, w, key_data = res
+    # dgrad: dx = Q(g) @ Q(w^T); reduction over N.
+    dx = dot_qdq(g, w.T, recipe.dgrad_g, recipe.dgrad_w, key_data=key_data,
+                 salt=2)
+    # wgrad: dw = Q(x^T) @ Q(g); reduction over M (tokens).
+    dw = dot_qdq(x.T, g, recipe.wgrad_x, recipe.wgrad_g, key_data=key_data,
+                 salt=4)
+    return (dx.astype(x.dtype), dw.astype(w.dtype),
+            jnp.zeros_like(key_data))
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+def _zero_key() -> jnp.ndarray:
+    # NOTE: must be constructed fresh per trace (a cached global would leak
+    # tracers out of scan/remat scopes); XLA constant-folds it anyway.
+    return jnp.zeros((2,), jnp.uint32)
+
+
+def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
+            *, bias: Optional[jnp.ndarray] = None,
+            key_data: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Linear layer over the last axis of ``x`` with per-role quantization.
+
+    ``x``: (..., K), ``w``: (K, N) -> (..., N).
+    """
+    lead: Tuple[int, ...] = x.shape[:-1]
+    k = x.shape[-1]
+    if recipe.is_passthrough:
+        y = x.reshape(-1, k) @ w
+    else:
+        if key_data is None:
+            key_data = _zero_key()
+        y = qmatmul(x.reshape(-1, k), w, key_data, recipe)
+    y = y.reshape(*lead, w.shape[-1])
+    if bias is not None:
+        y = y + bias
+    return y

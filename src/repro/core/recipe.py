@@ -1,0 +1,189 @@
+"""Precision recipes: which format/granularity each matmul role uses.
+
+A transformer linear layer ``y = x @ w`` spawns three matmuls per step:
+
+    fwd   :  y  = x    @ w        (M,K)x(K,N)
+    dgrad :  dx = g    @ w^T      (M,N)x(N,K)   -- activation gradient
+    wgrad :  dw = x^T  @ g        (K,M)x(M,N)   -- weight gradient
+
+The paper's recipe assigns an independent precision to each role *and* each
+operand, per module class:
+
+  * attention-class linears (QKV, attn-out, cross-attn) -> FP8 everywhere
+    (§3.1 "Attention-protected"); grads in E5M2, non-grads in E4M3.
+  * FFN-class linears -> FP4(E2M1) forward with per-block scaling, FP8 wgrad
+    (§3.2 "Gradient-sensitive"), dgrad unquantized BF16 (§3.2: quantizing the
+    activation-gradient path breaks convergence).
+  * router / lm-head / embeddings / norms -> full precision.
+
+``PrecisionRecipe`` captures this; ``named_recipe()`` provides the paper's
+configurations plus the Table-2 ablation grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.quantize import QuantSpec
+
+__all__ = ["MatmulRecipe", "PrecisionRecipe", "named_recipe", "RECIPES",
+           "MM_BF16", "MM_FP8", "MM_FP4_ALL", "MM_FFN_PAPER"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulRecipe:
+    """Per-role quantization of one linear layer (six operand slots)."""
+
+    fwd_x: QuantSpec = QuantSpec()
+    fwd_w: QuantSpec = QuantSpec()
+    dgrad_g: QuantSpec = QuantSpec()
+    dgrad_w: QuantSpec = QuantSpec()
+    wgrad_x: QuantSpec = QuantSpec()
+    wgrad_g: QuantSpec = QuantSpec()
+
+    def short(self) -> str:
+        return (f"fwd[{self.fwd_x.short()}x{self.fwd_w.short()}] "
+                f"dgrad[{self.dgrad_g.short()}x{self.dgrad_w.short()}] "
+                f"wgrad[{self.wgrad_x.short()}x{self.wgrad_g.short()}]")
+
+    @property
+    def is_passthrough(self) -> bool:
+        return all(s.is_passthrough for s in (
+            self.fwd_x, self.fwd_w, self.dgrad_g, self.dgrad_w,
+            self.wgrad_x, self.wgrad_g))
+
+
+def _mm(fwd: str, bwd_w: str, bwd_d: Optional[str], *,
+        fwd_gran: str = "token", wgrad_gran: str = "token",
+        block: int = 128) -> MatmulRecipe:
+    """Helper: build a MatmulRecipe from format names.
+
+    ``fwd``/``bwd_w``(wgrad)/``bwd_d``(dgrad) are 'fp4', 'fp8', 'bf16'.
+    Gradients use E5M2; weights/activations use E4M3 (FP8 convention).
+    ``None`` for ``bwd_d`` means keep dgrad unquantized.
+    """
+
+    def act(fmtname, gran):
+        if fmtname == "bf16":
+            return QuantSpec("bf16")
+        if fmtname == "fp8":
+            return QuantSpec("fp8_e4m3", gran, block)
+        if fmtname == "fp4":
+            return QuantSpec("fp4_e2m1", gran, block)
+        raise ValueError(fmtname)
+
+    def grad(fmtname, gran):
+        if fmtname == "bf16":
+            return QuantSpec("bf16")
+        if fmtname == "fp8":
+            return QuantSpec("fp8_e5m2", gran, block)
+        if fmtname == "fp4":
+            return QuantSpec("fp4_e2m1", gran, block)
+        raise ValueError(fmtname)
+
+    # weight-side granularity: 'tile' where activations use 'block',
+    # 'token' (== per-channel for weights) otherwise.
+    wgran = "tile" if fwd_gran == "block" else "token"
+    bwd_d = bwd_d or "bf16"
+    return MatmulRecipe(
+        fwd_x=act(fwd, fwd_gran),
+        fwd_w=act(fwd, wgran),
+        dgrad_g=grad(bwd_d, "token"),
+        dgrad_w=act(bwd_d, "token"),
+        wgrad_x=act(bwd_w, wgrad_gran),
+        wgrad_g=grad(bwd_w, wgrad_gran),
+    )
+
+
+MM_BF16 = MatmulRecipe()
+MM_FP8 = _mm("fp8", "fp8", "fp8")
+MM_FP4_ALL = _mm("fp4", "fp4", "fp4", fwd_gran="block", wgrad_gran="block")
+# The paper's final FFN recipe (§3.2 / GPT-774M in App. B): per-block FP4
+# forward, FP8 per-block weight gradients, unquantized activation gradients.
+MM_FFN_PAPER = _mm("fp4", "fp8", None, fwd_gran="block", wgrad_gran="block")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionRecipe:
+    """Module-class -> MatmulRecipe mapping for a whole model."""
+
+    name: str
+    attn_linear: MatmulRecipe = MM_BF16   # QKV / out-proj / cross-attn
+    ffn_linear: MatmulRecipe = MM_BF16    # MLP & MoE expert matmuls, ssm proj
+    head_linear: MatmulRecipe = MM_BF16   # lm head (kept high-precision)
+    # Target-precision schedule (§3.3): fraction of final steps retrained at
+    # the target (high) precision. 0.0 disables stage 2.
+    target_precision_frac: float = 0.0
+
+    def for_class(self, cls: str) -> MatmulRecipe:
+        return {"attn": self.attn_linear, "ffn": self.ffn_linear,
+                "head": self.head_linear}[cls]
+
+    @property
+    def is_passthrough(self) -> bool:
+        return (self.attn_linear.is_passthrough
+                and self.ffn_linear.is_passthrough
+                and self.head_linear.is_passthrough)
+
+
+def named_recipe(name: str) -> PrecisionRecipe:
+    """Paper recipes + Table-2 ablation grid.
+
+    ``paper_fp4``      : §3 final recipe — attn FP8, FFN fwd FP4/per-block,
+                         FFN wgrad FP8, FFN dgrad BF16, + 2-stage schedule.
+    ``bf16``           : high-precision baseline (Table 1 'FP16-baseline').
+    ``fp8``            : FP8-everywhere (Fishman et al.-style reference).
+    ``all_fp4``        : Table 2 row 1 (FP4/FP4/FP4) — the failure mode.
+    ``t2_*``           : remaining Table 2 rows.
+    ``fine_grained_fp4``: beyond-paper — all-FP4 with per-block scaling AND
+                         stochastic rounding on gradients.
+    """
+    if name in RECIPES:
+        return RECIPES[name]
+    raise KeyError(f"unknown recipe {name!r}; have {sorted(RECIPES)}")
+
+
+RECIPES = {
+    "bf16": PrecisionRecipe("bf16"),
+    "fp8": PrecisionRecipe("fp8", attn_linear=MM_FP8, ffn_linear=MM_FP8),
+    "paper_fp4": PrecisionRecipe(
+        "paper_fp4", attn_linear=MM_FP8, ffn_linear=MM_FFN_PAPER,
+        target_precision_frac=0.075),
+    "paper_fp4_nosched": PrecisionRecipe(
+        "paper_fp4_nosched", attn_linear=MM_FP8, ffn_linear=MM_FFN_PAPER),
+    # --- Table 2 ablation grid (attn / ffn / fp4-linear-backward) ---
+    "all_fp4": PrecisionRecipe(  # FP4 | FP4 | FP4
+        "all_fp4", attn_linear=MM_FP4_ALL, ffn_linear=MM_FP4_ALL),
+    "t2_fp4_fp8_fp8": PrecisionRecipe(  # FP4 attn | FP8 ffn | FP8 bwd
+        "t2_fp4_fp8_fp8",
+        attn_linear=_mm("fp4", "fp8", "fp8", fwd_gran="block"),
+        ffn_linear=MM_FP8),
+    "t2_fp8_fp4_fp4": PrecisionRecipe(  # FP8 attn | FP4 ffn | FP4 bwd
+        "t2_fp8_fp4_fp4", attn_linear=MM_FP8, ffn_linear=MM_FP4_ALL),
+    "t2_fp8_fp4_fp8": PrecisionRecipe(  # FP8 attn | FP4 ffn | FP8 bwd
+        "t2_fp8_fp4_fp8", attn_linear=MM_FP8,
+        ffn_linear=_mm("fp4", "fp8", "fp8", fwd_gran="block")),
+    # --- App. B model-size-dependent variants ---
+    "gpt125m_fp4": PrecisionRecipe(  # per-token/channel FP4 fwd+wgrad
+        "gpt125m_fp4", attn_linear=MM_FP8,
+        ffn_linear=_mm("fp4", "fp4", None, fwd_gran="token",
+                       wgrad_gran="token"),
+        target_precision_frac=0.075),
+    "gpt335m_fp4": PrecisionRecipe(  # per-block wgrad
+        "gpt335m_fp4", attn_linear=MM_FP8,
+        ffn_linear=_mm("fp4", "fp4", None, fwd_gran="token",
+                       wgrad_gran="block"),
+        target_precision_frac=0.075),
+    "all_fp4_sched": PrecisionRecipe(  # schedule demo on the worst recipe
+        "all_fp4_sched", attn_linear=MM_FP4_ALL, ffn_linear=MM_FP4_ALL,
+        target_precision_frac=0.1),
+    # --- beyond-paper ---
+    "fine_grained_fp4": PrecisionRecipe(
+        "fine_grained_fp4",
+        attn_linear=MM_FP8,
+        ffn_linear=dataclasses.replace(
+            MM_FP4_ALL,
+            wgrad_g=QuantSpec("fp4_e2m1", "block", stochastic=True),
+            dgrad_g=QuantSpec("fp8_e5m2", "token")),
+        target_precision_frac=0.075),
+}

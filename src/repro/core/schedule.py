@@ -1,0 +1,43 @@
+"""Target-precision training schedule (§3.3).
+
+Two stages: (1) low-precision pretraining for the first ``1 - frac`` of
+steps, (2) a short high-precision ("target precision") continuation for the
+final ``frac`` (paper: 5-10%) that lets the model shed quantization-noise
+adaptations.  The trainer keeps two jitted train_steps (one per recipe) and
+switches at the boundary — switching is a Python-level decision so each graph
+stays static.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import recipe as recipe_lib
+
+__all__ = ["TargetPrecisionSchedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetPrecisionSchedule:
+    recipe: recipe_lib.PrecisionRecipe
+    total_steps: int
+
+    @property
+    def switch_step(self) -> int:
+        frac = self.recipe.target_precision_frac
+        if frac <= 0.0:
+            return self.total_steps  # never switch
+        return int(round(self.total_steps * (1.0 - frac)))
+
+    def recipe_at(self, step: int) -> recipe_lib.PrecisionRecipe:
+        """Active recipe for ``step`` (0-indexed)."""
+        if step >= self.switch_step:
+            return self.target_recipe
+        return self.recipe
+
+    @property
+    def target_recipe(self) -> recipe_lib.PrecisionRecipe:
+        """Stage-2 recipe: same model, full-precision matmuls."""
+        return recipe_lib.RECIPES["bf16"]
+
+    def is_switch_boundary(self, step: int) -> bool:
+        return step == self.switch_step

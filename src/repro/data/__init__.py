@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic, stateless (index-addressed), shardable."""
+from repro.data.pipeline import SyntheticLM, ByteCorpus, make_pipeline
+
+__all__ = ["SyntheticLM", "ByteCorpus", "make_pipeline"]

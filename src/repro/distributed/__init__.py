@@ -1,0 +1,7 @@
+"""Distribution: mesh construction, logical->physical sharding, elasticity."""
+from repro.distributed.sharding import (ShardingRules, default_rules,
+                                        opt_state_shardings)
+from repro.distributed.mesh import make_mesh
+
+__all__ = ["ShardingRules", "default_rules", "opt_state_shardings",
+           "make_mesh"]

@@ -1,0 +1,39 @@
+"""Elastic scaling: re-map a checkpoint onto a different mesh.
+
+When nodes are lost (or added) mid-run, the job restarts with a different
+device count.  Because checkpoints store full (unsharded) arrays and the
+sharding rules are pure functions of (mesh, config), elastic resume is just:
+
+    params = load_pytree(ckpt, like)
+    rules  = default_rules(new_mesh, cfg)
+    params = reshard(params, rules.param_shardings(model.param_specs()))
+
+``reshard`` also handles live arrays (device_put re-distributes across the
+new mesh).  Divisibility-aware rules guarantee a valid layout exists for
+any mesh the job restarts on (worst case: replication).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+__all__ = ["reshard", "choose_mesh_shape"]
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """Re-distribute every array onto the given shardings."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def choose_mesh_shape(n_devices: int, *, prefer_model: int = 16):
+    """Pick a (data, model) shape for an arbitrary surviving device count.
+
+    Keeps TP at ``prefer_model`` when divisible, else the largest power-of-2
+    divisor <= prefer_model — deterministic across hosts, so every worker
+    derives the same mesh without coordination.
+    """
+    model = prefer_model
+    while model > 1 and n_devices % model:
+        model //= 2
+    return (n_devices // model, model)

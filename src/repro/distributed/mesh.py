@@ -1,0 +1,20 @@
+"""Mesh helpers (device-count agnostic; see launch.mesh for production)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["make_mesh"]
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...],
+              devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """Build a mesh over the first prod(shape) devices."""
+    n = int(np.prod(shape))
+    devices = list(devices if devices is not None else jax.devices())[:n]
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    arr = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)

@@ -1,0 +1,233 @@
+"""Logical->physical sharding rules (MaxText-style, divisibility-aware).
+
+Every ParamSpec carries logical axis names; activations use ``shard_hint``
+with logical names.  ``ShardingRules`` maps those names onto mesh axes with
+two safety properties needed across 10 heterogeneous architectures:
+
+  * divisibility-aware: an assignment is dropped (replicated) when the dim
+    is not divisible by the mesh-axis size — e.g. whisper's vocab 51865 on
+    model=16, or GQA kv_heads=8 on model=16 (Megatron-style KV duplication);
+  * granule-aware: flattened head dims (n_heads*head_dim) are only sharded
+    when the *head count* divides the axis, so heads never split across
+    devices (``granules``).
+  * conflict-free: a mesh axis is used at most once per PartitionSpec
+    (first dim wins; later dims fall back to replication).
+
+Default mapping (the paper-faithful Megatron-esque layout):
+  params:  embed->fsdp axes, heads/kv_heads/mlp/vocab/experts/mamba_*->model
+  acts:    batch->(pod,data), heads/mlp/vocab/experts->model, seq->None
+           (seq->model when sequence parallelism is enabled)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.params import ParamSpec
+
+__all__ = ["ShardingRules", "default_rules", "opt_state_shardings"]
+
+AxisAssignment = Optional[Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    param_rules: Dict[str, AxisAssignment]
+    act_rules: Dict[str, AxisAssignment]
+    granules: Dict[str, int]
+
+    # -- core assignment ----------------------------------------------------
+
+    def _axis_size(self, names: Tuple[str, ...]) -> int:
+        return int(np.prod([self.mesh.shape[n] for n in names]))
+
+    def _assign(self, rules: Dict[str, AxisAssignment],
+                logical: Optional[str], dim: int,
+                used: set) -> AxisAssignment:
+        if logical is None:
+            return None
+        want = rules.get(logical)
+        if want is None:
+            return None
+        want = (want,) if isinstance(want, str) else tuple(want)
+        granule = self.granules.get(logical, dim)
+        # try the full tuple, then prefixes (e.g. ('pod','data')->('pod',))
+        for k in range(len(want), 0, -1):
+            cand = want[:k]
+            if any(a in used for a in cand):
+                continue
+            size = self._axis_size(cand)
+            if dim % size == 0 and granule % size == 0:
+                used.update(cand)
+                return cand
+        return None
+
+    def _spec(self, rules, logicals: Sequence[Optional[str]],
+              shape: Sequence[int]) -> P:
+        used: set = set()
+        parts = [self._assign(rules, l, d, used)
+                 for l, d in zip(logicals, shape)]
+        parts = [p if p is None else (p[0] if len(p) == 1 else p)
+                 for p in parts]
+        return P(*parts)
+
+    # -- public -------------------------------------------------------------
+
+    def param_sharding(self, spec: ParamSpec) -> NamedSharding:
+        return NamedSharding(
+            self.mesh, self._spec(self.param_rules, spec.axes, spec.shape))
+
+    def param_shardings(self, spec_tree) -> Any:
+        return jax.tree.map(self.param_sharding, spec_tree,
+                            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def activation_sharding(self, axes: Sequence[Optional[str]],
+                            shape: Sequence[int]) -> Optional[NamedSharding]:
+        spec = self._spec(self.act_rules, axes, shape)
+        return NamedSharding(self.mesh, spec)
+
+    def batch_sharding(self, ndim: int) -> NamedSharding:
+        """Standard input-batch sharding: dim0 over the data axes."""
+        spec = self._spec(self.act_rules, ["batch"] + [None] * (ndim - 1),
+                          [0] * ndim)  # dim sizes unused for 'batch'
+        return NamedSharding(self.mesh, spec)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # -- caches ---------------------------------------------------------------
+
+    def cache_shardings(self, cache_spec_tree) -> Any:
+        """Shardings for a serve cache pytree (path-dispatch by leaf name)."""
+
+        def by_path(path, leaf):
+            keys = [str(getattr(p, "key", "")) for p in path]
+            scan_stacked = "groups" in keys
+            name = keys[-1] if keys else ""
+            ndim = len(leaf.shape)
+            lead = ["layers"] if scan_stacked else []
+            if name in ("k", "v"):       # (B, S, KVH, HD)
+                ax = lead + ["batch", None, "kv_heads", None]
+            elif name == "pos":
+                ax = lead + [None]
+            elif name == "conv":         # (B, K-1, conv_dim)
+                ax = lead + ["batch", None, "mamba_inner"]
+            elif name == "state":        # (B, H, P, N)
+                ax = lead + ["batch", "mamba_heads", None, None]
+            elif name == "length":
+                ax = [None] * ndim
+            else:
+                ax = lead + ["batch"] + [None] * (ndim - len(lead) - 1)
+            ax = (ax + [None] * ndim)[:ndim]
+            return self.activation_sharding(ax, leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(by_path, cache_spec_tree)
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def default_rules(mesh: Mesh, cfg=None, *, fsdp: bool = True,
+                  seq_parallel: bool = False,
+                  free_head_shard: bool = False,
+                  overrides: Optional[Dict[str, AxisAssignment]] = None,
+                  act_overrides: Optional[Dict[str, AxisAssignment]] = None
+                  ) -> ShardingRules:
+    """The default FSDP+TP(+EP) layout for a model config."""
+    dp = _dp_axes(mesh)
+    tp = ("model",) if "model" in mesh.axis_names else ()
+    param_rules: Dict[str, AxisAssignment] = {
+        "embed": dp if fsdp else None,
+        "mlp": tp or None,
+        "heads": tp or None,
+        "kv_heads": tp or None,
+        "vocab": tp or None,
+        "experts": tp or None,
+        "mamba_inner": tp or None,
+        "mamba_groups": tp or None,
+        "mamba_heads": tp or None,
+        "layers": None,
+    }
+    act_rules: Dict[str, AxisAssignment] = {
+        "batch": dp or None,
+        "seq": tp if seq_parallel else None,
+        "seq_q": None,  # context-parallel attention (hillclimb override)
+        "embed": None,
+        "mlp": tp or None,
+        "heads": tp or None,
+        "kv_heads": tp or None,
+        "vocab": tp or None,
+        "experts": tp or None,
+        "mamba_heads": tp or None,
+        "mamba_inner": tp or None,
+        "mamba_groups": tp or None,
+    }
+    granules: Dict[str, int] = {}
+    if cfg is not None:
+        hd = cfg.resolved_head_dim
+        if not free_head_shard:
+            granules["heads"] = max(cfg.n_heads, 1)
+            granules["kv_heads"] = max(cfg.n_kv_heads, 1)
+        # free_head_shard: pair with context-parallel attention
+        # (seq_q->model) — the SDPA no longer needs whole heads per device,
+        # so QKV/O weight dims shard as plain matrices (granule defaults to
+        # the dim); activation head dims (= head COUNTS, e.g. 24) still
+        # fail plain divisibility and replicate, re-gathering qkv before
+        # the seq-sharded attention math.
+        if cfg.moe is not None:
+            granules["experts"] = cfg.moe.num_experts
+        if cfg.mamba is not None:
+            d_inner = cfg.mamba.expand * cfg.d_model
+            granules["mamba_heads"] = d_inner // cfg.mamba.headdim
+            # split projections: x/z shard on head boundaries; B/C on group
+            # boundaries (replicate when n_groups < TP — they are narrow).
+            granules["mamba_inner"] = d_inner // cfg.mamba.headdim
+            granules["mamba_groups"] = cfg.mamba.n_groups
+    param_rules.update(overrides or {})
+    act_rules.update(act_overrides or {})
+    return ShardingRules(mesh=mesh, param_rules=param_rules,
+                         act_rules=act_rules, granules=granules)
+
+
+def opt_state_shardings(opt_state, params_abstract, param_shardings,
+                        mesh: Mesh):
+    """Shardings for AdamW/Adafactor states, derived from param shardings.
+
+    mu/nu mirror params; adafactor row/col factors drop the corresponding
+    trailing spec entries; scalars replicate.
+    """
+    from repro.optim.adamw import AdamWState
+    from repro.optim.adafactor import AdafactorState
+
+    rep = NamedSharding(mesh, P())
+
+    if isinstance(opt_state, AdamWState):
+        return AdamWState(count=rep, mu=param_shardings, nu=param_shardings)
+    if isinstance(opt_state, AdafactorState):
+        def padded(sh: NamedSharding, nd: int):
+            return (tuple(sh.spec) + (None,) * nd)[:nd]
+
+        def vr_sh(sh, p):
+            nd = len(p.shape)
+            spec = padded(sh, nd)
+            if nd >= 2:
+                return NamedSharding(mesh, P(*spec[:-1]))
+            return NamedSharding(mesh, P(*spec))
+
+        def vc_sh(sh, p):
+            nd = len(p.shape)
+            if nd < 2:
+                return rep
+            spec = padded(sh, nd)
+            return NamedSharding(mesh, P(*(spec[:-2] + (spec[-1],))))
+
+        vr = jax.tree.map(vr_sh, param_shardings, params_abstract)
+        vc = jax.tree.map(vc_sh, param_shardings, params_abstract)
+        return AdafactorState(count=rep, vr=vr, vc=vc)
+    raise TypeError(type(opt_state))

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  fp4_matmul        fused per-block QDQ + tiled MXU matmul (the §3.2 FFN)
+  quantize          standalone per-tile quantizer
+  flash_attention   causal online-softmax attention fwd (§3.1 protection)
+
+Each kernel ships with ops.py (jit'd wrapper + interpret fallback on CPU)
+and ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""
+from repro.kernels.ops import flash_attention, fp4_matmul, quantize_blockwise
+
+__all__ = ["flash_attention", "fp4_matmul", "quantize_blockwise"]

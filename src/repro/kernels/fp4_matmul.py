@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused per-block FP4/FP8 quantize + tiled MXU matmul.
+
+The paper's §3.2 hotspot: an FFN linear whose activations are quantized
+per-(1 x 128) along the reduction dim and whose weights are quantized
+per-(128 x 128) tiles, with the dot running on the low-precision unit.  On
+TPU the natural mapping is:
+
+  * grid (M/bm, N/bn, K/bk) with K innermost (revisiting the same output
+    block accumulates in a VMEM f32 scratch — no HBM roundtrips);
+  * every tile 128-aligned so dequantized operands feed the 128x128 MXU
+    directly; the per-tile scales are rank-1 rescales computed IN-KERNEL
+    from the VMEM-resident tile (fused: quantize + dequantize + matmul in
+    one pass, the HBM traffic is exactly one read of x and w per K-step);
+  * FP4 arithmetic itself is simulated (QDQ then bf16/f32 dot) as in the
+    paper; on FP4-capable hardware only the dot changes.
+
+``block`` here equals the quantization block size AND the tile size (128).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import FORMATS
+
+__all__ = ["fp4_matmul", "quantize_tile"]
+
+_EPS = 1e-12
+
+
+def _round_tile(t: jnp.ndarray, fmt) -> jnp.ndarray:
+    """RTN onto the fmt grid (kernel-side copy of formats.round_to_format,
+    written with primitive jnp ops only so it lowers inside Pallas)."""
+    sign = jnp.sign(t)
+    mag = jnp.minimum(jnp.abs(t), fmt.max_value)
+    safe = jnp.maximum(mag, fmt.min_subnormal * 0.25)
+    e = jnp.maximum(jnp.floor(jnp.log2(safe)), float(fmt.emin))
+    step = jnp.ldexp(jnp.ones_like(t), (e - fmt.mbits).astype(jnp.int32))
+    q = jnp.round(mag / step)
+    return jnp.clip(sign * q * step, -fmt.max_value, fmt.max_value)
+
+
+def quantize_tile(tile: jnp.ndarray, fmt, *, per_row: bool) -> jnp.ndarray:
+    """QDQ a VMEM tile: per-row (1 x bk) scales or whole-tile scale."""
+    mag = jnp.abs(tile)
+    amax = (jnp.max(mag, axis=-1, keepdims=True) if per_row
+            else jnp.max(mag))
+    scale = jnp.maximum(amax, _EPS) / fmt.max_value
+    return _round_tile(tile / scale, fmt) * scale
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, x_fmt, w_fmt, n_k):
+    """One (bm, bn) output tile step at K-step pl.program_id(2)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xq = quantize_tile(x_ref[...].astype(jnp.float32), x_fmt, per_row=True)
+    wq = quantize_tile(w_ref[...].astype(jnp.float32), w_fmt, per_row=False)
+    acc_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("x_fmt", "w_fmt", "block",
+                                             "interpret"))
+def fp4_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
+               x_fmt: str = "fp4_e2m1", w_fmt: str = "fp4_e2m1",
+               block: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """y = Q_blk(x) @ Q_tile(w), fused in VMEM.
+
+    x: (M, K), w: (K, N); M, K, N must be multiples of ``block``
+    (the ops.py wrapper pads).  Returns x.dtype.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and m % block == 0 and k % block == 0 and n % block == 0
+    n_k = k // block
+    fx, fw = FORMATS[x_fmt], FORMATS[w_fmt]
+    kernel = functools.partial(_mm_kernel, x_fmt=fx, w_fmt=fw, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block, n // block, n_k),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block, block), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,109 @@
+"""jit'd public wrappers for the Pallas kernels: padding, GQA handling,
+custom_vjp glue, and interpret-mode fallback for CPU.
+
+On CPU (this container) every entry point runs with ``interpret=True`` —
+the kernel body executes in Python, validating the exact TPU code path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fp4_matmul as _mm
+from repro.kernels import quantize as _q
+from repro.kernels import flash_attention as _fa
+from repro.models.attention import chunked_attention
+
+__all__ = ["fp4_matmul", "quantize_blockwise", "flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad2d(x, block):
+    m, n = x.shape
+    pm, pn = (-m) % block, (-n) % block
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, m, n
+
+
+def fp4_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
+               x_fmt: str = "fp4_e2m1", w_fmt: str = "fp4_e2m1",
+               block: int = 128,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused block-quantized matmul; pads to tile multiples.
+
+    NOTE on padding semantics: zero-padding K changes nothing (zeros add
+    nothing and per-row amax over the padded segment is unchanged for the
+    rows that exist); padding M/N rows/cols are sliced away.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    xp, m, k = _pad2d(x, block)
+    wp, _, n = _pad2d(w, block)
+    y = _mm.fp4_matmul(xp, wp, x_fmt=x_fmt, w_fmt=w_fmt, block=block,
+                       interpret=interpret)
+    return y[:m, :n]
+
+
+def quantize_blockwise(x: jnp.ndarray, fmt_name: str = "fp4_e2m1",
+                       block: int = 128, *, per_row: bool = False,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    xp, m, n = _pad2d(x, block)
+    y = _q.quantize_blockwise(xp, fmt_name, block, per_row=per_row,
+                              interpret=interpret)
+    return y[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, chunk, interpret):
+    """(B, S, H, D) attention; Pallas fwd, chunked-jnp bwd."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    bq = min(128, sq)
+    bk = min(128, kf.shape[1])
+    o = _fa.flash_attention_fwd(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                                interpret=interpret)
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def _flash_fwd(q, k, v, causal, chunk, interpret):
+    return _flash(q, k, v, causal, chunk, interpret), (q, k, v)
+
+
+def _flash_bwd(causal, chunk, interpret, res, g):
+    q, k, v = res
+
+    def ref_fn(q, k, v):
+        sq = q.shape[1]
+        pos = jnp.arange(sq, dtype=jnp.int32)
+        kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        return chunked_attention(q, k, v, pos, kpos, causal=causal,
+                                 chunk=chunk)
+
+    _, vjp = jax.vjp(ref_fn, q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, chunk: int = 1024,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Differentiable flash attention: Pallas forward (TPU target),
+    chunked-jnp backward.  q/k/v: (B, S, H|KVH, D)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _flash(q, k, v, causal, chunk, interpret)

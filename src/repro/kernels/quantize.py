@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: standalone per-tile FP4/FP8 quantize-dequantize.
+
+Used where quantization is NOT fused into a matmul (e.g. producing FP8
+gradients for the compressed all-reduce, or materializing FP4 weights for
+serving).  One grid step = one (block x block) VMEM tile; amax reduction,
+scale, RTN rounding and rescale all happen on the tile in registers/VMEM —
+HBM traffic is exactly read-once/write-once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.formats import FORMATS
+from repro.kernels.fp4_matmul import quantize_tile
+
+__all__ = ["quantize_blockwise"]
+
+
+def _q_kernel(x_ref, o_ref, *, fmt, per_row):
+    o_ref[...] = quantize_tile(
+        x_ref[...].astype(jnp.float32), fmt,
+        per_row=per_row).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "block", "per_row",
+                                             "interpret"))
+def quantize_blockwise(x: jnp.ndarray, fmt_name: str = "fp4_e2m1",
+                       block: int = 128, *, per_row: bool = False,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Tilewise QDQ of a 2-D array.  Shapes must be block multiples
+    (ops.py pads).  per_row=True gives (1 x block) granularity."""
+    m, n = x.shape
+    assert m % block == 0 and n % block == 0, (m, n, block)
+    fmt = FORMATS[fmt_name]
+    kernel = functools.partial(_q_kernel, fmt=fmt, per_row=per_row)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block, n // block),
+        in_specs=[pl.BlockSpec((block, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

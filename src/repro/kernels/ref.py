@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import FORMATS, round_to_format
+from repro.core.quantize import QuantSpec, qdq
+
+__all__ = ["quantize_blockwise_ref", "fp4_matmul_ref", "flash_attention_ref"]
+
+
+def quantize_blockwise_ref(x: jnp.ndarray, fmt_name: str,
+                           block: int = 128) -> jnp.ndarray:
+    """Per-(block x block)-tile QDQ of a 2-D array (f32 math)."""
+    spec = QuantSpec(fmt_name, "tile", block)
+    return qdq(x.astype(jnp.float32), spec, 1).astype(x.dtype)
+
+
+def fp4_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+                   x_fmt: str = "fp4_e2m1", w_fmt: str = "fp4_e2m1",
+                   block: int = 128) -> jnp.ndarray:
+    """Oracle for the fused block-quantized matmul.
+
+    x: (M, K) quantized per-(1 x block) along K;
+    w: (K, N) quantized per-(block x block) tiles;
+    accumulation in f32 (the MXU convention).
+    """
+    xq = qdq(x.astype(jnp.float32), QuantSpec(x_fmt, "block", block), 1)
+    wq = qdq(w.astype(jnp.float32), QuantSpec(w_fmt, "tile", block), 0)
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32
+                   ).astype(x.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True) -> jnp.ndarray:
+    """Naive softmax attention oracle.  q/k/v: (B, S, H, D) (kv maybe fewer
+    heads; repeated here)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes, and extract the roofline terms from the compiled module.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run wants 512 placeholder devices.
+
+Modes:
+  --mesh multi   2x16x16 (pod,data,model): proves the "pod" axis shards.
+                 Layers run under lax.scan (small HLO, bounded compile time).
+  --mesh single  16x16 (data,model): the roofline pass.  Layers are
+                 UNROLLED so cost_analysis is exact (XLA counts while bodies
+                 once); interior scans get analytic corrections
+                 (analysis.roofline.scan_flop_corrections).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import (model_flops, roofline_terms,
+                                     scan_flop_corrections)
+from repro.configs.base import (SHAPE_CELLS, ShapeCell, TrainConfig,
+                                get_config)
+from repro.distributed.sharding import default_rules
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.nn.layers import set_sharding_context
+from repro.train.train_step import make_train_step
+
+ASSIGNED_ARCHS = [
+    "nemotron-4-15b", "llama3.2-3b", "h2o-danube-3-4b", "granite-34b",
+    "mixtral-8x22b", "olmoe-1b-7b", "llama-3.2-vision-90b", "whisper-base",
+    "mamba2-780m", "jamba-1.5-large-398b",
+]
+
+
+def adapt_config(cfg, cell: ShapeCell, mesh_kind: str, unroll: bool):
+    """Cell/mode-specific compile strategy knobs (math unchanged)."""
+    kw = dict(scan_layers=not unroll)
+    # seq-chunked loss for big-vocab training cells
+    if cell.kind == "train" and cfg.vocab_size >= 32000:
+        kw["loss_chunk"] = 256
+    # fewer, larger KV chunks for very long caches (scan trip count)
+    if cell.seq_len > 100_000:
+        kw["attention_chunk"] = 8192
+    elif cell.seq_len > 8192:
+        kw["attention_chunk"] = 2048
+    if cfg.max_seq_len < cell.seq_len:
+        kw["max_seq_len"] = cell.seq_len + 8
+    return cfg.replace(**kw)
+
+
+def lower_cell(arch: str, cell: ShapeCell, mesh_kind: str, *,
+               recipe: str = "paper_fp4", unroll: Optional[bool] = None,
+               rules_overrides=None, act_overrides=None, fsdp: bool = True,
+               seq_parallel: bool = False, free_head_shard: bool = False,
+               cfg_patch=None):
+    """Returns (lowered, model, cfg, mesh, chips) for one cell."""
+    from repro.core.recipe import RECIPES
+    multi = mesh_kind == "multi"
+    if unroll is None:
+        unroll = not multi
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    cfg = adapt_config(get_config(arch), cell, mesh_kind, unroll)
+    if cfg_patch is not None:
+        cfg = cfg_patch(cfg)
+    model = build_model(cfg)
+    rules = default_rules(mesh, cfg, fsdp=fsdp, seq_parallel=seq_parallel,
+                          free_head_shard=free_head_shard,
+                          overrides=rules_overrides,
+                          act_overrides=act_overrides)
+    rec = RECIPES[recipe]
+    set_sharding_context(rules)
+    try:
+        with mesh:
+            if cell.kind == "train":
+                tcfg = TrainConfig(recipe=recipe, total_steps=1000,
+                                   global_batch=cell.global_batch,
+                                   seq_len=cell.seq_len)
+                step_fn = make_train_step(model, tcfg, rec, jit=False)
+                args, shardings = specs_lib.train_inputs(
+                    model, tcfg, cell, rules)
+                lowered = jax.jit(step_fn, in_shardings=shardings,
+                                  donate_argnums=(0, 1)).lower(*args)
+            elif cell.kind == "prefill":
+                def prefill(params, batch, cache):
+                    return model.prefill(params, batch, cache, rec)
+                args, shardings = specs_lib.prefill_inputs(model, cell, rules)
+                lowered = jax.jit(prefill,
+                                  in_shardings=shardings).lower(*args)
+            else:  # decode
+                def decode(params, token, cache):
+                    return model.decode_step(params, token, cache, rec)
+                args, shardings = specs_lib.decode_inputs(model, cell, rules)
+                lowered = jax.jit(decode, in_shardings=shardings,
+                                  donate_argnums=(2,)).lower(*args)
+    finally:
+        set_sharding_context(None)
+    return lowered, model, cfg, mesh, chips
+
+
+def _compile_metrics(lowered) -> dict:
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "coll": coll,
+        "mem": mem,
+    }
+
+
+def roofline_probe(arch: str, cell: ShapeCell, *, recipe: str = "paper_fp4",
+                   **lower_kw) -> dict:
+    """Exact per-layer-group cost via calibrated differencing.
+
+    XLA cost_analysis is exact only for unrolled layers, but fully unrolling
+    100-layer configs is compile-prohibitive.  Since the stack repeats with
+    period p, we lower UNROLLED probes with 1x and 3x period-groups; the
+    difference isolates exactly 2 groups worth of FLOPs/bytes/collectives,
+    which extrapolates to the full depth:
+
+        total(L) = probe(p) + (L/p - 1) * (probe(3p) - probe(p)) / 2
+
+    Small stacks (<= 12 layers) are fully unrolled instead (exact).
+    """
+    cfg0 = get_config(arch)
+    p = cfg0.scan_period()
+    L = cfg0.n_layers
+    exact = L <= max(12, 3 * p)
+    out = {"mode": "exact_unroll" if exact else "probe_extrapolated",
+           "period": p}
+    user_patch = lower_kw.pop("cfg_patch", None)
+    if exact:
+        lowered, model, cfg, mesh, chips = lower_cell(
+            arch, cell, "single", recipe=recipe, unroll=True,
+            cfg_patch=user_patch, **lower_kw)
+        m = _compile_metrics(lowered)
+        out.update(flops=m["flops"], bytes=m["bytes"],
+                   coll_eff=m["coll"]["effective_total"],
+                   coll_eff_bf16eq=m["coll"]["effective_total_bf16eq"],
+                   coll_raw=m["coll"]["raw_total"], mem=m["mem"],
+                   chips=chips, cfg=cfg, model=model)
+        return out
+    metrics = {}
+    for k in (1, 3):
+        def patched(cfg, n=k * p):
+            cfg = cfg.replace(n_layers=n)
+            return user_patch(cfg) if user_patch else cfg
+        lowered, model, cfg, mesh, chips = lower_cell(
+            arch, cell, "single", recipe=recipe, unroll=True,
+            cfg_patch=patched, **lower_kw)
+        metrics[k] = _compile_metrics(lowered)
+    n_groups = L // p
+    g = {key: (metrics[3][key] - metrics[1][key]) / 2.0
+         for key in ("flops", "bytes")}
+    ce = (metrics[3]["coll"]["effective_total"]
+          - metrics[1]["coll"]["effective_total"]) / 2.0
+    cb = (metrics[3]["coll"]["effective_total_bf16eq"]
+          - metrics[1]["coll"]["effective_total_bf16eq"]) / 2.0
+    cr = (metrics[3]["coll"]["raw_total"]
+          - metrics[1]["coll"]["raw_total"]) / 2.0
+    out.update(
+        flops=metrics[1]["flops"] + g["flops"] * (n_groups - 1),
+        bytes=metrics[1]["bytes"] + g["bytes"] * (n_groups - 1),
+        coll_eff=metrics[1]["coll"]["effective_total"] + ce * (n_groups - 1),
+        coll_eff_bf16eq=(metrics[1]["coll"]["effective_total_bf16eq"]
+                         + cb * (n_groups - 1)),
+        coll_raw=metrics[1]["coll"]["raw_total"] + cr * (n_groups - 1),
+        mem=metrics[3]["mem"], chips=chips,
+        per_group={"flops": g["flops"], "bytes": g["bytes"],
+                   "coll_eff": ce},
+        probes={k: {"flops": m["flops"], "bytes": m["bytes"],
+                    "coll_eff": m["coll"]["effective_total"]}
+                for k, m in metrics.items()},
+        cfg=get_config(arch), model=None)
+    return out
+
+
+def run_cell(arch: str, cell: ShapeCell, mesh_kind: str, *,
+             recipe: str = "paper_fp4", verbose: bool = True,
+             **lower_kw) -> dict:
+    """Lower + compile + extract dry-run artifacts for one cell."""
+    import importlib
+    from repro.models.model import build_model as _bm
+    mod = importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+    skip = getattr(mod, "SKIP_CELLS", {})
+    if cell.name in skip:
+        return {"arch": arch, "cell": cell.name, "mesh": mesh_kind,
+                "status": "skipped", "reason": skip[cell.name]}
+    t0 = time.time()
+    user_patch = lower_kw.get("cfg_patch")
+    if mesh_kind == "single":
+        pr = roofline_probe(arch, cell, recipe=recipe, **lower_kw)
+        t2 = time.time()
+        cfg = adapt_config(pr["cfg"], cell, "single", True)
+        if user_patch is not None:
+            cfg = user_patch(cfg)
+        model = _bm(cfg)
+        chips = pr["chips"]
+        mem = pr["mem"]
+        hlo_flops, hlo_bytes = pr["flops"], pr["bytes"]
+        coll = {"effective_total": pr["coll_eff"],
+                "effective_total_bf16eq": pr.get("coll_eff_bf16eq",
+                                                 pr["coll_eff"]),
+                "raw_total": pr["coll_raw"]}
+        extra = {"probe": {k: v for k, v in pr.items()
+                           if k in ("mode", "period", "per_group",
+                                    "probes")}}
+        t1 = t0
+    else:
+        lowered, model, cfg, mesh, chips = lower_cell(
+            arch, cell, mesh_kind, recipe=recipe, **lower_kw)
+        t1 = time.time()
+        m = _compile_metrics(lowered)
+        t2 = time.time()
+        mem = m["mem"]
+        hlo_flops, hlo_bytes = m["flops"], m["bytes"]
+        coll = m["coll"]
+        extra = {"note": "scan mode: cost_analysis counts while bodies "
+                         "once; roofline fields informational only"}
+
+    corr = scan_flop_corrections(cfg, cell, chips)
+    n_active = model.active_param_count()
+    mflops = model_flops(cfg, cell, n_active)
+    terms = roofline_terms(
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        collective_bytes_eff=coll["effective_total"],
+        chips=chips, flop_correction=corr["total"],
+        model_flops_total=mflops)
+    terms["collective_s_bf16eq"] = (
+        coll.get("effective_total_bf16eq", coll["effective_total"]) / 50e9)
+
+    result = {
+        "arch": arch, "cell": cell.name, "mesh": mesh_kind,
+        "recipe": recipe, "status": "ok", "chips": chips,
+        "params_total": model.param_count(),
+        "params_active": n_active,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+                / 1e9, 3),
+        },
+        "collectives": coll,
+        "flop_corrections": corr,
+        "roofline": terms,
+        **extra,
+    }
+    if verbose:
+        print(f"[{arch} / {cell.name} / {mesh_kind}] "
+              f"compile {t2-t1:.1f}s  "
+              f"mem/chip {result['memory']['peak_estimate_gb']:.2f} GB  "
+              f"flops/chip {terms['hlo_flops_per_chip']:.3e}  "
+              f"bottleneck {terms['bottleneck']}  "
+              f"bound {terms['step_time_lower_bound_s']*1e3:.1f} ms  "
+              f"useful-flop ratio {terms.get('useful_flops_ratio', 0):.3f}")
+        print("  memory_analysis:", mem)
+        print("  collectives:", {k: f"{v:.3e}" for k, v in coll.items()
+                                 if isinstance(v, (int, float))})
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=[c.name for c in SHAPE_CELLS])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--recipe", default="paper_fp4")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    args = ap.parse_args()
+
+    cells = {c.name: c for c in SHAPE_CELLS}
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for c in SHAPE_CELLS:
+                for m in meshes:
+                    todo.append((a, c, m))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for m in meshes:
+            todo.append((args.arch, cells[args.shape], m))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, cell, m in todo:
+        tag = f"{arch}__{cell.name}__{m}__{args.recipe}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip existing] {tag}")
+            continue
+        try:
+            res = run_cell(arch, cell, m, recipe=args.recipe,
+                           fsdp=not args.no_fsdp,
+                           seq_parallel=args.seq_parallel)
+        except Exception as e:  # record failures as artifacts too
+            traceback.print_exc()
+            res = {"arch": arch, "cell": cell.name, "mesh": m,
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, per
+(arch x shape-cell), plus matching in_shardings — no device allocation.
+
+Modality frontends are STUBS per the assignment: [audio] cells provide
+precomputed frame embeddings, [vlm] cells precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell, TrainConfig
+from repro.distributed.sharding import ShardingRules, opt_state_shardings
+from repro.models.model import Model
+from repro.train.train_step import make_optimizer
+
+__all__ = ["train_batch_specs", "train_inputs", "prefill_inputs",
+           "decode_inputs"]
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                      rules: ShardingRules) -> Tuple[Dict, Dict]:
+    """(batch ShapeDtypeStructs, batch shardings) for a training step."""
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+        "targets": jax.ShapeDtypeStruct((batch, seq), i32),
+    }
+    if cfg.family == "vlm":
+        specs["vision"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), dt)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frames, cfg.d_model), dt)
+    shardings = {k: rules.activation_sharding(
+        ("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+        for k, v in specs.items()}
+    return specs, shardings
+
+
+def train_inputs(model: Model, tcfg: TrainConfig, cell: ShapeCell,
+                 rules: ShardingRules):
+    """Abstract (args, in_shardings) for
+    train_step(params, opt_state, comp_state, batch, step)."""
+    cfg = model.cfg
+    params = model.abstract_params(jnp.float32)
+    p_shard = rules.param_shardings(model.param_specs())
+    opt = make_optimizer(model, tcfg)
+    opt_state = jax.eval_shape(opt.init, params)
+    o_shard = opt_state_shardings(opt_state, params, p_shard, rules.mesh)
+    if tcfg.grad_compression == "fp8":
+        comp = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+        c_shard = jax.tree.map(lambda s: s, p_shard)
+    else:
+        comp = jax.ShapeDtypeStruct((), jnp.float32)
+        c_shard = rules.replicated()
+    batch, b_shard = train_batch_specs(cfg, cell.global_batch, cell.seq_len,
+                                       rules)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (params, opt_state, comp, batch, step)
+    shardings = (p_shard, o_shard, c_shard, b_shard, rules.replicated())
+    return args, shardings
+
+
+def _serve_common(model: Model, cell: ShapeCell, rules: ShardingRules,
+                  cache_len: int):
+    cfg = model.cfg
+    dt = jnp.dtype(cfg.dtype)
+    params = model.abstract_params(dt)  # serving: weights already in bf16
+    p_shard = rules.param_shardings(model.param_specs())
+    cache = model.cache_spec(cell.global_batch, cache_len, dt)
+    cache_shard = {"stack": rules.cache_shardings(cache["stack"]),
+                   "length": rules.replicated()}
+    return params, p_shard, cache, cache_shard
+
+
+def prefill_inputs(model: Model, cell: ShapeCell, rules: ShardingRules):
+    """Abstract (args, in_shardings) for prefill(params, batch, cache)."""
+    cfg = model.cfg
+    params, p_shard, cache, cache_shard = _serve_common(
+        model, cell, rules, cell.seq_len)
+    batch, b_shard = train_batch_specs(cfg, cell.global_batch, cell.seq_len,
+                                       rules)
+    batch.pop("targets"), b_shard.pop("targets")
+    return (params, batch, cache), (p_shard, b_shard, cache_shard)
+
+
+def decode_inputs(model: Model, cell: ShapeCell, rules: ShardingRules):
+    """Abstract (args, in_shardings) for decode_step(params, token, cache).
+
+    The cache holds ``cell.seq_len`` tokens (the cell's defining property:
+    one new token against a seq_len-deep cache).
+    """
+    params, p_shard, cache, cache_shard = _serve_common(
+        model, cell, rules, cell.seq_len)
+    token = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+    t_shard = rules.activation_sharding(("batch", None), token.shape)
+    return (params, token, cache), (p_shard, t_shard, cache_shard)

@@ -1,0 +1,4 @@
+"""Model zoo: unified stack covering all assigned architecture families."""
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

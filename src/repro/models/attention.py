@@ -1,0 +1,315 @@
+"""Attention: GQA/MQA, causal/sliding-window/cross, chunked flash, KV caches.
+
+Per the paper (§3.1 + App. B): the QKV and output projections are
+"attention-protected" linears (FP8 under the paper recipe, configured by
+``MatmulRecipe``), while the attention math itself (softmax(QK^T)V) always
+runs in the compute dtype via a FlashAttention-equivalent — here a chunked
+online-softmax over KV blocks (O(S * chunk) memory), optionally the Pallas
+kernel on TPU.
+
+Cache variants:
+  * full ring-less cache  (decode with full attention)
+  * ring buffer           (sliding-window attention; the sub-quadratic
+                           mechanism for the long_500k cells)
+  * cross cache           (K/V precomputed once from encoder/vision states)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import qlinear
+from repro.core.recipe import MatmulRecipe
+from repro.nn.layers import rope, shard_hint
+from repro.nn.params import ParamSpec
+
+__all__ = ["attn_param_specs", "cross_attn_param_specs", "attention",
+           "cross_attention", "attn_cache_spec", "init_attn_cache",
+           "chunked_attention", "NEG_INF"]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attn_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    return {
+        "wq": ParamSpec((d, nq * hd), ("embed", "heads")),
+        "wk": ParamSpec((d, nkv * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, nkv * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((nq * hd, d), ("heads", "embed"),
+                        scale=1.0 / np.sqrt(nq * hd * max(cfg.n_layers, 1))),
+    }
+
+
+def cross_attn_param_specs(cfg: ModelConfig,
+                           kv_dim: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    kv_dim = kv_dim or d
+    return {
+        "wq": ParamSpec((d, nq * hd), ("embed", "heads")),
+        "wk": ParamSpec((kv_dim, nkv * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((kv_dim, nkv * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((nq * hd, d), ("heads", "embed"),
+                        scale=1.0 / np.sqrt(nq * hd * max(cfg.n_layers, 1))),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (pure-jnp FlashAttention equivalent)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """(..., Sq, Sk) additive mask from absolute positions.
+
+    ``k_pos`` entries < 0 denote unwritten cache slots (always masked).
+    """
+    valid = (k_pos >= 0)[..., None, :]
+    if causal:
+        valid &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        valid &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return jnp.where(valid, 0.0, NEG_INF)
+
+
+def _repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, KVH, D) -> (B, S, KVH*n_rep, D)."""
+    if n_rep == 1:
+        return x
+    b, s, kvh, d = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kvh, n_rep, d))
+    return x.reshape(b, s, kvh * n_rep, d)
+
+
+def chunked_attention(
+    q: jnp.ndarray,           # (B, Sq, H, D)
+    k: jnp.ndarray,           # (B, Sk, KVH, D)
+    v: jnp.ndarray,           # (B, Sk, KVH, D)
+    q_pos: jnp.ndarray,       # (Sq,) absolute positions
+    k_pos: jnp.ndarray,       # (Sk,) absolute positions (-1 = invalid)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks; O(Sq * chunk) live scores."""
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    n_rep = h // kvh
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / np.sqrt(d)
+
+    chunk = min(chunk, sk)
+    n_chunks = sk // chunk
+    rem = sk - n_chunks * chunk
+
+    # Operands stay in the compute dtype; dots accumulate in f32 via
+    # preferred_element_type (flash-style — avoids live f32 K/V copies).
+    qf = (q * jnp.asarray(scale, q.dtype)).transpose(0, 2, 1, 3)  # (B,H,Sq,D)
+    kf = k.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    qf = shard_hint(qf, ("batch", "heads", "seq_q", None))
+
+    def one_chunk(carry, kc, vc, kpos_c):
+        m, l, acc = carry
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc,
+                       preferred_element_type=jnp.float32)
+        s = s + _mask_bias(q_pos, kpos_c, causal, window)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # Guard fully-masked rows: exp(-inf - (-inf)) must be 0, not 1.
+        safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        corr = jnp.exp(m - safe_m) * (m > NEG_INF / 2)
+        p = jnp.exp(s - safe_m[..., None])
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    # Carry inits must match qf's sharding: lax.scan unifies the carry
+    # sharding across iterations, so replicated inits would force GSPMD to
+    # re-gather the q-sequence dim inside every chunk step (defeats
+    # context-parallel attention).
+    m0 = shard_hint(jnp.full((b, h, sq), NEG_INF, jnp.float32),
+                    ("batch", "heads", "seq_q"))
+    l0 = shard_hint(jnp.zeros((b, h, sq), jnp.float32),
+                    ("batch", "heads", "seq_q"))
+    a0 = shard_hint(jnp.zeros((b, h, sq, d), jnp.float32),
+                    ("batch", "heads", "seq_q", None))
+    carry = (m0, l0, a0)
+
+    if n_chunks > 0:
+        if unroll:
+            for i in range(n_chunks):
+                sl = slice(i * chunk, (i + 1) * chunk)
+                carry = one_chunk(carry, kf[:, :, sl], vf[:, :, sl],
+                                  k_pos[sl])
+        else:
+            kc = kf[:, :, :n_chunks * chunk].reshape(
+                b, h, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+            vc = vf[:, :, :n_chunks * chunk].reshape(
+                b, h, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+            pc = k_pos[:n_chunks * chunk].reshape(n_chunks, chunk)
+
+            def body(c, xs):
+                return one_chunk(c, *xs), None
+
+            carry, _ = jax.lax.scan(body, carry, (kc, vc, pc))
+    if rem:
+        carry = one_chunk(carry, kf[:, :, n_chunks * chunk:],
+                          vf[:, :, n_chunks * chunk:],
+                          k_pos[n_chunks * chunk:])
+
+    m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Sq,H,D)
+
+
+# ---------------------------------------------------------------------------
+# Full attention sublayer (projections + SDPA [+ cache update])
+# ---------------------------------------------------------------------------
+
+def attention(
+    params: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # (B, Sq, D)
+    recipe: MatmulRecipe,
+    *,
+    positions: Optional[jnp.ndarray] = None,   # (Sq,) absolute positions
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_len: Optional[jnp.ndarray] = None,   # scalar int32: tokens already cached
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Self-attention sublayer.  Returns (out, updated_cache)."""
+    b, sq, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.arange(sq, dtype=jnp.int32)
+
+    q = qlinear(x, params["wq"], recipe).reshape(b, sq, cfg.n_heads, hd)
+    k = qlinear(x, params["wk"], recipe).reshape(b, sq, cfg.n_kv_heads, hd)
+    v = qlinear(x, params["wv"], recipe).reshape(b, sq, cfg.n_kv_heads, hd)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # 'seq_q' is None by default; mapping it to the TP axis enables
+    # context-parallel attention (q-sequence sharding) — the fallback when
+    # head counts don't divide TP (e.g. llama3.2-3b 24H on model=16).
+    q = shard_hint(q, ("batch", "seq_q", "heads", None))
+    k = shard_hint(k, ("batch", "seq", "kv_heads", None))
+    v = shard_hint(v, ("batch", "seq", "kv_heads", None))
+
+    window = cfg.sliding_window
+    new_cache = None
+    if cache is None:
+        if (cfg.attention_impl == "pallas" and not window
+                and q.shape[1] % 128 == 0):
+            # TPU flash kernel (interpret-mode on CPU); bwd runs through the
+            # chunked-jnp path (kernels.ops custom_vjp) — identical math.
+            from repro.kernels import flash_attention as _flash
+            out = _flash(q, k, v, causal=causal, chunk=cfg.attention_chunk)
+        else:
+            out = chunked_attention(
+                q, k, v, positions, positions, causal=causal, window=window,
+                chunk=cfg.attention_chunk, unroll=cfg.unroll_attention)
+    else:
+        new_cache, k_all, v_all, k_pos = _update_cache(
+            cache, k, v, cache_len, window)
+        out = chunked_attention(
+            q, k_all, v_all, positions, k_pos, causal=causal, window=window,
+            chunk=cfg.attention_chunk, unroll=cfg.unroll_attention)
+    out = out.reshape(b, sq, cfg.n_heads * hd)
+    return qlinear(out, params["wo"], recipe), new_cache
+
+
+def cross_attention(
+    params: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # (B, Sq, D)
+    recipe: MatmulRecipe,
+    *,
+    kv_states: Optional[jnp.ndarray] = None,   # (B, Skv, Dkv)
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Cross-attention over encoder/vision states (non-causal).
+
+    Either ``kv_states`` (training/prefill; K/V computed here and returned as
+    a cache) or ``cache`` (decode; K/V reused) must be provided.
+    """
+    b, sq, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = qlinear(x, params["wq"], recipe).reshape(b, sq, cfg.n_heads, hd)
+    if cache is None:
+        skv = kv_states.shape[1]
+        k = qlinear(kv_states, params["wk"], recipe).reshape(
+            b, skv, cfg.n_kv_heads, hd)
+        v = qlinear(kv_states, params["wv"], recipe).reshape(
+            b, skv, cfg.n_kv_heads, hd)
+        new_cache = {"k": k, "v": v}
+    else:
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    skv = k.shape[1]
+    kpos = jnp.arange(skv, dtype=jnp.int32)
+    qpos = jnp.zeros((sq,), jnp.int32)
+    out = chunked_attention(q, k, v, qpos, kpos, causal=False, window=0,
+                            chunk=cfg.attention_chunk,
+                            unroll=cfg.unroll_attention)
+    out = out.reshape(b, sq, cfg.n_heads * hd)
+    return qlinear(out, params["wo"], recipe), new_cache
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+def attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Cache spec for ONE attention layer.
+
+    Sliding-window configs get a ring buffer bounded by the window size —
+    this is what makes long_500k decode sub-quadratic (and sub-linear in
+    memory) for SWA archs.
+    """
+    size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((size,), jnp.int32),
+    }
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    spec = attn_cache_spec(cfg, batch, max_len, dtype)
+    cache = {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}
+    cache["pos"] = jnp.full(spec["pos"].shape, -1, jnp.int32)
+    return cache
+
+
+def _update_cache(cache, k, v, cache_len, window):
+    """Write new K/V at [cache_len, cache_len+sq) (mod ring size)."""
+    sq = k.shape[1]
+    size = cache["k"].shape[1]
+    start = cache_len.astype(jnp.int32)
+    new_pos = start + jnp.arange(sq, dtype=jnp.int32)
+    # Ring indexing for windowed caches; identity when size covers max_len.
+    idx = new_pos % size if window else new_pos
+    k_new = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+    v_new = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+    pos_new = cache["pos"].at[idx].set(new_pos)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos_new}
+    return new_cache, k_new, v_new, pos_new

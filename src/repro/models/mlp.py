@@ -1,0 +1,45 @@
+"""Dense FFN sublayer — the paper's FP4 target (§3.2 Gradient-sensitive)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import qlinear
+from repro.core.recipe import MatmulRecipe
+from repro.nn.layers import ACTIVATIONS, shard_hint
+from repro.nn.params import ParamSpec
+
+__all__ = ["mlp_param_specs", "mlp"]
+
+
+def mlp_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    down_scale = 1.0 / np.sqrt(f * max(cfg.n_layers, 1))
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+            "w_up": ParamSpec((d, f), ("embed", "mlp")),
+            "w_down": ParamSpec((f, d), ("mlp", "embed"), scale=down_scale),
+        }
+    return {
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed"), scale=down_scale),
+    }
+
+
+def mlp(params: Dict[str, jnp.ndarray], cfg: ModelConfig, x: jnp.ndarray,
+        recipe: MatmulRecipe) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D).  All matmuls quantized per ``recipe``;
+    the nonlinearity stays in the compute dtype (§3.2: there is always a
+    nonlinear op between linear layers that needs precise representation)."""
+    if cfg.activation == "swiglu":
+        g = qlinear(x, params["w_gate"], recipe)
+        u = qlinear(x, params["w_up"], recipe)
+        h = ACTIVATIONS["silu"](g) * u
+    else:
+        h = ACTIVATIONS[cfg.activation](qlinear(x, params["w_up"], recipe))
+    h = shard_hint(h, ("batch", "seq", "mlp"))
+    return qlinear(h, params["w_down"], recipe)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN (GShard-style top-k routing, capacity dispatch).
+
+Expert matmuls are FFN-class linears under the paper's recipe (FP4 forward /
+FP8 wgrad).  The router is a tiny nonlinearity-adjacent matmul and stays in
+FP32 — exactly the class §3.2 protects (see DESIGN.md §Arch-applicability).
+
+Dispatch uses the classic GShard one-hot capacity einsums, reshaped into
+router groups of ``group_size`` tokens so the dispatch tensors stay bounded
+and shard cleanly over the data axes.  Experts shard over the 'experts'
+logical axis (EP) when divisible; otherwise d_ff shards within each expert
+(TP-in-expert) — see distributed.sharding.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import qmatmul
+from repro.core.recipe import MatmulRecipe
+from repro.nn.layers import ACTIVATIONS, shard_hint
+from repro.nn.params import ParamSpec
+
+__all__ = ["moe_param_specs", "moe", "router_loss"]
+
+
+def moe_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    assert cfg.moe is not None
+    e, d, f = cfg.moe.num_experts, cfg.d_model, cfg.d_ff
+    down_scale = 1.0 / np.sqrt(f * max(cfg.n_layers, 1))
+    specs = {
+        "router": ParamSpec((d, e), ("embed", None), dtype=jnp.float32),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "w_down": ParamSpec((e, f, d), ("experts", "mlp", "embed"),
+                            scale=down_scale),
+    }
+    if cfg.activation == "swiglu":
+        specs["w_gate"] = ParamSpec((e, d, f), ("experts", "embed", "mlp"))
+    return specs
+
+
+def _expert_linear(x: jnp.ndarray, w: jnp.ndarray,
+                   recipe: MatmulRecipe) -> jnp.ndarray:
+    """Batched per-expert quantized matmul: (E, C, K) @ (E, K, N)."""
+    if recipe.is_passthrough:
+        return jnp.einsum("eck,ekn->ecn", x, w)
+    key = jnp.zeros((2,), jnp.uint32)
+    return jax.vmap(lambda a, b: qmatmul(a, b, key, recipe))(x, w)
+
+
+def moe(params: Dict[str, jnp.ndarray], cfg: ModelConfig, x: jnp.ndarray,
+        recipe: MatmulRecipe) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, D) -> (out (B, S, D), aux losses dict)."""
+    st = cfg.moe
+    b, s, d = x.shape
+    tokens = b * s
+    gsz = min(st.group_size, tokens)
+    # Pad token count to a multiple of the group size (masked tokens get
+    # zero gates and never win capacity slots).
+    n_groups = -(-tokens // gsz)
+    pad = n_groups * gsz - tokens
+    xt = x.reshape(tokens, d)
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, d), x.dtype)], axis=0)
+    xg = xt.reshape(n_groups, gsz, d)
+    xg = shard_hint(xg, ("batch", None, "embed"))
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G, T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, st.top_k)  # (G, T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)             # renormalize
+
+    e = st.num_experts
+    capacity = int(np.ceil(gsz * st.top_k * st.capacity_factor / e))
+    capacity = max(capacity, st.top_k)
+
+    # --- capacity assignment (GShard): position of each (token, k) in its
+    # expert's queue; tokens beyond capacity are dropped. ---
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (G,T,K,E)
+    # priority: k slots interleaved in token order
+    flat = onehot.transpose(0, 2, 1, 3).reshape(n_groups, st.top_k * gsz, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (G, KT, E)
+    pos = pos.reshape(n_groups, st.top_k, gsz, e).transpose(0, 2, 1, 3)
+    within = (pos < capacity)                                  # (G, T, K, E)
+    kept = onehot * within
+    slot = jnp.einsum("gtke,gtke->gtk", pos, onehot).astype(jnp.int32)
+
+    # combine[g,t,k,e,c] summed over k -> (G, T, E, C)
+    slot_oh = jax.nn.one_hot(slot, capacity, dtype=jnp.float32)
+    combine = jnp.einsum("gtke,gtkc->gtec", kept * gate_vals[..., None],
+                         slot_oh)
+    dispatch = (combine > 0).astype(x.dtype)                   # (G, T, E, C)
+
+    # --- expert computation ---
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch, xg)           # (G, E, C, D)
+    xin = shard_hint(xin, ("batch", "experts", None, "embed"))
+    xe = xin.transpose(1, 0, 2, 3).reshape(e, n_groups * capacity, d)
+    if cfg.activation == "swiglu":
+        g_ = _expert_linear(xe, params["w_gate"], recipe)
+        u_ = _expert_linear(xe, params["w_up"], recipe)
+        h = ACTIVATIONS["silu"](g_) * u_
+    else:
+        h = ACTIVATIONS[cfg.activation](
+            _expert_linear(xe, params["w_up"], recipe))
+    out_e = _expert_linear(h, params["w_down"], recipe)        # (E, G*C, D)
+    out_e = out_e.reshape(e, n_groups, capacity, d).transpose(1, 0, 2, 3)
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), out_e)
+
+    out = out.reshape(n_groups * gsz, d)[:tokens].reshape(b, s, d)
+
+    # --- aux losses (Shazeer load balancing + router z-loss) ---
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    ce = onehot.sum(axis=2).mean(axis=(0, 1))                  # (E,)
+    lb = e * jnp.sum(me * ce) * st.load_balance_loss
+    zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * st.router_z_loss
+    frac_dropped = 1.0 - jnp.sum(kept) / (n_groups * gsz * st.top_k)
+    aux = {"moe_load_balance": lb, "moe_router_z": zl,
+           "moe_frac_dropped": frac_dropped}
+    return out, aux
+
+
+def router_loss(aux: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return aux["moe_load_balance"] + aux["moe_router_z"]

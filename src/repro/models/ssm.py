@@ -1,0 +1,319 @@
+"""Mamba2 mixer via SSD (state-space duality), in its chunked matmul form.
+
+TPU adaptation: the SSD formulation (Dao & Gu 2024, arXiv:2405.21060)
+re-expresses the selective-scan as block matmuls — intra-chunk "attention-
+like" products plus a short inter-chunk state recurrence — which is exactly
+what the MXU wants (dense 128-aligned dots) instead of the GPU's warp-level
+sequential scan.  The in/out projections are FFN-class linears under the
+paper's recipe (FP4 fwd / FP8 wgrad); the SSD mixing math itself is the
+token-mixing component and stays in the compute dtype, analogous to the
+paper's attention protection (§3.1) — see DESIGN.md §Arch-applicability.
+
+Shapes: u (B,S,D); internally x (B,S,H,P) with H = expand*D/headdim heads,
+B/C (B,S,G,N) with G broadcast groups, dt (B,S,H).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import qlinear
+from repro.core.recipe import MatmulRecipe
+from repro.nn.layers import rms_norm, shard_hint, silu
+from repro.nn.params import ParamSpec
+
+__all__ = ["mamba_param_specs", "mamba_mixer", "mamba_cache_spec",
+           "init_mamba_cache", "ssd_chunked", "ssd_reference"]
+
+
+def _dims(cfg: ModelConfig):
+    st = cfg.mamba
+    d_inner = st.expand * cfg.d_model
+    nheads = d_inner // st.headdim
+    conv_dim = d_inner + 2 * st.n_groups * st.d_state
+    return st, d_inner, nheads, conv_dim
+
+
+def mamba_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    """Projection weights are SPLIT per segment (z / x / B / C / dt) rather
+    than fused like the CUDA reference.  Mathematically identical, but each
+    output dim then shards on its own logical axis: a fused (d, 2*d_inner +
+    2GN + H) projection forces GSPMD to slice MID-SHARD at the segment
+    boundaries, which lowers to a storm of collective-permutes (observed:
+    ~18% of jamba-prefill collective bytes + "involuntary full
+    rematerialization" warnings).  The depthwise conv splits the same way
+    (exact)."""
+    st, d_inner, nheads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    gn = st.n_groups * st.d_state
+    return {
+        "in_z": ParamSpec((d, d_inner), ("embed", "mamba_inner")),
+        "in_x": ParamSpec((d, d_inner), ("embed", "mamba_inner")),
+        "in_b": ParamSpec((d, gn), ("embed", "mamba_groups")),
+        "in_c": ParamSpec((d, gn), ("embed", "mamba_groups")),
+        "in_dt": ParamSpec((d, nheads), ("embed", "mamba_heads")),
+        "conv_wx": ParamSpec((st.d_conv, d_inner), (None, "mamba_inner"),
+                             scale=1.0 / np.sqrt(st.d_conv)),
+        "conv_wb": ParamSpec((st.d_conv, gn), (None, "mamba_groups"),
+                             scale=1.0 / np.sqrt(st.d_conv)),
+        "conv_wc": ParamSpec((st.d_conv, gn), (None, "mamba_groups"),
+                             scale=1.0 / np.sqrt(st.d_conv)),
+        "conv_bx": ParamSpec((d_inner,), ("mamba_inner",), init="zeros"),
+        "conv_bb": ParamSpec((gn,), ("mamba_groups",), init="zeros"),
+        "conv_bc": ParamSpec((gn,), ("mamba_groups",), init="zeros"),
+        "dt_bias": ParamSpec((nheads,), (None,), init="dt_bias",
+                             dtype=jnp.float32),
+        "a_log": ParamSpec((nheads,), (None,), init="a_log",
+                           dtype=jnp.float32),
+        "d_skip": ParamSpec((nheads,), (None,), init="ones",
+                            dtype=jnp.float32),
+        "norm_scale": ParamSpec((d_inner,), ("mamba_inner",), init="zeros"),
+        "out_proj": ParamSpec((d_inner, d), ("mamba_inner", "embed"),
+                              scale=1.0 / np.sqrt(d_inner *
+                                                  max(cfg.n_layers, 1))),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _rep_heads(x: jnp.ndarray, h: int) -> jnp.ndarray:
+    """(B,S,G,N) -> (B,S,H,N) by repeating groups."""
+    g = x.shape[2]
+    if g == h:
+        return x
+    rep = h // g
+    b, s, _, n = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, g, rep, n))
+    return x.reshape(b, s, h, n)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, *, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None,
+                unroll: bool = False):
+    """Chunked SSD.
+
+    Args:
+      x: (B, S, H, P) inputs, dt: (B, S, H) post-softplus step sizes,
+      a: (H,) negative decay rates, bmat/cmat: (B, S, G, N).
+      chunk: chunk length (S must be divisible; callers pad).
+      initial_state: (B, H, P, N) or None.
+    Returns: (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    bh = _rep_heads(bmat, h)
+    ch = _rep_heads(cmat, h)
+
+    f32 = jnp.float32
+    dA = (dt.astype(f32) * a.astype(f32)).reshape(b, nc, chunk, h)
+    dA_cs = jnp.cumsum(dA, axis=2)                       # (b,c,q,h)
+    xdt = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(
+        b, nc, chunk, h, p)
+    bh = bh.astype(f32).reshape(b, nc, chunk, h, n)
+    ch = ch.astype(f32).reshape(b, nc, chunk, h, n)
+
+    # Intra-chunk ("diagonal block"): attention-like masked matmul.
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (b,c,q,k,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", ch, bh)
+    y_diag = jnp.einsum("bcqkh,bcqkh,bckhp->bcqhp", cb, L, xdt)
+
+    # Per-chunk end states.
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # (b,c,q,h)
+    states = jnp.einsum("bckhn,bckh,bckhp->bchpn", bh, decay_states, xdt)
+
+    # Inter-chunk recurrence over the nc chunk states.
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                # (b,c,h)
+    s0 = (jnp.zeros((b, h, p, n), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    if unroll:
+        prevs = []
+        st = s0
+        for c in range(nc):
+            prevs.append(st)
+            st = st * chunk_decay[:, c][:, :, None, None] + states[:, c]
+        s_prev = jnp.stack(prevs, axis=1)                    # (b,c,h,p,n)
+        s_final = st
+    else:
+        def body(carry, inp):
+            st_c, dec_c = inp
+            new = carry * dec_c[:, :, None, None] + st_c
+            return new, carry
+        s_final, s_prev = jax.lax.scan(
+            body, s0, (states.transpose(1, 0, 2, 3, 4),
+                       chunk_decay.transpose(1, 0, 2)))
+        s_prev = s_prev.transpose(1, 0, 2, 3, 4)             # (b,c,h,p,n)
+
+    # Off-diagonal contribution from the carried-in state.
+    state_decay = jnp.exp(dA_cs)                             # (b,c,q,h)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", ch, s_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), s_final
+
+
+def ssd_reference(x, dt, a, bmat, cmat,
+                  initial_state: Optional[jnp.ndarray] = None):
+    """Sequential recurrence oracle (tests): O(S) scan over single steps."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    bh = _rep_heads(bmat, h).astype(jnp.float32)
+    ch = _rep_heads(cmat, h).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    st = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, t):
+        dA = jnp.exp(dtf[:, t] * a)                          # (b,h)
+        upd = jnp.einsum("bhp,bhn->bhpn", xf[:, t] * dtf[:, t][..., None],
+                         bh[:, t])
+        new = carry * dA[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", ch[:, t], new)
+        return new, y
+
+    st, ys = jax.lax.scan(step, st, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), st
+
+
+# ---------------------------------------------------------------------------
+# Mixer sublayer (projections + conv + SSD [+ cache])
+# ---------------------------------------------------------------------------
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    st, d_inner, nheads, conv_dim = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, st.d_conv - 1, conv_dim), dtype),
+        "state": jax.ShapeDtypeStruct(
+            (batch, nheads, st.headdim, st.d_state), jnp.float32),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {k: jnp.zeros(v.shape, v.dtype)
+            for k, v in mamba_cache_spec(cfg, batch, dtype).items()}
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d.  xbc: (B,S,C), w: (K,C), history: (B,K-1,C)."""
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([history, xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(k):  # k is tiny (4); unrolled shifts beat conv_general here
+        out = out + xp[:, i:i + xbc.shape[1]] * w[i]
+    return out + b
+
+
+def mamba_mixer(
+    params: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # (B, S, D)
+    recipe: MatmulRecipe,
+    *,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    decode: bool = False,
+    unroll: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Mamba2 block.  Training: cache=None.  Prefill: cache returned.
+    Decode: S==1, cache consumed and updated."""
+    st, d_inner, nheads, conv_dim = _dims(cfg)
+    b, s, _ = x.shape
+    gn = st.n_groups * st.d_state
+
+    z = qlinear(x, params["in_z"], recipe)
+    xr = qlinear(x, params["in_x"], recipe)
+    br = qlinear(x, params["in_b"], recipe)
+    cr = qlinear(x, params["in_c"], recipe)
+    dt_raw = qlinear(x, params["in_dt"], recipe)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    if decode:
+        assert cache is not None and s == 1
+        xbc = jnp.concatenate([xr, br, cr], axis=-1)
+        hist = cache["conv"].astype(xbc.dtype)
+        cw = jnp.concatenate([params["conv_wx"], params["conv_wb"],
+                              params["conv_wc"]], axis=-1)
+        cb = jnp.concatenate([params["conv_bx"], params["conv_bb"],
+                              params["conv_bc"]], axis=-1)
+        xbc_c = _causal_conv(xbc, cw, cb, hist)
+        new_conv = jnp.concatenate([hist, xbc], axis=1)[:, 1:]
+        xbc_c = silu(xbc_c)
+        xs = xbc_c[..., :d_inner].reshape(b, nheads, st.headdim)
+        bmat = xbc_c[..., d_inner:d_inner + gn].reshape(
+            b, st.n_groups, st.d_state)
+        cmat = xbc_c[..., d_inner + gn:].reshape(b, st.n_groups, st.d_state)
+        rep = nheads // st.n_groups
+        bh = jnp.repeat(bmat, rep, axis=1).astype(jnp.float32)
+        chh = jnp.repeat(cmat, rep, axis=1).astype(jnp.float32)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                             + params["dt_bias"])            # (b,h)
+        dA = jnp.exp(dt * a)                                  # (b,h)
+        upd = jnp.einsum("bhp,bhn->bhpn",
+                         xs.astype(jnp.float32) * dt[..., None], bh)
+        state = cache["state"] * dA[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", chh, state)
+        y = y + params["d_skip"][:, None] * xs.astype(jnp.float32)
+        y = y.reshape(b, 1, d_inner).astype(x.dtype)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": state}
+    else:
+        init_state = cache["state"] if cache is not None else None
+        if cache is not None:
+            hist = cache["conv"].astype(xr.dtype)
+            hx, hb, hc = (hist[..., :d_inner],
+                          hist[..., d_inner:d_inner + gn],
+                          hist[..., d_inner + gn:])
+        else:
+            hx = hb = hc = None
+        # per-segment depthwise convs: identical math to the fused conv,
+        # but each segment keeps its own sharding (no mid-shard slicing)
+        x_c = silu(_causal_conv(xr, params["conv_wx"], params["conv_bx"],
+                                hx))
+        b_c = silu(_causal_conv(br, params["conv_wb"], params["conv_bb"],
+                                hb))
+        c_c = silu(_causal_conv(cr, params["conv_wc"], params["conv_bc"],
+                                hc))
+        xs = x_c.reshape(b, s, nheads, st.headdim)
+        bmat = b_c.reshape(b, s, st.n_groups, st.d_state)
+        cmat = c_c.reshape(b, s, st.n_groups, st.d_state)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+        xs = shard_hint(xs, ("batch", "seq", "mamba_heads", None))
+        # pad to a chunk multiple
+        chunk = min(st.chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, final_state = ssd_chunked(xs, dt, a, bmat, cmat, chunk=chunk,
+                                     initial_state=init_state, unroll=unroll)
+        y = y[:, :s].astype(jnp.float32)
+        y = y + params["d_skip"][:, None] * xs[:, :s].astype(jnp.float32)
+        y = y.reshape(b, s, d_inner).astype(x.dtype)
+        new_cache = None
+        if cache is not None:  # prefill: produce decode cache
+            xbc = jnp.concatenate([xr, br, cr], axis=-1)
+            tail = xbc[:, -(st.d_conv - 1):]
+            pad_t = st.d_conv - 1 - tail.shape[1]
+            if pad_t > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad_t, 0), (0, 0)))
+            new_cache = {"conv": tail.astype(cache["conv"].dtype),
+                         "state": final_state}
+
+    y = rms_norm(y * silu(z), params["norm_scale"])
+    return qlinear(y, params["out_proj"], recipe), new_cache

@@ -1,0 +1,313 @@
+"""Unified decoder-layer stack: attn/mamba mixers, dense/MoE FFNs, cross-attn.
+
+One ``Layer`` = pre-norm mixer sublayer (+ optional cross-attn sublayer)
+(+ optional FFN sublayer), covering every assigned architecture:
+
+  dense LMs        : attn + dense FFN
+  MoE LMs          : attn + MoE FFN
+  VLM              : attn (+ cross every k) + dense FFN
+  whisper decoder  : attn + cross + dense FFN
+  mamba2           : mamba (no FFN)
+  jamba            : {attn|mamba by period} + {dense|MoE alternating}
+
+Stacking strategies:
+  * ``scan_layers=True``  : lax.scan over repeating groups (small HLO, used
+    by the multi-pod dry-run and training);
+  * ``scan_layers=False`` : python-loop unroll (exact cost_analysis for the
+    roofline pass).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _checkpoint(fn, cfg):
+    """cfg.remat_policy: 'full' (recompute everything), 'dots' (save matmul
+    outputs — trades activation memory for the remat FLOPs), 'none'."""
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.recipe import PrecisionRecipe
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.nn.layers import apply_norm, shard_hint
+from repro.nn.params import ParamSpec
+
+__all__ = ["layer_param_specs", "stack_param_specs", "run_stack",
+           "stack_cache_spec", "init_stack_cache"]
+
+
+def _norm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = {"scale": ParamSpec((cfg.d_model,), ("embed",), init="zeros")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamSpec((cfg.d_model,), ("embed",), init="zeros")
+    return d
+
+
+def layer_param_specs(cfg: ModelConfig, spec: LayerSpec,
+                      *, causal: bool = True,
+                      kv_dim: Optional[int] = None) -> Dict[str, Any]:
+    p: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        p["mixer_norm"] = _norm_specs(cfg)
+        p["mixer"] = attn_lib.attn_param_specs(cfg)
+    else:
+        p["mixer_norm"] = _norm_specs(cfg)
+        p["mixer"] = ssm_lib.mamba_param_specs(cfg)
+    if spec.cross:
+        p["cross_norm"] = _norm_specs(cfg)
+        p["cross"] = attn_lib.cross_attn_param_specs(cfg, kv_dim)
+        # learned gate (llama-3.2-vision style): cross output ramps in from 0
+        p["cross_gate"] = ParamSpec((1,), (None,), init="zeros",
+                                    dtype=jnp.float32)
+    if spec.ffn == "dense":
+        p["ffn_norm"] = _norm_specs(cfg)
+        p["ffn"] = mlp_lib.mlp_param_specs(cfg)
+    elif spec.ffn == "moe":
+        p["ffn_norm"] = _norm_specs(cfg)
+        p["ffn"] = moe_lib.moe_param_specs(cfg)
+    return p
+
+
+def _stack_specs(tree, n: int, axis_name: Optional[str] = "layers"):
+    """Add a leading (n, ...) dim to every ParamSpec in the tree."""
+    def bump(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init,
+                         s.scale, s.dtype)
+    return jax.tree.map(bump, tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_param_specs(cfg: ModelConfig, *, causal: bool = True,
+                      kv_dim: Optional[int] = None,
+                      specs: Optional[List[LayerSpec]] = None
+                      ) -> Dict[str, Any]:
+    """Specs for the whole stack.
+
+    scan mode:   {'groups': stacked specs of one period-group}
+    unroll mode: {'layers': [per-layer specs]}
+    """
+    specs = specs if specs is not None else cfg.layer_specs()
+    if not cfg.scan_layers:
+        return {"layers": [layer_param_specs(cfg, s, causal=causal,
+                                             kv_dim=kv_dim) for s in specs]}
+    period = _period(specs)
+    n_groups = len(specs) // period
+    group = {f"l{i:02d}": layer_param_specs(cfg, specs[i], causal=causal,
+                                            kv_dim=kv_dim)
+             for i in range(period)}
+    return {"groups": _stack_specs(group, n_groups)}
+
+
+def _period(specs: List[LayerSpec]) -> int:
+    n = len(specs)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(specs[i] == specs[i % p] for i in range(n)):
+            return p
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache_spec(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                      max_len: int, dtype):
+    c: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        c["self"] = attn_lib.attn_cache_spec(cfg, batch, max_len, dtype)
+    else:
+        c["self"] = ssm_lib.mamba_cache_spec(cfg, batch, dtype)
+    if spec.cross:
+        hd = cfg.resolved_head_dim
+        n_kv = cfg.n_kv_heads
+        n_cross = (cfg.n_patches if cfg.family == "vlm" else cfg.n_frames)
+        c["cross"] = {
+            "k": jax.ShapeDtypeStruct((batch, n_cross, n_kv, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, n_cross, n_kv, hd), dtype),
+        }
+    return c
+
+
+def stack_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16,
+                     specs: Optional[List[LayerSpec]] = None):
+    """ShapeDtypeStruct cache pytree matching run_stack's cache layout."""
+    specs = specs if specs is not None else cfg.layer_specs()
+    if not cfg.scan_layers:
+        return {"layers": [_layer_cache_spec(cfg, s, batch, max_len, dtype)
+                           for s in specs]}
+    period = _period(specs)
+    n_groups = len(specs) // period
+
+    def bump(s):
+        return jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype)
+
+    group = {f"l{i:02d}": _layer_cache_spec(cfg, specs[i], batch, max_len,
+                                            dtype)
+             for i in range(period)}
+    return {"groups": jax.tree.map(bump, group)}
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16,
+                     specs: Optional[List[LayerSpec]] = None):
+    spec_tree = stack_cache_spec(cfg, batch, max_len, dtype, specs)
+
+    def mk(s: jax.ShapeDtypeStruct):
+        return jnp.zeros(s.shape, s.dtype)
+
+    cache = jax.tree.map(mk, spec_tree)
+    # attention position slots start at -1 (= unwritten)
+    def fix_pos(path, leaf):
+        if path[-1].key == "pos":
+            return jnp.full(leaf.shape, -1, jnp.int32)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix_pos, cache)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, recipe:
+               PrecisionRecipe, x, *, positions, cross_states, cache,
+               cache_len, decode, causal=True):
+    """One layer.  Returns (x, new_cache)."""
+    new_cache: Dict[str, Any] = {}
+    h = apply_norm(params["mixer_norm"], x, cfg.norm)
+    if spec.mixer == "attn":
+        out, c = attn_lib.attention(
+            params["mixer"], cfg, h, recipe.attn_linear,
+            positions=positions,
+            cache=None if cache is None else cache["self"],
+            cache_len=cache_len, causal=causal)
+    else:
+        out, c = ssm_lib.mamba_mixer(
+            params["mixer"], cfg, h, recipe.ffn_linear,
+            cache=None if cache is None else cache["self"],
+            decode=decode, unroll=not cfg.scan_layers)
+    if cache is not None:
+        new_cache["self"] = c if c is not None else cache["self"]
+    x = x + out
+
+    if spec.cross:
+        h = apply_norm(params["cross_norm"], x, cfg.norm)
+        cc = cache.get("cross") if (cache is not None and decode) else None
+        out, ccache = attn_lib.cross_attention(
+            params["cross"], cfg, h, recipe.attn_linear,
+            kv_states=cross_states, cache=cc)
+        gate = jnp.tanh(params["cross_gate"].astype(jnp.float32))
+        x = x + (out.astype(jnp.float32) * gate).astype(x.dtype)
+        if cache is not None:
+            new_cache["cross"] = ccache
+
+    if spec.ffn == "dense":
+        h = apply_norm(params["ffn_norm"], x, cfg.norm)
+        x = x + mlp_lib.mlp(params["ffn"], cfg, h, recipe.ffn_linear)
+    elif spec.ffn == "moe":
+        h = apply_norm(params["ffn_norm"], x, cfg.norm)
+        out, aux = moe_lib.moe(params["ffn"], cfg, h, recipe.ffn_linear)
+        x = x + out
+        new_cache["_moe_aux"] = aux  # surfaced via cache slot in unroll mode
+    x = shard_hint(x, ("batch", "seq", "embed"))
+    return x, (new_cache if cache is not None else new_cache)
+
+
+def run_stack(params, cfg: ModelConfig, recipe: PrecisionRecipe,
+              x: jnp.ndarray, *,
+              positions: Optional[jnp.ndarray] = None,
+              cross_states: Optional[jnp.ndarray] = None,
+              cache=None, cache_len=None, decode: bool = False,
+              specs: Optional[List[LayerSpec]] = None,
+              causal: bool = True):
+    """Run the full layer stack.
+
+    Returns (x, new_cache_or_None, aux_losses: dict of scalars).
+    """
+    specs = specs if specs is not None else cfg.layer_specs()
+    aux_total: Dict[str, jnp.ndarray] = {}
+
+    def add_aux(aux):
+        for k, v in aux.items():
+            aux_total[k] = aux_total.get(k, 0.0) + v
+
+    if not cfg.scan_layers:
+        layer_params = params["layers"]
+        layer_caches = (cache["layers"] if cache is not None
+                        else [None] * len(specs))
+        new_caches = []
+        for i, spec in enumerate(specs):
+            fn = functools.partial(
+                _run_layer, cfg=cfg, spec=spec, recipe=recipe,
+                positions=positions, cross_states=cross_states,
+                cache_len=cache_len, decode=decode, causal=causal)
+            if cfg.remat and cfg.remat_policy != "none" and cache is None:
+                ckpt = _checkpoint(
+                    lambda p, y, _fn=fn: _fn(p, x=y, cache=None), cfg)
+                x, c = ckpt(layer_params[i], x)
+            else:
+                x, c = fn(layer_params[i], x=x, cache=layer_caches[i])
+            if isinstance(c, dict) and "_moe_aux" in c:
+                add_aux(c.pop("_moe_aux"))
+            new_caches.append(c)
+        new_cache = ({"layers": new_caches} if cache is not None else None)
+        return x, new_cache, aux_total
+
+    # --- scan mode ---
+    period = _period(specs)
+    n_groups = len(specs) // period
+    gparams = params["groups"]
+    gcache = cache["groups"] if cache is not None else None
+
+    def group_body(carry, xs):
+        h, clen = carry
+        p_g, c_g = xs
+        new_c_g = {} if c_g is not None else None
+        aux_g = []
+        for i in range(period):
+            spec = specs[i]
+            pos = positions
+            if positions is not None and clen is not None:
+                pos = positions  # absolute positions already supplied
+            h, c_i = _run_layer(
+                p_g[f"l{i:02d}"], cfg, spec, recipe, h,
+                positions=pos, cross_states=cross_states,
+                cache=None if c_g is None else c_g[f"l{i:02d}"],
+                cache_len=clen, decode=decode, causal=causal)
+            if isinstance(c_i, dict) and "_moe_aux" in c_i:
+                aux_g.append(c_i.pop("_moe_aux"))
+            if new_c_g is not None:
+                new_c_g[f"l{i:02d}"] = c_i
+        aux_stacked = jax.tree.map(lambda *xs: sum(xs), *aux_g) if aux_g \
+            else {}
+        return (h, clen), (new_c_g, aux_stacked)
+
+    body = group_body
+    if cache is None:
+        body = _checkpoint(group_body, cfg)
+
+    if gcache is not None:
+        (x, _), (new_gcache, aux_scan) = jax.lax.scan(
+            body, (x, cache_len), (gparams, gcache))
+        new_cache = {"groups": new_gcache}
+    else:
+        def body_nocache(carry, p_g):
+            return body(carry, (p_g, None))
+        (x, _), (_, aux_scan) = jax.lax.scan(
+            body_nocache, (x, cache_len), gparams)
+        new_cache = None
+    if aux_scan:
+        add_aux({k: jnp.sum(v) for k, v in aux_scan.items()})
+    return x, new_cache, aux_total

@@ -1,0 +1,93 @@
+"""ParamSpec pytrees: declarative parameter shapes + logical sharding axes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_params", "param_count", "spec_shapes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor.
+
+    Attributes:
+      shape: full (unsharded) shape.
+      axes: logical axis name per dim (see distributed.sharding for the
+        logical->mesh mapping); ``None`` entries are replicated.
+      init: 'normal' (trunc-normal, fan-in scaled unless ``scale``),
+        'zeros', 'ones', 'embed' (normal, scale 1/sqrt(d)), 'a_log'
+        (mamba A init), 'const'.
+      scale: stddev override for 'normal'/'embed', value for 'const'.
+      dtype: parameter dtype; defaults to the init call's dtype.
+    """
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"
+    scale: Optional[float] = None
+    dtype: Optional[Any] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key: jax.Array, spec: ParamSpec, dtype) -> jnp.ndarray:
+    dt = spec.dtype or dtype
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(shape, dt)
+    if spec.init == "const":
+        return jnp.full(shape, spec.scale, dt)
+    if spec.init == "a_log":
+        # Mamba2 A in [1, 16), stored as log.
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dt)
+    if spec.init == "dt_bias":
+        # Mamba2 dt init: softplus(dt_bias) ~ LogUniform[1e-3, 1e-1].
+        lo, hi = np.log(1e-3), np.log(1e-1)
+        dt_val = jnp.exp(jax.random.uniform(key, shape, jnp.float32, lo, hi))
+        dt_val = jnp.maximum(dt_val, 1e-4)
+        return (dt_val + jnp.log(-jnp.expm1(-dt_val))).astype(dt)
+    if spec.init in ("normal", "embed"):
+        if spec.scale is not None:
+            std = spec.scale
+        elif spec.init == "embed":
+            std = 1.0 / np.sqrt(shape[-1])
+        else:
+            # fan-in scaled: last-but-one dim is the reduction dim for
+            # (in, out) weight matrices; stacked layers add leading dims.
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / np.sqrt(fan_in)
+        x = jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+        return (x * std).astype(dt)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(key: jax.Array, specs, dtype=jnp.float32):
+    """Initialize a pytree of arrays from a pytree of ParamSpec."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def spec_shapes(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree matching ``init_params`` output (no alloc)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(specs) -> int:
+    """Total parameter count of a ParamSpec pytree."""
+    leaves = jax.tree.leaves(specs,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(np.prod(s.shape) for s in leaves))

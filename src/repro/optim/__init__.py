@@ -1,0 +1,21 @@
+"""Optimizers (FP32 master weights), LR schedules, clipping, compression."""
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import warmup_cosine
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compression import fp8_compress_grads, init_compression_state
+
+__all__ = ["adamw", "adafactor", "warmup_cosine", "clip_by_global_norm",
+           "global_norm", "fp8_compress_grads", "init_compression_state",
+           "get_optimizer"]
+
+
+def get_optimizer(name: str, **kw):
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        kw.pop("beta1", None)
+        kw.pop("beta2", None)
+        kw.pop("eps", None)
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

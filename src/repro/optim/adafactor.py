@@ -1,0 +1,77 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments, no momentum.
+
+Memory per parameter is ~O(rows+cols) instead of AdamW's 2x full-size FP32 —
+this is what lets the 90B/140B/398B assigned configs train on 16 GB/chip at
+256 chips (see DESIGN.md §5).  Factored over the last two dims for >=2-D
+params; full second moment for vectors.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+__all__ = ["adafactor"]
+
+
+class AdafactorState(NamedTuple):
+    count: jnp.ndarray
+    vr: Any     # row factors (or full v for 1-D params)
+    vc: Any     # col factors (zeros-dim placeholder for 1-D params)
+
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        def vr_of(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_of(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((0,), jnp.float32)
+
+        return AdafactorState(count=jnp.zeros((), jnp.int32),
+                              vr=jax.tree.map(vr_of, params),
+                              vc=jax.tree.map(vc_of, params))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        # beta2 ramps toward 1 (Shazeer & Stern eq. 7)
+        beta2 = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps))
+                cfac = jax.lax.rsqrt(vc)
+                u = g * rfac[..., None] * cfac[..., None, :]
+            else:
+                vr = beta2 * vr + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(vr)
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * pf
+            return (pf - lr * u).astype(p.dtype), vr, vc
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        is_t = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+        vr = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+        vc = jax.tree.map(lambda o: o[2], out, is_leaf=is_t)
+        return new_params, AdafactorState(count, vr, vc)
+
+    return Optimizer(init=init, update=update, name="adafactor")

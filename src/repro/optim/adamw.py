@@ -1,0 +1,65 @@
+"""AdamW with FP32 master weights (paper App. B: 'master copy ... in FP32').
+
+Minimal optax-style interface: ``opt.init(params) -> state``;
+``opt.update(grads, state, params, lr) -> (new_params, new_state)``.
+Weight decay is decoupled and skipped for 1-D params (norms, biases).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "Optimizer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+    name: str = "opt"
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(beta1: float = 0.9, beta2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(count=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(f32, params),
+                          nu=jax.tree.map(f32, params))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        b1c = 1.0 - beta1 ** count.astype(jnp.float32)
+        b2c = 1.0 - beta2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = beta1 * m + (1 - beta1) * g
+            v = beta2 * v + (1 - beta2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                step = step + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(count, mu, nu)
+
+    return Optimizer(init=init, update=update, name="adamw")

@@ -1,0 +1,55 @@
+"""FP8 error-feedback gradient compression (beyond-paper distributed trick).
+
+Large-scale data-parallel training is often ICI/DCN-bound on the gradient
+all-reduce.  Reusing the paper's quantization core, gradients are compressed
+to FP8-E4M3 (per-tensor scale) before the cross-replica reduction, with the
+quantization error fed back into the next step (error feedback keeps the
+scheme unbiased in the long run; Seide et al. 2014, Karimireddy et al. 2019).
+
+Two entry points:
+  * ``fp8_compress_grads`` — numerics-level hook used inside train_step
+    (models the compressed all-reduce; works under GSPMD where the reduction
+    itself is implicit in backward).
+  * ``compressed_psum`` — explicit shard_map collective for the manual-DP
+    path: quantize -> psum over the data axes -> dequantize.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantSpec, qdq
+
+__all__ = ["init_compression_state", "fp8_compress_grads", "compressed_psum"]
+
+_SPEC = QuantSpec("fp8_e4m3", "tensor")
+
+
+def init_compression_state(grads_like) -> Any:
+    """Error-feedback residual, same pytree/f32 as the gradients."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def _compress_one(g: jnp.ndarray, r: jnp.ndarray):
+    gf = g.astype(jnp.float32) + r
+    g2d = gf.reshape(-1, gf.shape[-1]) if gf.ndim > 1 else gf.reshape(1, -1)
+    q = qdq(g2d, _SPEC, reduction_axis=1).reshape(gf.shape)
+    return q.astype(g.dtype), gf - q
+
+
+def fp8_compress_grads(grads, residuals) -> Tuple[Any, Any]:
+    """Returns (compressed grads, new residuals)."""
+    out = jax.tree.map(_compress_one, grads, residuals)
+    is_t = lambda x: isinstance(x, tuple)
+    comp = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+    res = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+    return comp, res
+
+
+def compressed_psum(x: jnp.ndarray, axis_name) -> jnp.ndarray:
+    """FP8-quantize then psum (for shard_map manual-DP reductions)."""
+    x2d = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    q = qdq(x2d, _SPEC, reduction_axis=1).reshape(x.shape)
+    return jax.lax.psum(q, axis_name)

@@ -1,0 +1,22 @@
+"""LR schedule from the paper (App. B): linear warmup (0.15% of steps) then
+cosine decay to 10% of peak."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(peak_lr: float, total_steps: int,
+                  warmup_frac: float = 0.0015, min_frac: float = 0.1):
+    warmup = max(int(total_steps * warmup_frac), 1)
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (step + 1) / warmup
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                     0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return lr

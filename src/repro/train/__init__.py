@@ -1,0 +1,7 @@
+"""Training loop, train/serve steps, fault-tolerant trainer."""
+from repro.train.train_step import make_train_step, make_eval_step
+from repro.train.trainer import Trainer, TrainState
+from repro.train.serve import generate, make_decode_fn, make_prefill_fn
+
+__all__ = ["make_train_step", "make_eval_step", "Trainer", "TrainState",
+           "generate", "make_decode_fn", "make_prefill_fn"]

@@ -1,0 +1,56 @@
+"""Batched serving: prefill + greedy/temperature decode loops."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.recipe import PrecisionRecipe, RECIPES
+from repro.models.model import Model
+
+__all__ = ["make_prefill_fn", "make_decode_fn", "generate"]
+
+
+def make_prefill_fn(model: Model, recipe: PrecisionRecipe, *, jit=True):
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache, recipe)
+    return jax.jit(prefill) if jit else prefill
+
+
+def make_decode_fn(model: Model, recipe: PrecisionRecipe, *, jit=True):
+    def decode(params, token, cache):
+        return model.decode_step(params, token, cache, recipe)
+    return jax.jit(decode, donate_argnums=(2,)) if jit else decode
+
+
+def generate(model: Model, params, prompts: jnp.ndarray, *,
+             max_new_tokens: int = 32,
+             recipe: Optional[PrecisionRecipe] = None,
+             extras: Optional[Dict[str, jnp.ndarray]] = None,
+             temperature: float = 0.0,
+             key: Optional[jax.Array] = None,
+             jit: bool = True) -> jnp.ndarray:
+    """Greedy (or sampled) generation.  prompts: (B, S) int32 -> (B, S+N)."""
+    recipe = recipe or RECIPES["bf16"]
+    b, s = prompts.shape
+    cache = model.init_cache(b, s + max_new_tokens)
+    batch = dict(extras or {}, tokens=prompts)
+    prefill = make_prefill_fn(model, recipe, jit=jit)
+    decode = make_decode_fn(model, recipe, jit=jit)
+    logits, cache = prefill(params, batch, cache)
+
+    toks = [prompts]
+    cur = None
+    for i in range(max_new_tokens):
+        lg = logits[:, -1].astype(jnp.float32)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(sub, lg / temperature)[:, None]
+        else:
+            cur = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+        toks.append(cur)
+        if i < max_new_tokens - 1:
+            logits, cache = decode(params, cur, cache)
+    return jnp.concatenate(toks, axis=1)

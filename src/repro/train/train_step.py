@@ -1,0 +1,105 @@
+"""jit-able train/eval steps: loss, grad-accum, clip, compression, update.
+
+The precision recipe is baked into the compiled graph (it changes the math),
+so the trainer holds one compiled step per active recipe — switching at the
+§3.3 schedule boundary is a Python-level swap, not a recompile of anything
+else.  ``step`` is a traced scalar so the LR schedule lives inside the graph.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core.recipe import PrecisionRecipe
+from repro.models.model import Model
+from repro.optim import (clip_by_global_norm, fp8_compress_grads,
+                         get_optimizer, warmup_cosine)
+
+__all__ = ["make_train_step", "make_eval_step", "make_optimizer"]
+
+
+def make_optimizer(model: Model, tcfg: TrainConfig):
+    return get_optimizer(
+        model.cfg.optimizer, weight_decay=tcfg.weight_decay,
+        beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps)
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], k: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        return x.reshape(k, b // k, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig,
+                    recipe: PrecisionRecipe, *,
+                    jit: bool = True,
+                    donate: bool = True,
+                    in_shardings=None, out_shardings=None):
+    """Returns train_step(params, opt_state, comp_state, batch, step)
+    -> (params, opt_state, comp_state, metrics)."""
+    opt = make_optimizer(model, tcfg)
+    lr_fn = warmup_cosine(tcfg.learning_rate, tcfg.total_steps,
+                          tcfg.warmup_frac, tcfg.min_lr_frac)
+    use_compression = tcfg.grad_compression == "fp8"
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, recipe)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            mbs = _split_microbatches(batch, tcfg.microbatch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (g, loss_sum), metrics = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32)), mbs)
+            k = tcfg.microbatch
+            grads = jax.tree.map(lambda x: x / k, g)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+            metrics["loss"] = loss_sum / k
+            return grads, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def train_step(params, opt_state, comp_state, batch, step):
+        grads, metrics = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        if use_compression:
+            grads, comp_state = fp8_compress_grads(grads, comp_state)
+        lr = lr_fn(step)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt_state, comp_state, metrics
+
+    if not jit:
+        return train_step
+    kw = {}
+    if in_shardings is not None:
+        kw["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kw["out_shardings"] = out_shardings
+    return jax.jit(train_step,
+                   donate_argnums=(0, 1, 2) if donate else (), **kw)
+
+
+def make_eval_step(model: Model, recipe: PrecisionRecipe, *, jit=True):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, recipe)
+        return metrics
+    return jax.jit(eval_step) if jit else eval_step

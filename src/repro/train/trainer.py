@@ -1,0 +1,189 @@
+"""Fault-tolerant training loop with the paper's two-stage schedule.
+
+Responsibilities:
+  * target-precision schedule (§3.3): low-precision step graph for stage 1,
+    high-precision graph for the final 5-10% of steps;
+  * checkpoint/restart: atomic step-indexed checkpoints of params + optimizer
+    + compression residuals + step; index-addressed data needs no iterator
+    state — ``resume()`` continues bit-exact (tested);
+  * straggler monitoring: per-step wall-time EMA outlier detection with a
+    pluggable action (on a real cluster: trigger hot-spare swap / skip-host);
+  * eval + metrics history.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.core.recipe import PrecisionRecipe, RECIPES
+from repro.core.schedule import TargetPrecisionSchedule
+from repro.models.model import Model
+from repro.optim import init_compression_state
+from repro.train.train_step import make_optimizer, make_train_step
+
+__all__ = ["Trainer", "TrainState", "StepTimeMonitor"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    comp_state: Any
+    step: int
+
+
+class StepTimeMonitor:
+    """EMA-based straggler detector (distributed-runtime hook)."""
+
+    def __init__(self, factor: float = 2.5, warmup: int = 5,
+                 action: Optional[Callable[[int, float, float], None]] = None):
+        self.factor = factor
+        self.warmup = warmup
+        self.ema: Optional[float] = None
+        self.n = 0
+        self.flagged: List[int] = []
+        self.action = action
+
+    def record(self, step: int, dt: float) -> bool:
+        self.n += 1
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_straggler = (self.n > self.warmup
+                        and dt > self.factor * self.ema)
+        if is_straggler:
+            self.flagged.append(step)
+            if self.action:
+                self.action(step, dt, self.ema)
+        # EMA updated with clipped dt so one outlier doesn't poison it.
+        self.ema = 0.9 * self.ema + 0.1 * min(dt, 3 * self.ema)
+        return is_straggler
+
+
+class Trainer:
+    def __init__(self, model: Model, tcfg: TrainConfig,
+                 pipeline, *, jit: bool = True,
+                 eval_pipeline=None):
+        self.model = model
+        self.tcfg = tcfg
+        self.pipeline = pipeline
+        self.eval_pipeline = eval_pipeline
+        self.recipe: PrecisionRecipe = RECIPES[tcfg.recipe]
+        self.schedule = TargetPrecisionSchedule(self.recipe,
+                                                tcfg.total_steps)
+        self._steps: Dict[str, Callable] = {}
+        self._jit = jit
+        self.monitor = StepTimeMonitor()
+        self.history: List[Dict[str, float]] = []
+        self.ckpt: Optional[CheckpointManager] = None
+        if tcfg.checkpoint_every and tcfg.checkpoint_dir:
+            self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
+                                          keep=tcfg.keep_checkpoints,
+                                          async_save=tcfg.async_checkpoint)
+
+    # ------------------------------------------------------------------
+
+    def init_state(self, seed: Optional[int] = None) -> TrainState:
+        key = jax.random.PRNGKey(self.tcfg.seed if seed is None else seed)
+        params = self.model.init(key, jnp.float32)
+        opt = make_optimizer(self.model, self.tcfg)
+        opt_state = opt.init(params)
+        comp_state = (init_compression_state(params)
+                      if self.tcfg.grad_compression == "fp8" else
+                      jnp.zeros((), jnp.float32))
+        return TrainState(params, opt_state, comp_state, 0)
+
+    def _step_fn(self, recipe: PrecisionRecipe) -> Callable:
+        if recipe.name not in self._steps:
+            self._steps[recipe.name] = make_train_step(
+                self.model, self.tcfg, recipe, jit=self._jit, donate=False)
+        return self._steps[recipe.name]
+
+    # ------------------------------------------------------------------
+
+    def resume(self) -> Optional[TrainState]:
+        """Restore latest intact checkpoint, or None if there is none."""
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return None
+        ref = self.init_state()
+        tree = {"params": ref.params, "opt_state": ref.opt_state,
+                "comp_state": ref.comp_state}
+        restored, extra = self.ckpt.restore(tree)
+        return TrainState(restored["params"], restored["opt_state"],
+                          restored["comp_state"], int(extra["step"]))
+
+    def save(self, state: TrainState) -> None:
+        if self.ckpt is None:
+            return
+        tree = {"params": state.params, "opt_state": state.opt_state,
+                "comp_state": state.comp_state}
+        self.ckpt.save(state.step, tree,
+                       extra={"recipe": self.recipe.name})
+
+    # ------------------------------------------------------------------
+
+    def train(self, state: Optional[TrainState] = None,
+              num_steps: Optional[int] = None,
+              log: Optional[Callable[[str], None]] = None) -> TrainState:
+        state = state or (self.resume() or self.init_state())
+        total = self.tcfg.total_steps
+        end = min(total, state.step + (num_steps or total))
+        log = log or (lambda s: None)
+        while state.step < end:
+            step = state.step
+            recipe = self.schedule.recipe_at(step)
+            if self.schedule.is_switch_boundary(step):
+                log(f"[schedule] step {step}: switching to target precision "
+                    f"({self.schedule.target_recipe.name})")
+            fn = self._step_fn(recipe)
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.pipeline.batch(step).items()}
+            t0 = time.time()
+            params, opt_state, comp_state, metrics = fn(
+                state.params, state.opt_state, state.comp_state, batch,
+                jnp.asarray(step, jnp.int32))
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            if self.monitor.record(step, dt):
+                log(f"[straggler] step {step} took {dt:.2f}s "
+                    f"(ema {self.monitor.ema:.2f}s)")
+            state = TrainState(params, opt_state, comp_state, step + 1)
+            row = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            row["step"] = step
+            row["recipe"] = recipe.name
+            row["dt"] = dt
+            self.history.append(row)
+            if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                log(f"step {step:5d} loss {row['loss']:.4f} "
+                    f"gnorm {row['grad_norm']:.3f} lr {row['lr']:.2e} "
+                    f"[{recipe.name}] {dt*1000:.0f}ms")
+            if (self.ckpt is not None and self.tcfg.checkpoint_every
+                    and (step + 1) % self.tcfg.checkpoint_every == 0):
+                self.save(state)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return state
+
+    # ------------------------------------------------------------------
+
+    def evaluate(self, state: TrainState, n_batches: int = 8,
+                 recipe: Optional[PrecisionRecipe] = None) -> Dict[str, float]:
+        from repro.train.train_step import make_eval_step
+        recipe = recipe or RECIPES["bf16"]
+        pipeline = self.eval_pipeline or self.pipeline
+        fn = make_eval_step(self.model, recipe, jit=self._jit)
+        losses = []
+        for i in range(n_batches):
+            batch = {k: jnp.asarray(v)
+                     for k, v in pipeline.batch(10_000_000 + i).items()}
+            m = fn(state.params, batch)
+            losses.append(float(np.asarray(m["loss"])))
+        val_loss = float(np.mean(losses))
+        return {"val_loss": val_loss, "val_ppl": float(np.exp(val_loss))}

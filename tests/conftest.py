@@ -1,0 +1,24 @@
+import os
+
+# Tests run single-device (the dry-run alone uses 512 host devices, in its
+# own process).  Keep compilation deterministic and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def assert_trees_close(a, b, rtol=1e-5, atol=1e-5):
+    import jax.numpy as jnp
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32),
+                                   rtol=rtol, atol=atol)

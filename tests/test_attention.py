@@ -1,0 +1,97 @@
+"""Chunked flash attention vs naive oracle; caches; SWA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import flash_attention_ref
+from repro.models.attention import (chunked_attention, init_attn_cache,
+                                    _update_cache)
+
+
+def _qkv(b=2, s=128, h=4, kvh=2, d=32, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kvh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kvh, d), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [16, 37, 128, 200])
+@pytest.mark.parametrize("unroll", [False, True])
+def test_chunked_matches_naive_causal(chunk, unroll):
+    q, k, v = _qkv()
+    pos = jnp.arange(128, dtype=jnp.int32)
+    out = chunked_attention(q, k, v, pos, pos, causal=True, chunk=chunk,
+                            unroll=unroll)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_noncausal_matches_naive():
+    q, k, v = _qkv()
+    pos = jnp.arange(128, dtype=jnp.int32)
+    out = chunked_attention(q, k, v, pos, pos, causal=False, chunk=32)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sliding_window_masks_far_tokens():
+    """Output at position p must not depend on keys older than the window."""
+    q, k, v = _qkv(s=64)
+    pos = jnp.arange(64, dtype=jnp.int32)
+    w = 16
+    out = chunked_attention(q, k, v, pos, pos, causal=True, window=w,
+                            chunk=16)
+    # perturb keys/values at positions < 32; outputs at p >= 48 (p - kpos
+    # >= w for all perturbed kpos) must be identical
+    k2 = k.at[:, :32].add(100.0)
+    v2 = v.at[:, :32].add(-50.0)
+    out2 = chunked_attention(q, k2, v2, pos, pos, causal=True, window=w,
+                             chunk=16)
+    np.testing.assert_allclose(np.asarray(out[:, 48:]),
+                               np.asarray(out2[:, 48:]), rtol=1e-5,
+                               atol=1e-5)
+    assert float(jnp.abs(out[:, :30] - out2[:, :30]).max()) > 0
+
+
+def test_invalid_cache_slots_are_masked():
+    """k_pos == -1 (unwritten ring slots) must contribute nothing."""
+    q, k, v = _qkv(s=32)
+    pos = jnp.arange(32, dtype=jnp.int32)
+    kpos = pos.at[20:].set(-1)
+    out = chunked_attention(q, k, v, pos, kpos, causal=True, chunk=8)
+    ref = flash_attention_ref(q[:, :], k[:, :20], v[:, :20], causal=False)
+    # compare only queries >= 19 which see all 20 valid keys causally
+    np.testing.assert_allclose(np.asarray(out[:, 19]),
+                               np.asarray(ref[:, 19]), rtol=1e-4, atol=1e-4)
+
+
+def test_fully_masked_chunk_guard():
+    """A chunk where every key is masked must not produce NaNs."""
+    q, k, v = _qkv(s=16)
+    pos = jnp.arange(16, dtype=jnp.int32)
+    kpos = jnp.full((16,), -1, jnp.int32)  # everything invalid
+    out = chunked_attention(q, k, v, pos, kpos, causal=True, chunk=4)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_ring_buffer_update_wraps():
+    from repro.configs.base import get_config
+    cfg = get_config("tiny").replace(sliding_window=8)
+    cache = init_attn_cache(cfg, batch=1, max_len=8)
+    hd = cfg.resolved_head_dim
+    for t in range(12):
+        kt = jnp.full((1, 1, cfg.n_kv_heads, hd), float(t))
+        new, k_all, v_all, kpos = _update_cache(
+            cache, kt, kt, jnp.asarray(t), cfg.sliding_window)
+        cache = new
+    # slots hold positions 4..11 (last 8), wrapped
+    assert sorted(np.asarray(cache["pos"]).tolist()) == list(range(4, 12))
+    slot_of_11 = int(np.where(np.asarray(cache["pos"]) == 11)[0][0])
+    assert slot_of_11 == 11 % 8
+    np.testing.assert_array_equal(np.asarray(cache["k"][0, slot_of_11, 0]),
+                                  11.0)

@@ -1,0 +1,55 @@
+"""Data pipeline: determinism, host sharding, learnable structure."""
+import numpy as np
+import pytest
+
+from repro.data import ByteCorpus, SyntheticLM, make_pipeline
+
+
+def test_deterministic_per_step():
+    p = SyntheticLM(256, 64, 8, seed=3)
+    a = p.batch(5)
+    b = p.batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = p.batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_targets_are_shifted_tokens():
+    p = SyntheticLM(256, 64, 4, seed=0, noise=0.0)
+    b = p.batch(0)
+    # target[i] == token[i+1] by construction of the window
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_host_sharding_partitions_batch():
+    p = SyntheticLM(256, 64, 8, seed=1)
+    h0 = p.batch(3, host_id=0, num_hosts=2)
+    h1 = p.batch(3, host_id=1, num_hosts=2)
+    assert h0["tokens"].shape == (4, 64)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_structure_is_learnable():
+    """Pattern periodicity: token[t] == token[t - period] mostly."""
+    p = SyntheticLM(256, 128, 16, seed=0, noise=0.0)
+    b = p.batch(0)["tokens"]
+    hits = 0
+    for row in b:
+        for per in range(3, 9):
+            if np.mean(row[per:] == row[:-per]) > 0.99:
+                hits += 1
+                break
+    assert hits >= 14  # nearly every row has a short period
+
+
+def test_byte_corpus_bounds():
+    p = ByteCorpus(32, 4, seed=0)
+    b = p.batch(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 256
+
+
+def test_make_pipeline_dispatch():
+    assert isinstance(make_pipeline("synthetic", 256, 32, 4), SyntheticLM)
+    assert isinstance(make_pipeline("bytes", 256, 32, 4), ByteCorpus)
+    with pytest.raises(ValueError):
+        make_pipeline("nope", 256, 32, 4)

@@ -1,0 +1,100 @@
+"""Format-grid and rounding tests (+ hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (FORMATS, FP4_E2M1, FP8_E4M3, FP8_E5M2,
+                                format_values, round_to_format)
+
+LOWBIT = ["fp4_e2m1", "fp4_e1m2", "fp6_e2m3", "fp6_e3m2", "fp8_e4m3",
+          "fp8_e5m2"]
+
+
+def test_e2m1_grid():
+    vals = np.asarray(format_values(FP4_E2M1))
+    np.testing.assert_array_equal(vals, [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0,
+                                         6.0])
+
+
+def test_e4m3_max_and_grid_size():
+    vals = np.asarray(format_values(FP8_E4M3))
+    assert vals.max() == 448.0
+    # 2^7 non-negative codes minus reserved NaN pattern (we model max=448
+    # by construction); grid must be strictly increasing
+    assert np.all(np.diff(vals) > 0)
+
+
+@pytest.mark.parametrize("name", LOWBIT)
+def test_representables_are_fixed_points(name):
+    fmt = FORMATS[name]
+    vals = format_values(fmt)
+    both = jnp.concatenate([vals, -vals])
+    out = round_to_format(both, fmt)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(both))
+
+
+@pytest.mark.parametrize("name", LOWBIT)
+def test_rounding_lands_on_grid(name):
+    fmt = FORMATS[name]
+    vals = np.asarray(format_values(fmt))
+    x = jnp.asarray(np.random.default_rng(0).uniform(
+        -2 * fmt.max_value, 2 * fmt.max_value, size=4096), jnp.float32)
+    y = np.asarray(round_to_format(x, fmt))
+    grid = np.concatenate([vals, -vals])
+    dist = np.min(np.abs(y[:, None] - grid[None, :]), axis=1)
+    assert dist.max() == 0.0
+
+
+@pytest.mark.parametrize("name", LOWBIT)
+def test_round_to_nearest(name):
+    """|x - rtn(x)| must be <= distance to every grid point."""
+    fmt = FORMATS[name]
+    vals = np.asarray(format_values(fmt))
+    grid = np.sort(np.concatenate([vals, -vals]))
+    x = np.random.default_rng(1).uniform(-fmt.max_value, fmt.max_value,
+                                         size=2048).astype(np.float32)
+    y = np.asarray(round_to_format(jnp.asarray(x), fmt))
+    best = np.min(np.abs(x[:, None] - grid[None, :]), axis=1)
+    np.testing.assert_allclose(np.abs(x - y), best, rtol=0, atol=1e-6)
+
+
+def test_clipping_saturates():
+    x = jnp.asarray([1e9, -1e9, 7.0, -6.1])
+    y = np.asarray(round_to_format(x, FP4_E2M1))
+    np.testing.assert_array_equal(y, [6.0, -6.0, 6.0, -6.0])
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_monotonicity_property(xs):
+    """RTN is monotone non-decreasing."""
+    x = jnp.asarray(sorted(xs), jnp.float32)
+    y = np.asarray(round_to_format(x, FP8_E4M3))
+    assert np.all(np.diff(y) >= 0)
+
+
+@given(st.floats(0.01, 5.9, allow_nan=False))
+@settings(max_examples=30, deadline=None)
+def test_sign_symmetry_property(v):
+    fmt = FP4_E2M1
+    a = float(round_to_format(jnp.float32(v), fmt))
+    b = float(round_to_format(jnp.float32(-v), fmt))
+    assert a == -b
+
+
+def test_stochastic_rounding_unbiased():
+    fmt = FP4_E2M1
+    x = jnp.full((20000,), 1.25, jnp.float32)  # midpoint of [1.0, 1.5]
+    key = jax.random.PRNGKey(0)
+    y = np.asarray(round_to_format(x, fmt, stochastic_key=key))
+    assert set(np.unique(y)) <= {1.0, 1.5}
+    np.testing.assert_allclose(y.mean(), 1.25, atol=0.01)
+
+
+def test_bf16_roundtrip_dtype():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,), jnp.bfloat16)
+    y = round_to_format(x, FP8_E4M3)
+    assert y.dtype == jnp.bfloat16

@@ -1,0 +1,106 @@
+"""Serving runtime: weight-only quantization, streaming prefill, batching."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.recipe import RECIPES
+from repro.models import build_model
+from repro.train.serving_runtime import (ContinuousBatcher,
+                                         quantize_weights_for_serving,
+                                         streaming_prefill)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = importlib.import_module("repro.configs.tiny").CONFIG.replace(
+        dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_weight_only_quant_keeps_logits_close(tiny):
+    cfg, model, params = tiny
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    base, _ = model.forward(params, batch, RECIPES["bf16"])
+    # random-init weights are the worst case for weight-only quant (~2^-m
+    # relative noise per layer compounds); contracts here are boundedness,
+    # fp8-closer-than-fp4 ordering, and protected-param identity.
+    for fmt, tol in (("fp8_e4m3", 1.0), ("fp4_e2m1", 3.0)):
+        qp = quantize_weights_for_serving(model, params, fmt)
+        out, _ = model.forward(qp, batch, RECIPES["bf16"])
+        err = float(jnp.abs(out - base).max())
+        assert err < tol, (fmt, err)
+        # protected params untouched
+        np.testing.assert_array_equal(
+            np.asarray(qp["final_norm"]["scale"]),
+            np.asarray(params["final_norm"]["scale"]))
+    # fp8 weight-only is strictly closer than fp4 (sanity ordering)
+    e8 = float(jnp.abs(model.forward(quantize_weights_for_serving(
+        model, params, "fp8_e4m3"), batch, RECIPES["bf16"])[0] - base).max())
+    e4 = float(jnp.abs(model.forward(quantize_weights_for_serving(
+        model, params, "fp4_e2m1"), batch, RECIPES["bf16"])[0] - base).max())
+    assert e8 < e4
+
+
+def test_streaming_prefill_matches_one_shot(tiny):
+    cfg, model, params = tiny
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 48), 0,
+                              cfg.vocab_size)
+    r = RECIPES["bf16"]
+    c1 = model.init_cache(2, 64, dtype=jnp.float32)
+    lg1, c1 = model.prefill(params, {"tokens": toks}, c1, r)
+    c2 = model.init_cache(2, 64, dtype=jnp.float32)
+    lg2, c2 = streaming_prefill(model, params, toks, c2, r, segment=16)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), rtol=1e-4,
+                               atol=1e-4)
+    assert int(c1["length"]) == int(c2["length"]) == 48
+    # decoding from both caches agrees
+    t = toks[:, -1:]
+    d1, _ = model.decode_step(params, t, c1, r)
+    d2, _ = model.decode_step(params, t, c2, r)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_streaming_prefill_mamba():
+    cfg = importlib.import_module("repro.configs.mamba2_780m").REDUCED
+    cfg = cfg.replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 64), 0,
+                              cfg.vocab_size)
+    r = RECIPES["bf16"]
+    c1 = model.init_cache(1, 80, dtype=jnp.float32)
+    lg1, _ = model.prefill(params, {"tokens": toks}, c1, r)
+    c2 = model.init_cache(1, 80, dtype=jnp.float32)
+    lg2, _ = streaming_prefill(model, params, toks, c2, r, segment=16)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_continuous_batcher_matches_sequential(tiny):
+    cfg, model, params = tiny
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (8, 12, 5, 9, 7)]
+    new = [4, 3, 5, 2, 4]
+    # reference: sequential generation per request
+    from repro.train.serve import generate
+    ref = {}
+    for i, (p, n) in enumerate(zip(prompts, new)):
+        out = generate(model, params, jnp.asarray(p[None]),
+                       max_new_tokens=n, recipe=RECIPES["bf16"], jit=False)
+        ref[i] = np.asarray(out[0, len(p):]).tolist()
+    # continuous batching with 2 slots over 5 requests
+    b = ContinuousBatcher(model, params, n_slots=2, max_len=64)
+    ids = [b.submit(p, n) for p, n in zip(prompts, new)]
+    got = b.run()
+    assert sorted(got) == sorted(ids)
+    for i in ids:
+        assert got[i] == ref[i], (i, got[i], ref[i])

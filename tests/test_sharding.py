@@ -1,0 +1,240 @@
+"""Sharding rules (divisibility/granules/conflicts) + subprocess SPMD test."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.distributed.sharding import default_rules, opt_state_shardings
+from repro.nn.params import ParamSpec
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    # 1-device (1,1) mesh: rule logic is device-count independent
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def _fake_mesh(shape, axes):
+    """Rule-evaluation-only mesh (never used to place data)."""
+    class FakeMesh:
+        def __init__(self):
+            self.shape = dict(zip(axes, shape))
+            self.axis_names = axes
+            self.size = int(np.prod(shape))
+    return FakeMesh()
+
+
+def test_divisible_dims_get_sharded():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg = get_config("nemotron-4-15b")
+    rules = default_rules(mesh, cfg)
+    spec = rules._spec(rules.param_rules, ("embed", "heads"), (6144, 6144))
+    assert spec == P("data", "model")
+
+
+def test_nondivisible_granule_replicates():
+    """llama3.2-3b: 24 heads % 16 -> heads replicated (baseline finding)."""
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg = get_config("llama3.2-3b")
+    rules = default_rules(mesh, cfg)
+    spec = rules._spec(rules.param_rules, ("embed", "heads"), (3072, 3072))
+    assert spec == P("data", None)
+
+
+def test_kv_heads_replicated_when_fewer_than_tp():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg = get_config("nemotron-4-15b")  # kv=8 < tp=16
+    rules = default_rules(mesh, cfg)
+    spec = rules._spec(rules.param_rules, ("embed", "kv_heads"),
+                       (6144, 1024))
+    assert spec == P("data", None)
+
+
+def test_odd_vocab_replicates():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg = get_config("whisper-base")  # vocab 51865 % 16 != 0
+    rules = default_rules(mesh, cfg)
+    spec = rules._spec(rules.param_rules, ("vocab", "embed"), (51865, 512))
+    assert spec == P(None, "data")
+
+
+def test_multi_pod_prefix_fallback():
+    """batch=32 over ('pod','data')=32 shards fully; batch=1 replicates."""
+    mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    rules = default_rules(mesh, get_config("tiny"))
+    s32 = rules._spec(rules.act_rules, ("batch", None), (32, 7))
+    assert s32 == P(("pod", "data"), None)
+    s1 = rules._spec(rules.act_rules, ("batch", None), (1, 7))
+    assert s1 == P(None, None)
+
+
+def test_mesh_axis_used_once():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg = get_config("olmoe-1b-7b")
+    rules = default_rules(mesh, cfg)
+    # experts and mlp both want 'model'; only the first gets it
+    spec = rules._spec(rules.param_rules, ("experts", "embed", "mlp"),
+                       (64, 2048, 1024))
+    assert spec == P("model", "data", None)
+
+
+def test_ep_vs_tp_in_expert():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    olmoe = default_rules(mesh, get_config("olmoe-1b-7b"))
+    mixtral = default_rules(mesh, get_config("mixtral-8x22b"))
+    # olmoe: 64 experts % 16 == 0 -> EP on the expert dim
+    assert olmoe._spec(olmoe.param_rules, ("experts", "embed", "mlp"),
+                       (64, 2048, 1024))[0] == "model"
+    # mixtral: 8 experts % 16 != 0 -> expert dim replicated, d_ff TP
+    s = mixtral._spec(mixtral.param_rules, ("experts", "embed", "mlp"),
+                      (8, 6144, 16384))
+    assert s == P(None, "data", "model")
+
+
+def test_opt_state_shardings_adamw(mesh1):
+    from repro.optim import adamw
+    import jax.numpy as jnp
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    opt = adamw()
+    state = opt.init(params)
+    from jax.sharding import NamedSharding
+    psh = {"w": NamedSharding(mesh1, P("data", "model")),
+           "b": NamedSharding(mesh1, P(None))}
+    osh = opt_state_shardings(state, params, psh, mesh1)
+    assert osh.mu["w"].spec == P("data", "model")
+    assert osh.count.spec == P()
+
+
+def test_opt_state_shardings_adafactor(mesh1):
+    from repro.optim import adafactor
+    import jax.numpy as jnp
+    params = {"w": jnp.zeros((8, 4)), "b": jnp.zeros((4,))}
+    state = adafactor().init(params)
+    from jax.sharding import NamedSharding
+    psh = {"w": NamedSharding(mesh1, P("data", "model")),
+           "b": NamedSharding(mesh1, P(None))}
+    osh = opt_state_shardings(state, params, psh, mesh1)
+    assert osh.vr["w"].spec == P("data")     # rows keep row sharding
+    assert osh.vc["w"].spec == P("model")    # cols keep col sharding
+
+
+DRYRUN_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, json
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.configs.base import get_config, TrainConfig, ShapeCell
+    from repro.distributed.mesh import make_mesh
+    from repro.distributed.sharding import default_rules
+    from repro.launch import specs as specs_lib
+    from repro.models import build_model
+    from repro.core.recipe import RECIPES
+    from repro.train.train_step import make_train_step
+    from repro.nn.layers import set_sharding_context
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    cfg = get_config("tiny").replace(scan_layers=True)
+    model = build_model(cfg)
+    rules = default_rules(mesh, cfg)
+    cell = ShapeCell("t", 64, 4, "train")
+    tcfg = TrainConfig(recipe="paper_fp4", total_steps=10,
+                       global_batch=4, seq_len=64)
+    fn = make_train_step(model, tcfg, RECIPES["paper_fp4"], jit=False)
+    args, shardings = specs_lib.train_inputs(model, tcfg, cell, rules)
+    set_sharding_context(rules)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+    txt = compiled.as_text()
+    n_coll = sum(txt.count(k) for k in
+                 ("all-reduce", "all-gather", "reduce-scatter"))
+    print(json.dumps({"ok": True, "collectives": n_coll,
+                      "flops": compiled.cost_analysis().get("flops", 0)}))
+""")
+
+
+def test_spmd_train_step_compiles_on_8_fake_devices():
+    """End-to-end SPMD lower+compile in a subprocess (needs its own
+    XLA_FLAGS before jax import)."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(
+                   os.path.join(os.path.dirname(__file__), "..", "src")))
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", DRYRUN_SNIPPET], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"] and res["collectives"] > 0
+
+
+ELASTIC_SNIPPET = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import get_config, TrainConfig
+    from repro.data import SyntheticLM
+    from repro.distributed.mesh import make_mesh
+    from repro.distributed.sharding import default_rules
+    from repro.distributed.elastic import choose_mesh_shape, reshard
+    from repro.models import build_model
+    from repro.core.recipe import RECIPES
+    from repro.train.train_step import make_optimizer, make_train_step
+
+    cfg = get_config("tiny")
+    model = build_model(cfg)
+    tcfg = TrainConfig(recipe="bf16", total_steps=10, global_batch=8,
+                       seq_len=32, learning_rate=1e-3)
+    pipe = SyntheticLM(cfg.vocab_size, 32, 8, seed=0)
+    step_fn = make_train_step(model, tcfg, RECIPES["bf16"], jit=True,
+                              donate=False)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer(model, tcfg)
+    opt_state = opt.init(params)
+
+    def run_step(params, opt_state, mesh, i):
+        rules = default_rules(mesh, cfg)
+        shard = rules.param_shardings(model.param_specs())
+        params = reshard(params, shard)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(i).items()}
+        with mesh:
+            p, o, _, m = step_fn(params, opt_state, jnp.zeros(()), batch,
+                                 jnp.asarray(i))
+        return p, o, float(m["loss"])
+
+    # steps 0-1 on an 8-device (2,4) mesh
+    mesh8 = make_mesh((2, 4), ("data", "model"))
+    params, opt_state, l0 = run_step(params, opt_state, mesh8, 0)
+    # "lose" 4 devices -> rescale to (1,4) over the survivors and continue
+    shape = choose_mesh_shape(4, prefer_model=4)
+    mesh4 = make_mesh(shape, ("data", "model"), devices=jax.devices()[:4])
+    params = jax.tree.map(lambda x: np.asarray(x), params)   # host round-trip
+    opt_state = jax.tree.map(lambda x: np.asarray(x), opt_state)
+    params, opt_state, l1 = run_step(params, opt_state, mesh4, 1)
+    print(json.dumps({"ok": True, "l0": l0, "l1": l1,
+                      "shape": list(shape)}))
+""")
+
+
+def test_elastic_rescale_across_device_counts():
+    """Train a step on 8 devices, lose half, reshard, keep training."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(
+                   os.path.join(os.path.dirname(__file__), "..", "src")))
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", ELASTIC_SNIPPET], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"] and res["shape"] == [1, 4]
+    assert np.isfinite(res["l0"]) and np.isfinite(res["l1"])
