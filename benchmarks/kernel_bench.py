@@ -12,11 +12,29 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
-from repro.core.qlinear import qlinear
+from repro.core.qlinear import pallas_qmatmul, qlinear, qmatmul
 from repro.core.recipe import RECIPES
 from repro.kernels.ref import fp4_matmul_ref
 from repro.models.attention import chunked_attention
 from repro.kernels.ref import flash_attention_ref
+
+
+def _bench_fused_roles(x, w, recipe, tag: str) -> None:
+    """Time the fused pallas_qmatmul path vs unfused qmatmul for all three
+    training matmuls: fwd via the primal, dgrad+wgrad via the VJP."""
+    key = jnp.zeros((2,), jnp.uint32)
+    c = jnp.ones((x.shape[0], w.shape[1]), x.dtype)
+
+    for impl_name, mm in (("qdq", qmatmul), ("pallas_fused", pallas_qmatmul)):
+        f_fwd = jax.jit(lambda a, b, mm=mm: mm(a, b, key, recipe))
+        # vjp once OUTSIDE the timed region (it runs the primal); time only
+        # the jitted pullback so the row really is dgrad+wgrad.
+        _, pullback = jax.vjp(lambda p, q: mm(p, q, key, recipe), x, w)
+        f_bwd = jax.jit(pullback)
+        emit(f"kernel/{tag}_fwd_{impl_name}", timeit(f_fwd, x, w, n=5),
+             f"impl={impl_name};role=fwd")
+        emit(f"kernel/{tag}_dgrad_wgrad_{impl_name}",
+             timeit(f_bwd, c, n=5), f"impl={impl_name};role=dgrad+wgrad")
 
 
 def run() -> None:
@@ -36,6 +54,13 @@ def run() -> None:
     f_lin = jax.jit(lambda a, b: qlinear(a, b, rcp))
     emit("kernel/qlinear_paper_fp4_512", timeit(f_lin, x, w),
          "fwd=fp4_block")
+
+    # Fused Pallas path, all three roles (interpret mode on CPU: this
+    # validates the code path and counts; TPU wall-times come from the
+    # roofline analysis).  256^3 keeps interpret-mode runtime sane.
+    xs, ws = x[:256, :256], w[:256, :256]
+    _bench_fused_roles(xs, ws, RECIPES["paper_fp4"].ffn_linear,
+                       "qmm256_ffn_paper")
 
     b, s, h, d = 2, 512, 4, 64
     ks = jax.random.split(jax.random.PRNGKey(2), 3)

@@ -68,6 +68,8 @@ class ModelConfig:
     # numerics / compile strategy
     dtype: str = "bfloat16"
     attention_impl: str = "chunked"   # chunked | pallas (TPU flash kernel)
+    linear_impl: str = "qdq"          # qdq (unfused sim) | pallas (fused
+    #                                   quantize+matmul kernel, fwd+dgrad+wgrad)
     attention_chunk: int = 1024
     scan_layers: bool = True
     unroll_attention: bool = False  # python-loop KV chunks (roofline mode)

@@ -11,7 +11,7 @@ Public API:
 from repro.core.formats import (FORMATS, FP4_E2M1, FP8_E4M3, FP8_E5M2,
                                 FloatFormat, round_to_format)
 from repro.core.quantize import QuantSpec, qdq, underflow_rate
-from repro.core.qlinear import qlinear, qmatmul
+from repro.core.qlinear import matmul_impl, pallas_qmatmul, qlinear, qmatmul
 from repro.core.recipe import (RECIPES, MatmulRecipe, PrecisionRecipe,
                                named_recipe)
 from repro.core.schedule import TargetPrecisionSchedule
@@ -19,6 +19,7 @@ from repro.core.schedule import TargetPrecisionSchedule
 __all__ = [
     "FORMATS", "FP4_E2M1", "FP8_E4M3", "FP8_E5M2", "FloatFormat",
     "round_to_format", "QuantSpec", "qdq", "underflow_rate", "qlinear",
-    "qmatmul", "RECIPES", "MatmulRecipe", "PrecisionRecipe", "named_recipe",
+    "qmatmul", "pallas_qmatmul", "matmul_impl", "RECIPES", "MatmulRecipe",
+    "PrecisionRecipe", "named_recipe",
     "TargetPrecisionSchedule",
 ]

@@ -6,10 +6,22 @@ backward matmuls each quantize their operands according to an independent
 estimation (App. B: the gradient of the quantized weight is passed to the
 master weight unchanged).
 
-The public entry point ``qlinear`` folds arbitrary leading batch dims.
-Stochastic rounding (beyond-paper option) consumes the ``key`` argument; RTN
-recipes ignore it, and passthrough (bf16) recipes lower to a single dot —
-important for clean roofline baselines.
+Two implementations share the same recipe semantics:
+
+  * ``qmatmul``        — unfused QDQ + ``lax.dot`` (simulation reference);
+  * ``pallas_qmatmul`` — fwd, dgrad and wgrad each run through the fused
+    per-group-quantize + tiled-MXU Pallas kernel
+    (``kernels.fp4_matmul.fused_qmm``), with transposed-operand variants so
+    the backward matmuls quantize relative to their own reduction axes
+    without materializing ``w^T``/``x^T`` in HBM.  Roles whose specs the
+    kernel cannot realize (stochastic rounding, fp16 clipping, non-128
+    blocks) fall back to the QDQ path for that role only.
+
+The public entry point ``qlinear`` folds arbitrary leading batch dims and
+selects the implementation via ``impl`` ('qdq' | 'pallas', threaded from
+``ModelConfig.linear_impl``).  Stochastic rounding (beyond-paper option)
+consumes the ``key`` argument; RTN recipes ignore it, and passthrough (bf16)
+recipes lower to a single dot — important for clean roofline baselines.
 
 Notes on backward quantization orientation: each backward matmul is treated
 as a first-class matmul with its own reduction axis, and operand scales are
@@ -28,7 +40,8 @@ import jax.numpy as jnp
 from repro.core.quantize import QuantSpec, qdq
 from repro.core.recipe import MatmulRecipe
 
-__all__ = ["qmatmul", "qlinear", "dot_qdq"]
+__all__ = ["qmatmul", "pallas_qmatmul", "qlinear", "dot_qdq",
+           "kernel_quant_mode", "matmul_impl"]
 
 
 def _maybe_key(key_data: Optional[jnp.ndarray], spec: QuantSpec,
@@ -86,6 +99,101 @@ def _qmatmul_bwd(recipe, res, g):
 qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
 
 
+# ---------------------------------------------------------------------------
+# Fused-kernel implementation (pallas_qmatmul)
+# ---------------------------------------------------------------------------
+
+_KERNEL_BLOCK = 128
+
+
+def kernel_quant_mode(spec: QuantSpec) -> Optional[str]:
+    """The fused kernel's quantization mode realizing ``spec``, or None.
+
+    ``pass``   bf16/fp32 passthrough roles;
+    ``block``  per-(1 x 128) groups along the reduction axis (in-kernel);
+    ``tile``   per-(128 x 128) tiles (in-kernel);
+    ``scaled`` per-token / per-tensor (amax group spans the full reduction
+               axis -> scale precomputed outside, streamed into the kernel).
+
+    None means unrealizable (stochastic rounding, fp16 clip-only codec,
+    non-128 block sizes) — the caller falls back to QDQ for that role.
+    """
+    if spec.is_passthrough:
+        return "pass"
+    if spec.stochastic or spec.fmt == "fp16":
+        return None
+    if spec.granularity in ("block", "tile"):
+        return spec.granularity if spec.block == _KERNEL_BLOCK else None
+    if spec.granularity in ("token", "tensor"):
+        return "scaled"
+    return None
+
+
+def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
+               spec_a: QuantSpec, spec_b: QuantSpec,
+               *, trans_a: bool = False, trans_b: bool = False,
+               key_data: Optional[jnp.ndarray] = None,
+               salt: int = 0) -> jnp.ndarray:
+    """One matmul role through the fused Pallas kernel when its specs are
+    kernel-realizable, else through ``dot_qdq`` (transposes materialized).
+
+    ``a``/``b`` are the STORED arrays; the effective operands are
+    ``a^T``/``b^T`` under the trans flags, and quantization granularities
+    apply in effective orientation (reduction-relative).
+    """
+    mode_a, mode_b = kernel_quant_mode(spec_a), kernel_quant_mode(spec_b)
+    if mode_a is not None and mode_b is not None:
+        # Deferred import: kernels.ops pulls in models.attention (cycle via
+        # this module at import time).
+        from repro.kernels.ops import pallas_qmm
+        return pallas_qmm(a, b, spec_a, spec_b, mode_a=mode_a, mode_b=mode_b,
+                          trans_a=trans_a, trans_b=trans_b)
+    ae = a.T if trans_a else a
+    be = b.T if trans_b else b
+    return dot_qdq(ae, be, spec_a, spec_b, key_data=key_data, salt=salt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def pallas_qmatmul(x: jnp.ndarray, w: jnp.ndarray, key_data: jnp.ndarray,
+                   recipe: MatmulRecipe) -> jnp.ndarray:
+    """``qmatmul`` with all three matmuls (fwd/dgrad/wgrad) running through
+    the fused quantize+matmul Pallas kernel.  Same signature/semantics."""
+    return _dot_fused(x, w, recipe.fwd_x, recipe.fwd_w, key_data=key_data,
+                      salt=0)
+
+
+def _pallas_qmatmul_fwd(x, w, key_data, recipe):
+    y = pallas_qmatmul(x, w, key_data, recipe)
+    return y, (x, w, key_data)
+
+
+def _pallas_qmatmul_bwd(recipe, res, g):
+    x, w, key_data = res
+    # dgrad: dx = Q(g) @ Q(w^T); reduction over N (w read transposed
+    # in-kernel via the BlockSpec index map).
+    dx = _dot_fused(g, w, recipe.dgrad_g, recipe.dgrad_w, trans_b=True,
+                    key_data=key_data, salt=2)
+    # wgrad: dw = Q(x^T) @ Q(g); reduction over M (tokens).
+    dw = _dot_fused(x, g, recipe.wgrad_x, recipe.wgrad_g, trans_a=True,
+                    key_data=key_data, salt=4)
+    return (dx.astype(x.dtype), dw.astype(w.dtype),
+            jnp.zeros_like(key_data))
+
+
+pallas_qmatmul.defvjp(_pallas_qmatmul_fwd, _pallas_qmatmul_bwd)
+
+_IMPLS = {"qdq": qmatmul, "pallas": pallas_qmatmul}
+
+
+def matmul_impl(impl: str):
+    """Resolve a ``linear_impl`` config value to its qmatmul function."""
+    try:
+        return _IMPLS[impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown linear_impl {impl!r}; have {sorted(_IMPLS)}") from None
+
+
 def _zero_key() -> jnp.ndarray:
     # NOTE: must be constructed fresh per trace (a cached global would leak
     # tracers out of scan/remat scopes); XLA constant-folds it anyway.
@@ -94,10 +202,13 @@ def _zero_key() -> jnp.ndarray:
 
 def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
             *, bias: Optional[jnp.ndarray] = None,
-            key_data: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+            key_data: Optional[jnp.ndarray] = None,
+            impl: str = "qdq") -> jnp.ndarray:
     """Linear layer over the last axis of ``x`` with per-role quantization.
 
-    ``x``: (..., K), ``w``: (K, N) -> (..., N).
+    ``x``: (..., K), ``w``: (K, N) -> (..., N).  ``impl`` selects the
+    matmul implementation ('qdq' unfused simulation | 'pallas' fused
+    kernel); passthrough recipes lower to a plain dot either way.
     """
     lead: Tuple[int, ...] = x.shape[:-1]
     k = x.shape[-1]
@@ -106,7 +217,7 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
     else:
         if key_data is None:
             key_data = _zero_key()
-        y = qmatmul(x.reshape(-1, k), w, key_data, recipe)
+        y = matmul_impl(impl)(x.reshape(-1, k), w, key_data, recipe)
     y = y.reshape(*lead, w.shape[-1])
     if bias is not None:
         y = y + bias

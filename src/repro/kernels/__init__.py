@@ -6,7 +6,13 @@
 
 Each kernel ships with ops.py (jit'd wrapper + interpret fallback on CPU)
 and ref.py (pure-jnp oracle used by the allclose test sweeps).
-"""
-from repro.kernels.ops import flash_attention, fp4_matmul, quantize_blockwise
 
-__all__ = ["flash_attention", "fp4_matmul", "quantize_blockwise"]
+``fp4_matmul`` generalizes to ``fused_qmm`` / ``pallas_qmm``: the
+role-parameterized fused quantize+matmul family backing the training path's
+fwd, dgrad and wgrad (``core.qlinear.pallas_qmatmul``).
+"""
+from repro.kernels.ops import (flash_attention, fp4_matmul, pallas_qmm,
+                               quantize_blockwise)
+
+__all__ = ["flash_attention", "fp4_matmul", "pallas_qmm",
+           "quantize_blockwise"]

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused per-block FP4/FP8 quantize + tiled MXU matmul.
+"""Pallas TPU kernels: fused per-group FP4/FP8 quantize + tiled MXU matmul.
 
 The paper's §3.2 hotspot: an FFN linear whose activations are quantized
 per-(1 x 128) along the reduction dim and whose weights are quantized
@@ -15,23 +15,51 @@ TPU the natural mapping is:
     paper; on FP4-capable hardware only the dot changes.
 
 ``block`` here equals the quantization block size AND the tile size (128).
+
+``fused_qmm`` is the role-parameterized generalization that backs all three
+training matmuls (fwd / dgrad / wgrad — see ``core.qlinear.pallas_qmatmul``):
+each operand gets an independent quantization *mode*
+
+  * ``pass``   — no quantization (bf16 passthrough roles, e.g. the paper's
+                 unquantized FFN dgrad);
+  * ``block``  — per-(1 x 128) groups along the reduction axis, scale
+                 computed in-kernel from the VMEM tile (LHS rows / RHS cols);
+  * ``tile``   — one scale per (128 x 128) tile, in-kernel;
+  * ``scaled`` — scale precomputed outside the kernel and streamed in as a
+                 rank-1 operand (per-token / per-tensor granularities whose
+                 amax group spans the whole reduction axis, so a single
+                 K-step tile cannot compute it);
+
+plus ``trans_a`` / ``trans_b`` operand transposition handled via the
+BlockSpec index maps, so dgrad ``g @ w^T`` and wgrad ``x^T @ g`` read the
+stored arrays directly (no HBM transpose) while quantizing relative to their
+own reduction axes.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import FORMATS
 
-__all__ = ["fp4_matmul", "quantize_tile"]
+__all__ = ["fp4_matmul", "fused_qmm", "quantize_tile", "compiler_params"]
 
 _EPS = 1e-12
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions; the repo
+# must run on both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kw):
+    """Version-portable ``pltpu.CompilerParams`` constructor."""
+    return _CompilerParams(**kw)
 
 
 def _round_tile(t: jnp.ndarray, fmt) -> jnp.ndarray:
@@ -55,19 +83,128 @@ def quantize_tile(tile: jnp.ndarray, fmt, *, per_row: bool) -> jnp.ndarray:
     return _round_tile(tile / scale, fmt) * scale
 
 
-def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, x_fmt, w_fmt, n_k):
+def _quant_operand(t: jnp.ndarray, fmt, mode: str, red_axis: int,
+                   scale: Optional[jnp.ndarray], pow2: bool) -> jnp.ndarray:
+    """QDQ one effective-orientation operand tile inside the kernel.
+
+    ``red_axis`` is the reduction axis of the tile (1 for LHS, 0 for RHS);
+    ``block`` groups reduce over it, ``tile`` over the whole tile, ``scaled``
+    uses the streamed-in rank-1 scale.
+
+    Dtype discipline mirrors ``core.quantize.quantize_dequantize`` exactly
+    (amax in the input dtype, scale math in f32, divide/round/rescale in
+    the input dtype) so 'qdq' and 'pallas' impls agree elementwise on the
+    quantized operands — in bf16 training too, not just f32 tests.
+    """
+    if mode == "pass":
+        return t
+    if mode == "scaled":
+        s = scale.astype(t.dtype)
+    else:
+        mag = jnp.abs(t)
+        amax = (jnp.max(mag, axis=red_axis, keepdims=True)
+                if mode == "block" else jnp.max(mag))
+        s = jnp.maximum(amax.astype(jnp.float32), _EPS) / fmt.max_value
+        if pow2:
+            s = jnp.exp2(jnp.floor(jnp.log2(s)))
+        s = s.astype(t.dtype)
+    return _round_tile(t / s, fmt) * s
+
+
+def _qmm_kernel(*refs, n_k, a_mode, b_mode, a_fmt, b_fmt, a_pow2, b_pow2,
+                trans_a, trans_b):
     """One (bm, bn) output tile step at K-step pl.program_id(2)."""
+    it = iter(refs)
+    a_ref, b_ref = next(it), next(it)
+    as_ref = next(it) if a_mode == "scaled" else None
+    bs_ref = next(it) if b_mode == "scaled" else None
+    o_ref, acc_ref = next(it), next(it)
+
     @pl.when(pl.program_id(2) == 0)
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xq = quantize_tile(x_ref[...].astype(jnp.float32), x_fmt, per_row=True)
-    wq = quantize_tile(w_ref[...].astype(jnp.float32), w_fmt, per_row=False)
-    acc_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    # Quantize in the INPUT dtype (bf16 stays bf16, matching the unfused
+    # qdq path elementwise); only the MXU dot upcasts, via its f32
+    # accumulator.
+    at = a_ref[...]
+    if trans_a:
+        at = at.T
+    bt = b_ref[...]
+    if trans_b:
+        bt = bt.T
+    aq = _quant_operand(at, a_fmt, a_mode, 1,
+                        as_ref[...] if as_ref is not None else None, a_pow2)
+    bq = _quant_operand(bt, b_fmt, b_mode, 0,
+                        bs_ref[...] if bs_ref is not None else None, b_pow2)
+    acc_ref[...] += jnp.dot(aq, bq, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "a_mode", "b_mode", "a_fmt", "b_fmt", "a_pow2", "b_pow2",
+    "trans_a", "trans_b", "block", "interpret"))
+def fused_qmm(a: jnp.ndarray, b: jnp.ndarray, *,
+              a_mode: str = "block", b_mode: str = "tile",
+              a_fmt: str = "fp4_e2m1", b_fmt: str = "fp4_e2m1",
+              a_scale: Optional[jnp.ndarray] = None,
+              b_scale: Optional[jnp.ndarray] = None,
+              a_pow2: bool = False, b_pow2: bool = False,
+              trans_a: bool = False, trans_b: bool = False,
+              block: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """y = Q(A') @ Q(B') fused in VMEM, A' = a^T if trans_a else a (same for
+    B').  Effective shapes A': (M, K), B': (K, N); all dims must be multiples
+    of ``block`` (the ops.py wrapper pads).  Returns A'.dtype (M, N).
+
+    ``a_scale`` (M, 1) / ``b_scale`` (1, N) are required exactly when the
+    matching mode is ``scaled`` (f32, already divided by the format's Q_max).
+    """
+    m, k = (a.shape[1], a.shape[0]) if trans_a else a.shape
+    kb, n = (b.shape[1], b.shape[0]) if trans_b else b.shape
+    assert k == kb, (a.shape, b.shape, trans_a, trans_b)
+    assert m % block == 0 and k % block == 0 and n % block == 0, \
+        (m, k, n, block)
+    assert (a_scale is not None) == (a_mode == "scaled")
+    assert (b_scale is not None) == (b_mode == "scaled")
+    n_k = k // block
+    fa, fb = FORMATS[a_fmt], FORMATS[b_fmt]
+
+    in_specs = [
+        pl.BlockSpec((block, block),
+                     (lambda i, j, kk: (kk, i)) if trans_a
+                     else (lambda i, j, kk: (i, kk))),
+        pl.BlockSpec((block, block),
+                     (lambda i, j, kk: (j, kk)) if trans_b
+                     else (lambda i, j, kk: (kk, j))),
+    ]
+    operands = [a, b]
+    if a_scale is not None:
+        assert a_scale.shape == (m, 1), a_scale.shape
+        in_specs.append(pl.BlockSpec((block, 1), lambda i, j, kk: (i, 0)))
+        operands.append(a_scale.astype(jnp.float32))
+    if b_scale is not None:
+        assert b_scale.shape == (1, n), b_scale.shape
+        in_specs.append(pl.BlockSpec((1, block), lambda i, j, kk: (0, j)))
+        operands.append(b_scale.astype(jnp.float32))
+
+    kernel = functools.partial(
+        _qmm_kernel, n_k=n_k, a_mode=a_mode, b_mode=b_mode, a_fmt=fa,
+        b_fmt=fb, a_pow2=a_pow2, b_pow2=b_pow2, trans_a=trans_a,
+        trans_b=trans_b)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block, n // block, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("x_fmt", "w_fmt", "block",
@@ -75,28 +212,11 @@ def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, x_fmt, w_fmt, n_k):
 def fp4_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
                x_fmt: str = "fp4_e2m1", w_fmt: str = "fp4_e2m1",
                block: int = 128, interpret: bool = False) -> jnp.ndarray:
-    """y = Q_blk(x) @ Q_tile(w), fused in VMEM.
+    """y = Q_blk(x) @ Q_tile(w), fused in VMEM (the paper's fwd FFN matmul).
 
     x: (M, K), w: (K, N); M, K, N must be multiples of ``block``
-    (the ops.py wrapper pads).  Returns x.dtype.
+    (the ops.py wrapper pads).  Returns x.dtype.  Kept as the historical
+    fwd-only entry point; a thin specialization of ``fused_qmm``.
     """
-    m, k = x.shape
-    k2, n = w.shape
-    assert k == k2 and m % block == 0 and k % block == 0 and n % block == 0
-    n_k = k // block
-    fx, fw = FORMATS[x_fmt], FORMATS[w_fmt]
-    kernel = functools.partial(_mm_kernel, x_fmt=fx, w_fmt=fw, n_k=n_k)
-    return pl.pallas_call(
-        kernel,
-        grid=(m // block, n // block, n_k),
-        in_specs=[
-            pl.BlockSpec((block, block), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block, block), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
-        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(x, w)
+    return fused_qmm(x, w, a_mode="block", b_mode="tile", a_fmt=x_fmt,
+                     b_fmt=w_fmt, block=block, interpret=interpret)

@@ -12,12 +12,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import QuantSpec, compute_scale
 from repro.kernels import fp4_matmul as _mm
 from repro.kernels import quantize as _q
 from repro.kernels import flash_attention as _fa
 from repro.models.attention import chunked_attention
 
-__all__ = ["fp4_matmul", "quantize_blockwise", "flash_attention"]
+__all__ = ["fp4_matmul", "pallas_qmm", "quantize_blockwise",
+           "flash_attention"]
 
 
 def _on_tpu() -> bool:
@@ -47,6 +49,59 @@ def fp4_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
     wp, _, n = _pad2d(w, block)
     y = _mm.fp4_matmul(xp, wp, x_fmt=x_fmt, w_fmt=w_fmt, block=block,
                        interpret=interpret)
+    return y[:m, :n]
+
+
+def _rank1_scale(eff: jnp.ndarray, spec: QuantSpec, reduction_axis: int,
+                 shape) -> jnp.ndarray:
+    """Precompute the streamed-in scale for 'scaled' kernel modes.
+
+    Per-token scales keep their vector shape; per-tensor scalars broadcast
+    to the same rank-1 layout so the kernel sees one code path.  Computed on
+    the PADDED effective operand: zero rows/cols hit the eps floor and are
+    sliced away with the output.
+    """
+    s = compute_scale(eff, spec, reduction_axis).astype(jnp.float32)
+    return jnp.broadcast_to(s.reshape((-1, 1) if shape[1] == 1 else (1, -1)),
+                            shape)
+
+
+def pallas_qmm(a: jnp.ndarray, b: jnp.ndarray,
+               spec_a: QuantSpec, spec_b: QuantSpec, *,
+               mode_a: str, mode_b: str,
+               trans_a: bool = False, trans_b: bool = False,
+               block: int = 128,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused per-role quantized matmul ``Q(A') @ Q(B')`` with padding.
+
+    ``a``/``b`` are stored arrays; ``A' = a^T`` under ``trans_a`` (same for
+    B') — the kernel reads the stored layout directly via its index maps.
+    Quantization (``mode_*`` from ``core.qlinear.kernel_quant_mode``) is
+    relative to the *effective* orientation, i.e. each backward matmul's own
+    reduction axis.  Padding semantics: zero K-padding adds nothing to the
+    dot and leaves real rows' amax groups unchanged; padded M/N rows/cols
+    quantize on the eps-floor scale path and are sliced away.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    ap, _, _ = _pad2d(a, block)
+    bp, _, _ = _pad2d(b, block)
+    # Effective shapes from the stored layout + trans flags; the transposed
+    # views are built only when a 'scaled' amax actually needs them (XLA
+    # fuses transpose+reduce, so no HBM transpose materializes even then).
+    mp = ap.shape[1] if trans_a else ap.shape[0]
+    np_ = bp.shape[0] if trans_b else bp.shape[1]
+    a_scale = (_rank1_scale(ap.T if trans_a else ap, spec_a, 1, (mp, 1))
+               if mode_a == "scaled" else None)
+    b_scale = (_rank1_scale(bp.T if trans_b else bp, spec_b, 0, (1, np_))
+               if mode_b == "scaled" else None)
+    y = _mm.fused_qmm(
+        ap, bp, a_mode=mode_a, b_mode=mode_b,
+        a_fmt=spec_a.fmt, b_fmt=spec_b.fmt,
+        a_scale=a_scale, b_scale=b_scale,
+        a_pow2=spec_a.pow2_scale, b_pow2=spec_b.pow2_scale,
+        trans_a=trans_a, trans_b=trans_b, block=block, interpret=interpret)
+    m = a.shape[1] if trans_a else a.shape[0]
+    n = b.shape[0] if trans_b else b.shape[1]
     return y[:m, :n]
 
 

@@ -8,7 +8,8 @@ import numpy as np
 from repro.core.formats import FORMATS, round_to_format
 from repro.core.quantize import QuantSpec, qdq
 
-__all__ = ["quantize_blockwise_ref", "fp4_matmul_ref", "flash_attention_ref"]
+__all__ = ["quantize_blockwise_ref", "fp4_matmul_ref", "qmm_ref",
+           "pallas_qmatmul_grads_ref", "flash_attention_ref"]
 
 
 def quantize_blockwise_ref(x: jnp.ndarray, fmt_name: str,
@@ -25,12 +26,42 @@ def fp4_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
 
     x: (M, K) quantized per-(1 x block) along K;
     w: (K, N) quantized per-(block x block) tiles;
-    accumulation in f32 (the MXU convention).
+    QDQ in the INPUT dtype (the training path's discipline — the kernel
+    matches it elementwise in bf16 too), accumulation in f32 (the MXU
+    convention).
     """
-    xq = qdq(x.astype(jnp.float32), QuantSpec(x_fmt, "block", block), 1)
-    wq = qdq(w.astype(jnp.float32), QuantSpec(w_fmt, "tile", block), 0)
+    xq = qdq(x, QuantSpec(x_fmt, "block", block), 1)
+    wq = qdq(w, QuantSpec(w_fmt, "tile", block), 0)
     return jnp.dot(xq, wq, preferred_element_type=jnp.float32
                    ).astype(x.dtype)
+
+
+def qmm_ref(a: jnp.ndarray, b: jnp.ndarray,
+            spec_a: QuantSpec, spec_b: QuantSpec, *,
+            trans_a: bool = False, trans_b: bool = False) -> jnp.ndarray:
+    """Oracle for ``kernels.ops.pallas_qmm``: unfused QDQ of the effective
+    (possibly transposed) operands + f32-accumulated dot.
+
+    Identical math to ``core.qlinear.dot_qdq`` with the transposes
+    materialized — the role-parameterized fused kernel must match this for
+    every (spec_a, spec_b) it claims to realize.
+    """
+    ae = a.T if trans_a else a
+    be = b.T if trans_b else b
+    aq = qdq(ae, spec_a, 1)
+    bq = qdq(be, spec_b, 0)
+    return jnp.dot(aq, bq, preferred_element_type=jnp.float32
+                   ).astype(a.dtype)
+
+
+def pallas_qmatmul_grads_ref(x: jnp.ndarray, w: jnp.ndarray, g: jnp.ndarray,
+                             recipe) -> tuple:
+    """Oracle for ``pallas_qmatmul``'s backward: (dx, dw) under cotangent
+    ``g``, with each backward matmul quantized per the recipe in its own
+    orientation (dgrad reduces over N, wgrad over M)."""
+    dx = qmm_ref(g, w, recipe.dgrad_g, recipe.dgrad_w, trans_b=True)
+    dw = qmm_ref(x, g, recipe.wgrad_x, recipe.wgrad_g, trans_a=True)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

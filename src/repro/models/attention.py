@@ -23,9 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.qlinear import qlinear
 from repro.core.recipe import MatmulRecipe
-from repro.nn.layers import rope, shard_hint
+from repro.nn.layers import linear, rope, shard_hint
 from repro.nn.params import ParamSpec
 
 __all__ = ["attn_param_specs", "cross_attn_param_specs", "attention",
@@ -198,9 +197,11 @@ def attention(
     if positions is None:
         positions = jnp.arange(sq, dtype=jnp.int32)
 
-    q = qlinear(x, params["wq"], recipe).reshape(b, sq, cfg.n_heads, hd)
-    k = qlinear(x, params["wk"], recipe).reshape(b, sq, cfg.n_kv_heads, hd)
-    v = qlinear(x, params["wv"], recipe).reshape(b, sq, cfg.n_kv_heads, hd)
+    q = linear(x, params["wq"], recipe, cfg).reshape(b, sq, cfg.n_heads, hd)
+    k = linear(x, params["wk"], recipe, cfg).reshape(
+        b, sq, cfg.n_kv_heads, hd)
+    v = linear(x, params["wv"], recipe, cfg).reshape(
+        b, sq, cfg.n_kv_heads, hd)
     if cfg.pos_emb == "rope":
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
@@ -231,7 +232,7 @@ def attention(
             q, k_all, v_all, positions, k_pos, causal=causal, window=window,
             chunk=cfg.attention_chunk, unroll=cfg.unroll_attention)
     out = out.reshape(b, sq, cfg.n_heads * hd)
-    return qlinear(out, params["wo"], recipe), new_cache
+    return linear(out, params["wo"], recipe, cfg), new_cache
 
 
 def cross_attention(
@@ -250,12 +251,12 @@ def cross_attention(
     """
     b, sq, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = qlinear(x, params["wq"], recipe).reshape(b, sq, cfg.n_heads, hd)
+    q = linear(x, params["wq"], recipe, cfg).reshape(b, sq, cfg.n_heads, hd)
     if cache is None:
         skv = kv_states.shape[1]
-        k = qlinear(kv_states, params["wk"], recipe).reshape(
+        k = linear(kv_states, params["wk"], recipe, cfg).reshape(
             b, skv, cfg.n_kv_heads, hd)
-        v = qlinear(kv_states, params["wv"], recipe).reshape(
+        v = linear(kv_states, params["wv"], recipe, cfg).reshape(
             b, skv, cfg.n_kv_heads, hd)
         new_cache = {"k": k, "v": v}
     else:
@@ -268,7 +269,7 @@ def cross_attention(
                             chunk=cfg.attention_chunk,
                             unroll=cfg.unroll_attention)
     out = out.reshape(b, sq, cfg.n_heads * hd)
-    return qlinear(out, params["wo"], recipe), new_cache
+    return linear(out, params["wo"], recipe, cfg), new_cache
 
 
 # ---------------------------------------------------------------------------

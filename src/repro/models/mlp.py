@@ -7,9 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.qlinear import qlinear
 from repro.core.recipe import MatmulRecipe
-from repro.nn.layers import ACTIVATIONS, shard_hint
+from repro.nn.layers import ACTIVATIONS, linear, shard_hint
 from repro.nn.params import ParamSpec
 
 __all__ = ["mlp_param_specs", "mlp"]
@@ -36,10 +35,11 @@ def mlp(params: Dict[str, jnp.ndarray], cfg: ModelConfig, x: jnp.ndarray,
     the nonlinearity stays in the compute dtype (§3.2: there is always a
     nonlinear op between linear layers that needs precise representation)."""
     if cfg.activation == "swiglu":
-        g = qlinear(x, params["w_gate"], recipe)
-        u = qlinear(x, params["w_up"], recipe)
+        g = linear(x, params["w_gate"], recipe, cfg)
+        u = linear(x, params["w_up"], recipe, cfg)
         h = ACTIVATIONS["silu"](g) * u
     else:
-        h = ACTIVATIONS[cfg.activation](qlinear(x, params["w_up"], recipe))
+        h = ACTIVATIONS[cfg.activation](
+            linear(x, params["w_up"], recipe, cfg))
     h = shard_hint(h, ("batch", "seq", "mlp"))
-    return qlinear(h, params["w_down"], recipe)
+    return linear(h, params["w_down"], recipe, cfg)

@@ -15,9 +15,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.recipe import PrecisionRecipe
-from repro.core.qlinear import qlinear
 from repro.models import stack as stack_lib
-from repro.nn.layers import apply_norm, shard_hint, sincos_positions
+from repro.nn.layers import (apply_norm, linear, shard_hint,
+                             sincos_positions)
 from repro.nn.params import ParamSpec, init_params, param_count, spec_shapes
 
 __all__ = ["Model", "build_model"]
@@ -124,7 +124,7 @@ class Model:
             w = params["embed"].astype(self._dt).T
         else:
             w = params["head"].astype(self._dt)
-        logits = qlinear(x, w, recipe.head_linear)
+        logits = linear(x, w, recipe.head_linear, cfg)
         return shard_hint(logits, ("batch", "seq", "vocab"))
 
     @property
@@ -224,7 +224,7 @@ class Model:
 
             @jax.checkpoint
             def chunk_terms(h_c, t_c):
-                logits = qlinear(h_c, w, recipe.head_linear)
+                logits = linear(h_c, w, recipe.head_linear, cfg)
                 return self._xent_terms(logits, t_c)
 
             def body(carry, xs):

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.qlinear import qmatmul
+from repro.core.qlinear import matmul_impl
 from repro.core.recipe import MatmulRecipe
 from repro.nn.layers import ACTIVATIONS, shard_hint
 from repro.nn.params import ParamSpec
@@ -43,12 +43,13 @@ def moe_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
 
 
 def _expert_linear(x: jnp.ndarray, w: jnp.ndarray,
-                   recipe: MatmulRecipe) -> jnp.ndarray:
+                   recipe: MatmulRecipe, impl: str = "qdq") -> jnp.ndarray:
     """Batched per-expert quantized matmul: (E, C, K) @ (E, K, N)."""
     if recipe.is_passthrough:
         return jnp.einsum("eck,ekn->ecn", x, w)
     key = jnp.zeros((2,), jnp.uint32)
-    return jax.vmap(lambda a, b: qmatmul(a, b, key, recipe))(x, w)
+    mm = matmul_impl(impl)
+    return jax.vmap(lambda a, b: mm(a, b, key, recipe))(x, w)
 
 
 def moe(params: Dict[str, jnp.ndarray], cfg: ModelConfig, x: jnp.ndarray,
@@ -101,14 +102,15 @@ def moe(params: Dict[str, jnp.ndarray], cfg: ModelConfig, x: jnp.ndarray,
     xin = jnp.einsum("gtec,gtd->gecd", dispatch, xg)           # (G, E, C, D)
     xin = shard_hint(xin, ("batch", "experts", None, "embed"))
     xe = xin.transpose(1, 0, 2, 3).reshape(e, n_groups * capacity, d)
+    impl = cfg.linear_impl
     if cfg.activation == "swiglu":
-        g_ = _expert_linear(xe, params["w_gate"], recipe)
-        u_ = _expert_linear(xe, params["w_up"], recipe)
+        g_ = _expert_linear(xe, params["w_gate"], recipe, impl)
+        u_ = _expert_linear(xe, params["w_up"], recipe, impl)
         h = ACTIVATIONS["silu"](g_) * u_
     else:
         h = ACTIVATIONS[cfg.activation](
-            _expert_linear(xe, params["w_up"], recipe))
-    out_e = _expert_linear(h, params["w_down"], recipe)        # (E, G*C, D)
+            _expert_linear(xe, params["w_up"], recipe, impl))
+    out_e = _expert_linear(h, params["w_down"], recipe, impl)  # (E, G*C, D)
     out_e = out_e.reshape(e, n_groups, capacity, d).transpose(1, 0, 2, 3)
     out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), out_e)
 

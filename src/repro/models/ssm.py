@@ -21,9 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.qlinear import qlinear
 from repro.core.recipe import MatmulRecipe
-from repro.nn.layers import rms_norm, shard_hint, silu
+from repro.nn.layers import linear, rms_norm, shard_hint, silu
 from repro.nn.params import ParamSpec
 
 __all__ = ["mamba_param_specs", "mamba_mixer", "mamba_cache_spec",
@@ -234,11 +233,11 @@ def mamba_mixer(
     b, s, _ = x.shape
     gn = st.n_groups * st.d_state
 
-    z = qlinear(x, params["in_z"], recipe)
-    xr = qlinear(x, params["in_x"], recipe)
-    br = qlinear(x, params["in_b"], recipe)
-    cr = qlinear(x, params["in_c"], recipe)
-    dt_raw = qlinear(x, params["in_dt"], recipe)
+    z = linear(x, params["in_z"], recipe, cfg)
+    xr = linear(x, params["in_x"], recipe, cfg)
+    br = linear(x, params["in_b"], recipe, cfg)
+    cr = linear(x, params["in_c"], recipe, cfg)
+    dt_raw = linear(x, params["in_dt"], recipe, cfg)
     a = -jnp.exp(params["a_log"].astype(jnp.float32))
 
     if decode:
@@ -316,4 +315,4 @@ def mamba_mixer(
                          "state": final_state}
 
     y = rms_norm(y * silu(z), params["norm_scale"])
-    return qlinear(y, params["out_proj"], recipe), new_cache
+    return linear(y, params["out_proj"], recipe, cfg), new_cache

@@ -7,13 +7,13 @@ makes the logical->physical sharding mapping a pure data transformation
 (``repro.distributed.sharding``).
 """
 from repro.nn.params import ParamSpec, init_params, param_count, spec_shapes
-from repro.nn.layers import (gelu, silu, relu2, layer_norm, rms_norm,
+from repro.nn.layers import (linear, gelu, silu, relu2, layer_norm, rms_norm,
                              apply_norm, rope, sincos_positions, shard_hint,
                              set_sharding_context, get_sharding_context)
 
 __all__ = [
     "ParamSpec", "init_params", "param_count", "spec_shapes",
-    "gelu", "silu", "relu2", "layer_norm", "rms_norm", "apply_norm", "rope",
-    "sincos_positions", "shard_hint", "set_sharding_context",
-    "get_sharding_context",
+    "linear", "gelu", "silu", "relu2", "layer_norm", "rms_norm",
+    "apply_norm", "rope", "sincos_positions", "shard_hint",
+    "set_sharding_context", "get_sharding_context",
 ]

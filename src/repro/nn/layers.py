@@ -1,4 +1,4 @@
-"""Stateless layer math: activations, norms, RoPE, sharding hints."""
+"""Stateless layer math: linears, activations, norms, RoPE, sharding hints."""
 from __future__ import annotations
 
 import contextlib
@@ -9,9 +9,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["gelu", "silu", "relu2", "layer_norm", "rms_norm", "apply_norm",
-           "rope", "sincos_positions", "shard_hint", "set_sharding_context",
-           "get_sharding_context"]
+from repro.core.qlinear import qlinear
+from repro.core.recipe import MatmulRecipe
+
+__all__ = ["linear", "gelu", "silu", "relu2", "layer_norm", "rms_norm",
+           "apply_norm", "rope", "sincos_positions", "shard_hint",
+           "set_sharding_context", "get_sharding_context"]
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe, cfg,
+           *, bias: Optional[jnp.ndarray] = None,
+           key_data: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Quantized linear over the last axis of ``x``, selecting the matmul
+    implementation from ``cfg.linear_impl`` ('qdq' | 'pallas').
+
+    The single call site models use for every recipe-carrying linear, so the
+    config knob reaches fwd, dgrad and wgrad of all of them.  ``cfg`` is
+    required: a call site that forgot it would otherwise silently ignore
+    the user's ``linear_impl`` setting.
+    """
+    return qlinear(x, w, recipe, bias=bias, key_data=key_data,
+                   impl=cfg.linear_impl)
 
 
 def gelu(x):

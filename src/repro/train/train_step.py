@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
+from repro.core.qlinear import matmul_impl
 from repro.core.recipe import PrecisionRecipe
 from repro.models.model import Model
 from repro.optim import (clip_by_global_norm, fp8_compress_grads,
@@ -42,7 +43,14 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                     donate: bool = True,
                     in_shardings=None, out_shardings=None):
     """Returns train_step(params, opt_state, comp_state, batch, step)
-    -> (params, opt_state, comp_state, metrics)."""
+    -> (params, opt_state, comp_state, metrics).
+
+    The model's linear layers run through ``cfg.linear_impl`` ('qdq'
+    unfused simulation | 'pallas' fused quantize+matmul kernel for
+    fwd/dgrad/wgrad); validated here so a typo'd config fails at step-build
+    time, not deep inside a jit trace.
+    """
+    matmul_impl(model.cfg.linear_impl)
     opt = make_optimizer(model, tcfg)
     lr_fn = warmup_cosine(tcfg.learning_rate, tcfg.total_steps,
                           tcfg.warmup_frac, tcfg.min_lr_frac)

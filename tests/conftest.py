@@ -10,6 +10,29 @@ import pytest
 
 jax.config.update("jax_default_matmul_precision", "highest")
 
+# hypothesis is optional (pip install -e '.[test]'): without it the
+# @given property tests skip (via requires_hypothesis) and everything else
+# still runs.  Test modules import the shim: from conftest import given, ...
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):
+        return lambda f: f
+
+    settings = given
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+requires_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
 
 @pytest.fixture
 def rng():

@@ -71,10 +71,12 @@ def test_mamba_consistency():
     _consistency("mamba2-780m", tol=5e-4)
 
 
+@pytest.mark.slow
 def test_hybrid_consistency():
     _consistency("jamba-1.5-large-398b", tol=1e-3)
 
 
+@pytest.mark.slow
 def test_vlm_consistency():
     def vis(cfg, b):
         return {"vision": jax.random.normal(
@@ -83,6 +85,7 @@ def test_vlm_consistency():
     _consistency("llama-3.2-vision-90b", extras_fn=vis, tol=5e-4)
 
 
+@pytest.mark.slow
 def test_whisper_consistency():
     def frames(cfg, b):
         return {"frames": jax.random.normal(

@@ -105,6 +105,30 @@ def test_flash_attention_grads_match_ref():
                                    rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("m,k,n", [(130, 129, 127), (1, 1, 1),
+                                   (127, 257, 383)])
+def test_fp4_matmul_padding_eps_floor_regression(m, k, n):
+    """Non-multiple-of-128 shapes in ALL three dims: ops.py zero-pads, and
+    the padded K-tail makes the weight's last (128 x 128) tile mostly (or,
+    with a zeroed-out input region, entirely) zero — quantize_tile must take
+    the _EPS-floor scale path and contribute exactly nothing, matching the
+    oracle's identically-padded blocked view."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(k))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.05
+    # Zero the real K-tail of w so the padded tile is ALL zero (pure
+    # eps-floor path), not just zero-padded.
+    if k > 128:
+        w = w.at[128:].set(0.0)
+        x = x.at[:, 128:].set(jnp.abs(x[:, 128:]) + 1.0)  # nonzero partner
+    y = fp4_matmul(x, w)
+    ref = fp4_matmul_ref(x, w)
+    assert y.shape == (m, n)
+    assert bool(jnp.isfinite(y).all())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
 def test_fp4_matmul_mixed_formats():
     """x FP8 + w FP4 (the paper's wgrad setting) also matches ref."""
     x = jax.random.normal(jax.random.PRNGKey(1), (128, 256), jnp.float32)

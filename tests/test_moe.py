@@ -88,6 +88,10 @@ def test_load_balance_loss_prefers_uniform():
     collapses routing for every token.)"""
     cfg = _cfg(k=1)  # top-1 makes the collapse fully visible
     params = init_params(jax.random.PRNGKey(0), moe_param_specs(cfg))
+    # Shrink the router logits so the baseline is actually near-uniform
+    # (at init scale the softmax skew already costs ~3x the LB floor,
+    # which made the 2x collapsed-vs-uniform margin seed-dependent).
+    params = dict(params, router=params["router"] * 0.1)
     x = jnp.abs(jax.random.normal(jax.random.PRNGKey(1),
                                   (2, 64, cfg.d_model))) + 0.5
     _, aux_uniform = moe(params, cfg, x, RECIPES["bf16"].ffn_linear)

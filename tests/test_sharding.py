@@ -162,6 +162,7 @@ DRYRUN_SNIPPET = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_spmd_train_step_compiles_on_8_fake_devices():
     """End-to-end SPMD lower+compile in a subprocess (needs its own
     XLA_FLAGS before jax import)."""
@@ -226,6 +227,7 @@ ELASTIC_SNIPPET = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_elastic_rescale_across_device_counts():
     """Train a step on 8 devices, lose half, reshard, keep training."""
     env = dict(os.environ,

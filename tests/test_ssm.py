@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# Optional-hypothesis shim lives in conftest: real @given when
+# installed, skip-marked no-ops otherwise.
+from conftest import given, requires_hypothesis, settings, st
 
 from repro.configs.base import get_config
 from repro.core.recipe import RECIPES
@@ -47,6 +50,7 @@ def test_initial_state_continuation():
                                rtol=1e-4, atol=1e-4)
 
 
+@requires_hypothesis
 @given(st.integers(0, 10_000))
 @settings(max_examples=10, deadline=None)
 def test_decay_bounded_property(seed):
