@@ -1,9 +1,13 @@
-"""Shared benchmark scaffolding: tiny-but-meaningful training runs + CSV."""
+"""Shared benchmark scaffolding: tiny-but-meaningful training runs + CSV
+rows, optionally mirrored to a machine-readable BENCH JSON file."""
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import platform
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,12 +32,33 @@ BENCH_LLAMA = ModelConfig(
     rope_theta=10000.0, max_seq_len=128, attention_chunk=128)
 
 ROWS: List[str] = []
+RECORDS: List[Dict[str, Any]] = []
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(row, flush=True)
+
+
+def write_json(path: str) -> None:
+    """Dump everything emitted so far as a machine-readable BENCH_*.json
+    (perf-trajectory artifact; `--json` on run.py / kernel_bench.py)."""
+    payload = {
+        "schema": "bench.v1",
+        "created_unix": time.time(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "benchmarks": RECORDS,
+    }
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[bench] wrote {len(RECORDS)} records -> {path}", flush=True)
 
 
 def train_once(cfg: ModelConfig, recipe: str, steps: int = 300,

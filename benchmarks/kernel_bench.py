@@ -8,10 +8,12 @@ roofline analysis instead.
 """
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit, write_json
 from repro.core.qlinear import pallas_qmatmul, qlinear, qmatmul
 from repro.core.recipe import RECIPES
 from repro.kernels.ref import fp4_matmul_ref
@@ -35,6 +37,48 @@ def _bench_fused_roles(x, w, recipe, tag: str) -> None:
              f"impl={impl_name};role=fwd")
         emit(f"kernel/{tag}_dgrad_wgrad_{impl_name}",
              timeit(f_bwd, c, n=5), f"impl={impl_name};role=dgrad+wgrad")
+
+
+def _bench_telemetry_step() -> None:
+    """Full train-step wall time, telemetry off vs on (tiny config).
+
+    The in-graph taps add O(elements) stat reductions next to O(M*K*N)
+    matmuls; the emitted overhead ratio is the acceptance number for the
+    telemetry subsystem (<10% at real model sizes — the tiny-config CPU
+    ratio here is the pessimistic bound since its matmuls are small).
+    """
+    from repro.configs.base import TrainConfig, get_config
+    from repro.data import SyntheticLM
+    from repro.models import build_model
+    from repro.train.train_step import make_optimizer, make_train_step
+
+    cfg = get_config("tiny")
+    model = build_model(cfg)
+    pipe = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    params = model.init(jax.random.PRNGKey(0))
+    step0 = jnp.asarray(0, jnp.int32)
+    times = {}
+    for tel in (False, True):
+        tcfg = TrainConfig(recipe="paper_fp4", total_steps=20,
+                           global_batch=8, seq_len=64, telemetry=tel)
+        step = make_train_step(model, tcfg, RECIPES["paper_fp4"],
+                               jit=True, donate=False)
+        opt_state = make_optimizer(model, tcfg).init(params)
+        comp = jnp.zeros((), jnp.float32)
+        times[tel] = timeit(step, params, opt_state, comp, batch, step0,
+                            n=10)
+    emit("kernel/train_step_tiny_telemetry_off", times[False],
+         "recipe=paper_fp4;telemetry=off")
+    emit("kernel/train_step_tiny_telemetry_on", times[True],
+         f"recipe=paper_fp4;telemetry=on;"
+         f"overhead_x={times[True] / times[False]:.3f}")
+    # production setting: sample stats every N steps (telemetry_every)
+    for every in (5, 10):
+        amortized = (times[True] + (every - 1) * times[False]) / every
+        emit(f"kernel/train_step_tiny_telemetry_every{every}", amortized,
+             f"recipe=paper_fp4;telemetry_every={every};"
+             f"overhead_x={amortized / times[False]:.3f}")
 
 
 def run() -> None:
@@ -77,6 +121,14 @@ def run() -> None:
     emit("kernel/attention_chunked_512", t_c,
          f"memory=O(S*chunk);rel={t_c / t_n:.2f}")
 
+    _bench_telemetry_step()
+
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as machine-readable JSON")
+    args = ap.parse_args()
     run()
+    if args.json:
+        write_json(args.json)

@@ -19,6 +19,8 @@ def main() -> None:
                     help="comma list: table1,table2,table3,fig1,appb,kernel,"
                          "roofline")
     ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all emitted rows as BENCH JSON")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -55,6 +57,9 @@ def main() -> None:
     if go("roofline"):
         from benchmarks import roofline_table
         roofline_table.run()
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json)
 
 
 if __name__ == "__main__":

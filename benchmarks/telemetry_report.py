@@ -1,0 +1,203 @@
+"""Post-hoc report from a telemetry JSONL log (``TrainConfig.telemetry_jsonl``).
+
+Reads the per-step rows + controller events the trainer appended and emits a
+markdown report: loss/quant-error trajectories (ASCII sparklines), a
+per-layer x per-role table of final-step quant health, backward-side
+per-class stats, and the controller's decision log.  With matplotlib
+available (optional — not a dependency), ``--plots DIR`` also writes PNG
+curves.
+
+Usage:
+    python -m benchmarks.telemetry_report runs/telemetry.jsonl
+    python -m benchmarks.telemetry_report runs/telemetry.jsonl \
+        --out report.md --plots plots/
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import re
+from typing import Dict, List, Optional
+
+from repro.telemetry.writer import read_jsonl
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+_LAYER_RE = re.compile(r"^tel/l(\d+)/([^/]+)/mm(\d+)/([^/]+)/([^/]+)$")
+
+
+def sparkline(xs: List[float], width: int = 40) -> str:
+    if not xs:
+        return ""
+    if len(xs) > width:  # downsample to width buckets (bucket means)
+        k = len(xs) / width
+        xs = [sum(xs[int(i * k):max(int(i * k) + 1, int((i + 1) * k))])
+              / max(1, len(xs[int(i * k):max(int(i * k) + 1,
+                                             int((i + 1) * k))]))
+              for i in range(width)]
+    lo, hi = min(xs), max(xs)
+    span = (hi - lo) or 1.0
+    return "".join(_SPARK[int((x - lo) / span * (len(_SPARK) - 1))]
+                   for x in xs)
+
+
+def _mean(vals: List[float]) -> float:
+    return sum(vals) / len(vals) if vals else float("nan")
+
+
+def split_rows(rows: List[Dict]):
+    steps = [r for r in rows if "event" not in r]
+    events = [r for r in rows if "event" in r]
+    return steps, events
+
+
+def series(steps: List[Dict], key: str) -> List[float]:
+    return [float(r[key]) for r in steps if key in r]
+
+
+def fwd_error_series(steps: List[Dict]) -> List[float]:
+    out = []
+    for r in steps:
+        vals = [v for k, v in r.items()
+                if k.startswith("tel/") and "/fwd_" in k
+                and k.endswith("/rel_err")]
+        if vals:
+            out.append(_mean(vals))
+    return out
+
+
+def per_layer_table(last: Dict) -> List[str]:
+    """Final-step per-layer x per-slot table (mean over mm call sites)."""
+    cells: Dict[tuple, List[float]] = collections.defaultdict(list)
+    slots, layers = set(), set()
+    for k, v in last.items():
+        m = _LAYER_RE.match(k)
+        if not m:
+            continue
+        layer, scope, _mm, slot, stat = m.groups()
+        if stat not in ("underflow", "rel_err"):
+            continue
+        layers.add(int(layer))
+        slots.add((slot, stat))
+        cells[(int(layer), slot, stat)].append(float(v))
+    if not cells:
+        return ["(no per-layer telemetry in log)"]
+    cols = sorted(slots)
+    lines = ["| layer | " + " | ".join(f"{s}/{t}" for s, t in cols) + " |",
+             "|---" * (len(cols) + 1) + "|"]
+    for layer in sorted(layers):
+        vals = [cells.get((layer, s, t)) for s, t in cols]
+        lines.append(f"| l{layer:02d} | " + " | ".join(
+            f"{_mean(v):.4f}" if v else "-" for v in vals) + " |")
+    return lines
+
+
+def bwd_table(last: Dict) -> List[str]:
+    rows = [(k, v) for k, v in sorted(last.items())
+            if k.startswith("tel/bwd/")]
+    if not rows:
+        return ["(no backward-side telemetry in log)"]
+    return ["| metric | value |", "|---|---|"] + [
+        f"| {k} | {float(v):.5f} |" for k, v in rows]
+
+
+def build_report(rows: List[Dict]) -> str:
+    steps, events = split_rows(rows)
+    out = ["# Quantization telemetry report", ""]
+    if not steps:
+        return "\n".join(out + ["(empty log)"])
+    out += [f"- steps logged: {len(steps)} "
+            f"(step {steps[0]['step']} .. {steps[-1]['step']})",
+            f"- recipes seen: "
+            f"{sorted({r.get('recipe', '?') for r in steps})}",
+            f"- controller events: {len(events)}", ""]
+    loss = series(steps, "loss")
+    if loss:
+        out += ["## Loss", "```",
+                f"{sparkline(loss)}  first={loss[0]:.4f} "
+                f"last={loss[-1]:.4f} min={min(loss):.4f}", "```", ""]
+    err = fwd_error_series(steps)
+    if err:
+        out += ["## Forward quant relative error (mean over layers/slots)",
+                "```",
+                f"{sparkline(err)}  first={err[0]:.4f} last={err[-1]:.4f} "
+                f"max={max(err):.4f}", "```", ""]
+    g = series(steps, "grad_norm")
+    if g:
+        out += ["## Grad norm", "```",
+                f"{sparkline(g)}  last={g[-1]:.4f} max={max(g):.4f}",
+                "```", ""]
+    # Stage-2 (target-precision) steps carry no quant stats — report the
+    # last step that does.
+    layer_row = next((r for r in reversed(steps)
+                      if any(_LAYER_RE.match(k) for k in r)), steps[-1])
+    bwd_row = next((r for r in reversed(steps)
+                    if any(k.startswith("tel/bwd/") and k.endswith("/taps")
+                           and float(v) > 0 for k, v in r.items())),
+                   steps[-1])
+    out += [f"## Per-layer quant health (step {layer_row['step']}, mean "
+            "over call sites)", ""] + per_layer_table(layer_row) + [""]
+    out += [f"## Backward-side stats (step {bwd_row['step']}, per module "
+            "class)", ""] + bwd_table(bwd_row) + [""]
+    if events:
+        out += ["## Controller decisions", ""]
+        for ev in events:
+            kv = ", ".join(f"{k}={v}" for k, v in ev.items()
+                           if k != "event")
+            out.append(f"- **{ev['event']}** ({kv})")
+        out.append("")
+    stragglers = [r["step"] for r in steps if r.get("straggler")]
+    if stragglers:
+        out += [f"## Stragglers", "",
+                f"steps flagged by StepTimeMonitor: {stragglers}", ""]
+    return "\n".join(out)
+
+
+def write_plots(rows: List[Dict], directory: str) -> bool:
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return False
+    steps, _ = split_rows(rows)
+    os.makedirs(directory, exist_ok=True)
+    for name, ys in (("loss", series(steps, "loss")),
+                     ("fwd_rel_err", fwd_error_series(steps)),
+                     ("grad_norm", series(steps, "grad_norm"))):
+        if not ys:
+            continue
+        fig, ax = plt.subplots(figsize=(6, 3))
+        ax.plot(ys)
+        ax.set_title(name)
+        ax.set_xlabel("logged step")
+        fig.tight_layout()
+        fig.savefig(os.path.join(directory, f"{name}.png"), dpi=120)
+        plt.close(fig)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", help="telemetry JSONL written by the trainer")
+    ap.add_argument("--out", default=None, help="write markdown here "
+                    "(default: stdout)")
+    ap.add_argument("--plots", default=None,
+                    help="directory for PNG plots (needs matplotlib)")
+    args = ap.parse_args()
+    rows = read_jsonl(args.jsonl)
+    report = build_report(rows)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(report + "\n")
+        print(f"wrote {args.out}")
+    else:
+        print(report)
+    if args.plots:
+        ok = write_plots(rows, args.plots)
+        print(f"plots: {'written to ' + args.plots if ok else 'skipped (no matplotlib)'}")
+
+
+if __name__ == "__main__":
+    main()

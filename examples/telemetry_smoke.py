@@ -1,0 +1,66 @@
+"""Telemetry + adaptive-controller smoke run (CI; CPU; ~10 steps).
+
+Trains the tiny config with in-graph telemetry, the JSONL writer, and the
+PrecisionController enabled, then renders the markdown report.  Exits
+nonzero if telemetry metrics are missing from the history or the JSONL log.
+
+    python examples/telemetry_smoke.py [--steps 10] [--out artifacts/telemetry]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.configs.base import ControllerSettings, TrainConfig, get_config
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train.trainer import Trainer
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--out", default="artifacts/telemetry")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    jsonl = os.path.join(args.out, "telemetry.jsonl")
+
+    cfg = get_config("tiny")
+    model = build_model(cfg)
+    pipe = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
+    tcfg = TrainConfig(
+        recipe="paper_fp4", total_steps=args.steps, global_batch=8,
+        seq_len=64, learning_rate=3e-3, log_every=1,
+        telemetry=True, telemetry_jsonl=jsonl,
+        checkpoint_every=max(args.steps // 2, 1),
+        checkpoint_dir=os.path.join(args.out, "ckpt"),
+        controller=ControllerSettings(switch_error_threshold=10.0,
+                                      demote_overflow_threshold=0.5,
+                                      spike_factor=3.0))
+    tr = Trainer(model, tcfg, pipe)
+    tr.train(log=print)
+
+    row = tr.history[-1]
+    tel_keys = [k for k in row if k.startswith("tel/")]
+    print(f"[smoke] {len(tel_keys)} telemetry metrics in history")
+    if not tel_keys:
+        print("[smoke] FAIL: no telemetry metrics collected")
+        return 1
+    if not os.path.exists(jsonl):
+        print("[smoke] FAIL: JSONL log missing")
+        return 1
+
+    from benchmarks.telemetry_report import build_report
+    from repro.telemetry.writer import read_jsonl
+    report = build_report(read_jsonl(jsonl))
+    report_path = os.path.join(args.out, "report.md")
+    with open(report_path, "w") as f:
+        f.write(report + "\n")
+    print(f"[smoke] report -> {report_path}")
+    print(report)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

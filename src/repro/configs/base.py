@@ -6,8 +6,8 @@ import importlib
 from typing import List, Optional, Tuple
 
 __all__ = ["ModelConfig", "MoESettings", "MambaSettings", "LayerSpec",
-           "TrainConfig", "get_config", "list_archs", "SHAPE_CELLS",
-           "ShapeCell"]
+           "TrainConfig", "ControllerSettings", "get_config", "list_archs",
+           "SHAPE_CELLS", "ShapeCell"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +120,34 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ControllerSettings:
+    """Adaptive-precision controller thresholds (telemetry.controller).
+
+    All decision rules are opt-in: a threshold of 0.0 disables that rule, so
+    the default ``ControllerSettings()`` reproduces the static §3.3 schedule.
+    """
+
+    # Dynamic target-precision switch: switch to the stage-2 recipe when the
+    # EMA of the forward quant relative error crosses this value (OR at the
+    # schedule's fixed fraction, whichever comes first).  0 = fraction only.
+    switch_error_threshold: float = 0.0
+    error_ema_decay: float = 0.9
+    # Per-module-class demotion: sustained overflow (clip rate) above the
+    # threshold for ``demote_patience`` consecutive steps promotes that class
+    # to FP8 (the Table-2 ablation recipes).  0 = disabled.
+    demote_overflow_threshold: float = 0.0
+    demote_patience: int = 8
+    # Loss-spike rollback: loss > spike_factor * EMA(loss) triggers a restore
+    # of the last checkpoint + ``replay_steps`` steps at the target (high)
+    # precision before FP4 resumes.  0 = disabled.
+    spike_factor: float = 0.0
+    loss_ema_decay: float = 0.9
+    spike_warmup: int = 20       # steps of EMA warmup before spikes arm
+    replay_steps: int = 5
+    max_rollbacks: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
 class TrainConfig:
     recipe: str = "paper_fp4"
     total_steps: int = 200
@@ -143,6 +171,13 @@ class TrainConfig:
     # distributed extras
     grad_compression: str = "none"   # none | fp8 (error-feedback)
     log_every: int = 10
+    # quantization telemetry + adaptive precision (telemetry subsystem)
+    telemetry: bool = False          # in-graph quant-health stats as step aux
+    telemetry_every: int = 1         # sample stats every N steps (amortizes
+    #                                  the tap cost; both graphs stay static)
+    telemetry_jsonl: str = ""        # append per-step rows to this JSONL file
+    target_recipe: str = "bf16"      # stage-2 recipe of the §3.3 schedule
+    controller: Optional[ControllerSettings] = None  # adaptive controller
 
 
 # ---------------------------------------------------------------------------

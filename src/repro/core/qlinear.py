@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.core.quantize import QuantSpec, qdq
 from repro.core.recipe import MatmulRecipe
+from repro.telemetry import collect as telemetry
 
 __all__ = ["qmatmul", "pallas_qmatmul", "qlinear", "dot_qdq",
            "kernel_quant_mode", "matmul_impl"]
@@ -217,7 +218,15 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
     else:
         if key_data is None:
             key_data = _zero_key()
-        y = matmul_impl(impl)(x.reshape(-1, k), w, key_data, recipe)
+        x2d = x.reshape(-1, k)
+        # Telemetry taps (no-ops unless a collector is installed; the
+        # stats use the same QDQ math both impls realize, so one tap site
+        # covers the qdq and pallas paths).  fwd-computable operand stats
+        # go to the active collection frame; grad_tap transports dgrad_g/
+        # wgrad_g cotangent stats out via the probe-gradient channel.
+        telemetry.tap_matmul(x2d, w, recipe)
+        y = matmul_impl(impl)(x2d, w, key_data, recipe)
+        y = telemetry.grad_tap(y, recipe)
     y = y.reshape(*lead, w.shape[-1])
     if bias is not None:
         y = y + bias

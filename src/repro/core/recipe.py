@@ -27,6 +27,7 @@ from typing import Optional
 from repro.core.quantize import QuantSpec
 
 __all__ = ["MatmulRecipe", "PrecisionRecipe", "named_recipe", "RECIPES",
+           "promote_module_class",
            "MM_BF16", "MM_FP8", "MM_FP4_ALL", "MM_FFN_PAPER"]
 
 
@@ -124,6 +125,26 @@ class PrecisionRecipe:
         return (self.attn_linear.is_passthrough
                 and self.ffn_linear.is_passthrough
                 and self.head_linear.is_passthrough)
+
+
+_CLASS_FIELD = {"attn": "attn_linear", "ffn": "ffn_linear",
+                "head": "head_linear"}
+
+
+def promote_module_class(recipe: PrecisionRecipe, cls: str,
+                         to: Optional[MatmulRecipe] = None
+                         ) -> PrecisionRecipe:
+    """Derive a recipe with one module class promoted to higher precision
+    (default FP8-everywhere for that class — the Table-2 ablation axis).
+    Used by the adaptive controller to demote an FP4 class that shows
+    sustained quantization overflow.  No-op if the class already runs the
+    target MatmulRecipe."""
+    field = _CLASS_FIELD[cls]
+    to = to if to is not None else MM_FP8
+    if getattr(recipe, field) == to:
+        return recipe
+    return dataclasses.replace(recipe, name=f"{recipe.name}+{cls}=fp8",
+                               **{field: to})
 
 
 def named_recipe(name: str) -> PrecisionRecipe:

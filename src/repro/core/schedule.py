@@ -6,10 +6,16 @@ final ``frac`` (paper: 5-10%) that lets the model shed quantization-noise
 adaptations.  The trainer keeps two jitted train_steps (one per recipe) and
 switches at the boundary — switching is a Python-level decision so each graph
 stays static.
+
+The stage-2 recipe is configurable (``target``, default the BF16 baseline;
+``TrainConfig.target_recipe`` threads the knob) so the Table-3 schedule
+ablations — e.g. an FP8 stage 2 — are runnable.  ``telemetry.controller``
+generalizes the fixed-fraction switch to a telemetry-driven one.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.core import recipe as recipe_lib
 
@@ -20,6 +26,7 @@ __all__ = ["TargetPrecisionSchedule"]
 class TargetPrecisionSchedule:
     recipe: recipe_lib.PrecisionRecipe
     total_steps: int
+    target: Optional[recipe_lib.PrecisionRecipe] = None
 
     @property
     def switch_step(self) -> int:
@@ -36,7 +43,9 @@ class TargetPrecisionSchedule:
 
     @property
     def target_recipe(self) -> recipe_lib.PrecisionRecipe:
-        """Stage-2 recipe: same model, full-precision matmuls."""
+        """Stage-2 recipe (default: the full-precision BF16 baseline)."""
+        if self.target is not None:
+            return self.target
         return recipe_lib.RECIPES["bf16"]
 
     def is_switch_boundary(self, step: int) -> bool:

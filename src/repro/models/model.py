@@ -19,6 +19,7 @@ from repro.models import stack as stack_lib
 from repro.nn.layers import (apply_norm, linear, shard_hint,
                              sincos_positions)
 from repro.nn.params import ParamSpec, init_params, param_count, spec_shapes
+from repro.telemetry import collect as telemetry
 
 __all__ = ["Model", "build_model"]
 
@@ -124,7 +125,8 @@ class Model:
             w = params["embed"].astype(self._dt).T
         else:
             w = params["head"].astype(self._dt)
-        logits = linear(x, w, recipe.head_linear, cfg)
+        with telemetry.module_scope("head"):
+            logits = linear(x, w, recipe.head_linear, cfg)
         return shard_hint(logits, ("batch", "seq", "vocab"))
 
     @property
@@ -224,7 +226,10 @@ class Model:
 
             @jax.checkpoint
             def chunk_terms(h_c, t_c):
-                logits = linear(h_c, w, recipe.head_linear, cfg)
+                # telemetry stays off in here: stats pushed from inside the
+                # chunk scan could not legally escape its trace scope.
+                with telemetry.suppressed():
+                    logits = linear(h_c, w, recipe.head_linear, cfg)
                 return self._xent_terms(logits, t_c)
 
             def body(carry, xs):

@@ -23,6 +23,7 @@ from repro.core.qlinear import matmul_impl
 from repro.core.recipe import MatmulRecipe
 from repro.nn.layers import ACTIVATIONS, shard_hint
 from repro.nn.params import ParamSpec
+from repro.telemetry import collect as telemetry
 
 __all__ = ["moe_param_specs", "moe", "router_loss"]
 
@@ -49,7 +50,9 @@ def _expert_linear(x: jnp.ndarray, w: jnp.ndarray,
         return jnp.einsum("eck,ekn->ecn", x, w)
     key = jnp.zeros((2,), jnp.uint32)
     mm = matmul_impl(impl)
-    return jax.vmap(lambda a, b: mm(a, b, key, recipe))(x, w)
+    telemetry.tap_matmul_batched(x, w, recipe)  # no-op unless collecting
+    y = jax.vmap(lambda a, b: mm(a, b, key, recipe))(x, w)
+    return telemetry.grad_tap(y, recipe)
 
 
 def moe(params: Dict[str, jnp.ndarray], cfg: ModelConfig, x: jnp.ndarray,

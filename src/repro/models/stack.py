@@ -43,6 +43,7 @@ from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.nn.layers import apply_norm, shard_hint
 from repro.nn.params import ParamSpec
+from repro.telemetry import collect as telemetry
 
 __all__ = ["layer_param_specs", "stack_param_specs", "run_stack",
            "stack_cache_spec", "init_stack_cache"]
@@ -184,45 +185,62 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
 def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, recipe:
                PrecisionRecipe, x, *, positions, cross_states, cache,
                cache_len, decode, causal=True):
-    """One layer.  Returns (x, new_cache)."""
+    """One layer.  Returns (x, new_cache).
+
+    With telemetry enabled, a collection frame is opened around the whole
+    layer: the quantized linears inside push per-operand quant-health stats
+    into it, and the drained frame rides out through the ``_telemetry``
+    cache slot (same channel as ``_moe_aux``) so per-layer stats survive
+    both the scan and the unroll stacking strategies.
+    """
     new_cache: Dict[str, Any] = {}
-    h = apply_norm(params["mixer_norm"], x, cfg.norm)
-    if spec.mixer == "attn":
-        out, c = attn_lib.attention(
-            params["mixer"], cfg, h, recipe.attn_linear,
-            positions=positions,
-            cache=None if cache is None else cache["self"],
-            cache_len=cache_len, causal=causal)
-    else:
-        out, c = ssm_lib.mamba_mixer(
-            params["mixer"], cfg, h, recipe.ffn_linear,
-            cache=None if cache is None else cache["self"],
-            decode=decode, unroll=not cfg.scan_layers)
-    if cache is not None:
-        new_cache["self"] = c if c is not None else cache["self"]
-    x = x + out
-
-    if spec.cross:
-        h = apply_norm(params["cross_norm"], x, cfg.norm)
-        cc = cache.get("cross") if (cache is not None and decode) else None
-        out, ccache = attn_lib.cross_attention(
-            params["cross"], cfg, h, recipe.attn_linear,
-            kv_states=cross_states, cache=cc)
-        gate = jnp.tanh(params["cross_gate"].astype(jnp.float32))
-        x = x + (out.astype(jnp.float32) * gate).astype(x.dtype)
+    with telemetry.layer_frame() as tel_frame:
+        h = apply_norm(params["mixer_norm"], x, cfg.norm)
+        if spec.mixer == "attn":
+            with telemetry.module_scope("attn"):
+                out, c = attn_lib.attention(
+                    params["mixer"], cfg, h, recipe.attn_linear,
+                    positions=positions,
+                    cache=None if cache is None else cache["self"],
+                    cache_len=cache_len, causal=causal)
+        else:
+            with telemetry.module_scope("ssm"):
+                out, c = ssm_lib.mamba_mixer(
+                    params["mixer"], cfg, h, recipe.ffn_linear,
+                    cache=None if cache is None else cache["self"],
+                    decode=decode, unroll=not cfg.scan_layers)
         if cache is not None:
-            new_cache["cross"] = ccache
-
-    if spec.ffn == "dense":
-        h = apply_norm(params["ffn_norm"], x, cfg.norm)
-        x = x + mlp_lib.mlp(params["ffn"], cfg, h, recipe.ffn_linear)
-    elif spec.ffn == "moe":
-        h = apply_norm(params["ffn_norm"], x, cfg.norm)
-        out, aux = moe_lib.moe(params["ffn"], cfg, h, recipe.ffn_linear)
+            new_cache["self"] = c if c is not None else cache["self"]
         x = x + out
-        new_cache["_moe_aux"] = aux  # surfaced via cache slot in unroll mode
-    x = shard_hint(x, ("batch", "seq", "embed"))
-    return x, (new_cache if cache is not None else new_cache)
+
+        if spec.cross:
+            h = apply_norm(params["cross_norm"], x, cfg.norm)
+            cc = cache.get("cross") if (cache is not None and decode) \
+                else None
+            with telemetry.module_scope("cross"):
+                out, ccache = attn_lib.cross_attention(
+                    params["cross"], cfg, h, recipe.attn_linear,
+                    kv_states=cross_states, cache=cc)
+            gate = jnp.tanh(params["cross_gate"].astype(jnp.float32))
+            x = x + (out.astype(jnp.float32) * gate).astype(x.dtype)
+            if cache is not None:
+                new_cache["cross"] = ccache
+
+        if spec.ffn == "dense":
+            h = apply_norm(params["ffn_norm"], x, cfg.norm)
+            with telemetry.module_scope("ffn"):
+                x = x + mlp_lib.mlp(params["ffn"], cfg, h, recipe.ffn_linear)
+        elif spec.ffn == "moe":
+            h = apply_norm(params["ffn_norm"], x, cfg.norm)
+            with telemetry.module_scope("moe"):
+                out, aux = moe_lib.moe(params["ffn"], cfg, h,
+                                       recipe.ffn_linear)
+            x = x + out
+            new_cache["_moe_aux"] = aux  # surfaced via cache slot in unroll
+        x = shard_hint(x, ("batch", "seq", "embed"))
+    if tel_frame is not None and tel_frame.stats:
+        new_cache["_telemetry"] = tel_frame.stats
+    return x, new_cache
 
 
 def run_stack(params, cfg: ModelConfig, recipe: PrecisionRecipe,
@@ -261,6 +279,9 @@ def run_stack(params, cfg: ModelConfig, recipe: PrecisionRecipe,
                 x, c = fn(layer_params[i], x=x, cache=layer_caches[i])
             if isinstance(c, dict) and "_moe_aux" in c:
                 add_aux(c.pop("_moe_aux"))
+            if isinstance(c, dict) and "_telemetry" in c:
+                for k, v in c.pop("_telemetry").items():
+                    aux_total[f"tel/l{i:02d}/{k}"] = v
             new_caches.append(c)
         new_cache = ({"layers": new_caches} if cache is not None else None)
         return x, new_cache, aux_total
@@ -276,6 +297,7 @@ def run_stack(params, cfg: ModelConfig, recipe: PrecisionRecipe,
         p_g, c_g = xs
         new_c_g = {} if c_g is not None else None
         aux_g = []
+        tel_g = {}
         for i in range(period):
             spec = specs[i]
             pos = positions
@@ -288,26 +310,35 @@ def run_stack(params, cfg: ModelConfig, recipe: PrecisionRecipe,
                 cache_len=clen, decode=decode, causal=causal)
             if isinstance(c_i, dict) and "_moe_aux" in c_i:
                 aux_g.append(c_i.pop("_moe_aux"))
+            if isinstance(c_i, dict) and "_telemetry" in c_i:
+                for k, v in c_i.pop("_telemetry").items():
+                    tel_g[f"{i:02d}/{k}"] = v
             if new_c_g is not None:
                 new_c_g[f"l{i:02d}"] = c_i
         aux_stacked = jax.tree.map(lambda *xs: sum(xs), *aux_g) if aux_g \
             else {}
-        return (h, clen), (new_c_g, aux_stacked)
+        return (h, clen), (new_c_g, aux_stacked, tel_g)
 
     body = group_body
     if cache is None:
         body = _checkpoint(group_body, cfg)
 
     if gcache is not None:
-        (x, _), (new_gcache, aux_scan) = jax.lax.scan(
+        (x, _), (new_gcache, aux_scan, tel_scan) = jax.lax.scan(
             body, (x, cache_len), (gparams, gcache))
         new_cache = {"groups": new_gcache}
     else:
         def body_nocache(carry, p_g):
             return body(carry, (p_g, None))
-        (x, _), (_, aux_scan) = jax.lax.scan(
+        (x, _), (_, aux_scan, tel_scan) = jax.lax.scan(
             body_nocache, (x, cache_len), gparams)
         new_cache = None
     if aux_scan:
         add_aux({k: jnp.sum(v) for k, v in aux_scan.items()})
+    # Per-layer telemetry: each scanned value is (n_groups,); unstack into
+    # absolute layer indices (layer = group * period + position-in-group).
+    for key, v in tel_scan.items():
+        i, rest = int(key[:2]), key[3:]
+        for g in range(n_groups):
+            aux_total[f"tel/l{g * period + i:02d}/{rest}"] = v[g]
     return x, new_cache, aux_total

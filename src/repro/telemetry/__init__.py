@@ -1,0 +1,22 @@
+"""Quantization telemetry + adaptive precision control.
+
+Two halves (see ISSUE 2 / ROADMAP):
+
+  * ``telemetry.collect`` — trace-time, in-graph collection of per-layer x
+    per-role quantization-health statistics (clip/overflow rate, underflow
+    rate, quant relative error, scale spread, grad norms).  Stats ride the
+    train step as aux outputs; with telemetry disabled nothing is installed
+    and the step graph is bit-identical to a build without telemetry.
+  * ``telemetry.controller`` — a Python-level ``PrecisionController`` that
+    consumes the per-step telemetry history and drives precision decisions:
+    dynamic target-precision switching, per-module-class FP4->FP8 demotion,
+    and loss-spike rollback + high-precision replay.
+
+``telemetry.writer`` persists the per-step rows as JSONL for post-hoc
+analysis (``benchmarks/telemetry_report.py``).
+"""
+from repro.telemetry import collect  # noqa: F401
+from repro.telemetry.controller import PrecisionController  # noqa: F401
+from repro.telemetry.writer import JsonlWriter  # noqa: F401
+
+__all__ = ["collect", "PrecisionController", "JsonlWriter"]

@@ -1,0 +1,390 @@
+"""In-graph quantization telemetry collection (trace-time tap mechanism).
+
+The tap lives in ``core.qlinear.qlinear`` (covering both the QDQ and the
+fused-Pallas implementations, whose quantization semantics are identical)
+and in ``models.moe._expert_linear``.  It is driven by a thread-local
+*collector* installed by the train step's loss function — no collector
+installed means every hook below is a no-op and the traced graph is
+bit-identical to a telemetry-free build.
+
+Two transport channels move stats out of the traced graph:
+
+  * **Forward-computable stats** (the four operand slots whose tensors exist
+    in the forward pass: fwd_x, fwd_w, wgrad_x, dgrad_w).  Each
+    ``_run_layer`` call opens a :func:`layer_frame`; qlinear taps push
+    ``{scope}/mm{j}/{slot}/{stat}`` scalars into the current frame, and the
+    stack drains the frame *inside* the same scan/remat scope, returning the
+    stats as scan outputs (per-layer resolution survives ``lax.scan``).
+  * **Gradient-side stats** (dgrad_g / wgrad_g — the cotangent only exists
+    in the backward pass).  :func:`grad_tap` wraps each quantized linear's
+    output in a custom_vjp identity whose backward rule emits the stats of
+    the incoming cotangent as the "gradient" of a zero-valued *probe*
+    argument.  Probes are shared per module class, so these stats are
+    per-class aggregates (a trailing tap-count slot makes them
+    self-normalizing under scan and grad-accumulation).
+
+Statistics per operand slot (all f32 scalars):
+
+  ``clip``         fraction of elements above the per-group clip point
+                   (nonzero only for pow2 scales; amax scaling never clips);
+  ``underflow``    fraction of nonzero elements that quantize to exactly 0
+                   (the Fig-1b signal);
+  ``rel_err``      relative quantization error ||x - Q(x)|| / ||x||
+                   (1/SNR — the §3 health signal the controller EMAs);
+  ``scale_spread`` log2(max/min) of the per-group scales (dynamic-range
+                   pressure on the scale format).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantSpec, _blocked_view
+from repro.core.recipe import MatmulRecipe
+
+__all__ = ["TelemetryCollector", "collecting", "active", "suppressed",
+           "module_scope", "layer_frame", "tap_matmul", "tap_matmul_batched",
+           "grad_tap", "make_probes", "probe_metrics", "grad_norm_metrics",
+           "operand_stats", "PROBE_CLASSES", "GRAD_STATS"]
+
+_TLS = threading.local()
+
+# Cap on sampled scale-groups per operand stat (see ``operand_stats``).
+_SAMPLE_GROUPS = 128
+
+# Gradient-side stats carried per probe class; the final slot counts taps so
+# rates stay self-normalizing when cotangents accumulate across scan
+# iterations and microbatches.
+GRAD_STATS = ("dgrad_g/clip", "dgrad_g/underflow", "dgrad_g/rel_err",
+              "wgrad_g/clip", "wgrad_g/underflow", "wgrad_g/rel_err",
+              "gnorm_sq")
+PROBE_SIZE = len(GRAD_STATS) + 1
+
+PROBE_CLASSES = ("attn", "ffn", "head", "other")
+# module scope -> probe/recipe class; the controller classifies metric keys
+# with the same map (single source of truth).
+SCOPE_CLASS = {"attn": "attn", "cross": "attn",
+               "ffn": "ffn", "moe": "ffn", "ssm": "ffn",
+               "head": "head"}
+
+
+# ---------------------------------------------------------------------------
+# Collector / context plumbing
+# ---------------------------------------------------------------------------
+
+class _Frame:
+    """One collection frame (per layer, or the loss-level root)."""
+
+    def __init__(self) -> None:
+        self.stats: Dict[str, jnp.ndarray] = {}
+        self._mm: Dict[str, int] = {}
+
+    def next_index(self, scope: str) -> int:
+        i = self._mm.get(scope, 0)
+        self._mm[scope] = i + 1
+        return i
+
+
+class TelemetryCollector:
+    """Holds the frame stack, scope stack and probe tracers for one trace."""
+
+    def __init__(self) -> None:
+        self.probes: Optional[Dict[str, jnp.ndarray]] = None
+        self._frames = [_Frame()]
+        self._scopes: list = []
+
+    def reset(self, probes) -> None:
+        self.probes = probes
+        self._frames = [_Frame()]
+        self._scopes = []
+
+    @property
+    def frame(self) -> _Frame:
+        return self._frames[-1]
+
+    @property
+    def scope_path(self) -> str:
+        return "/".join(self._scopes) if self._scopes else "top"
+
+    @property
+    def scope_root(self) -> str:
+        return self._scopes[0] if self._scopes else "top"
+
+    def drain_root(self) -> Dict[str, jnp.ndarray]:
+        """Loss-level stats (e.g. the lm-head linear), 'tel/'-prefixed."""
+        root = self._frames[0]
+        out = {f"tel/{k}": v for k, v in root.stats.items()}
+        root.stats = {}
+        return out
+
+
+def active() -> Optional[TelemetryCollector]:
+    if getattr(_TLS, "suppress", 0):
+        return None
+    return getattr(_TLS, "collector", None)
+
+
+@contextlib.contextmanager
+def collecting(collector: TelemetryCollector, probes):
+    """Install ``collector`` for the duration of one loss trace."""
+    collector.reset(probes)
+    prev = getattr(_TLS, "collector", None)
+    _TLS.collector = collector
+    try:
+        yield collector
+    finally:
+        _TLS.collector = prev
+
+
+@contextlib.contextmanager
+def suppressed():
+    """Disable taps inside (used around inner scan/remat scopes whose
+    tracers could not legally escape, e.g. the seq-chunked loss head)."""
+    _TLS.suppress = getattr(_TLS, "suppress", 0) + 1
+    try:
+        yield
+    finally:
+        _TLS.suppress -= 1
+
+
+@contextlib.contextmanager
+def module_scope(name: str):
+    """Label taps inside with a module scope ('attn', 'ffn', ...)."""
+    col = active()
+    if col is None:
+        yield
+        return
+    col._scopes.append(name)
+    try:
+        yield
+    finally:
+        col._scopes.pop()
+
+
+@contextlib.contextmanager
+def layer_frame():
+    """Open a per-layer collection frame.  Yields the frame (or None when
+    telemetry is off); the caller drains ``frame.stats`` *within the same
+    trace scope* and ships them out as layer outputs."""
+    col = active()
+    if col is None:
+        yield None
+        return
+    fr = _Frame()
+    col._frames.append(fr)
+    try:
+        yield fr
+    finally:
+        col._frames.pop()
+
+
+# ---------------------------------------------------------------------------
+# Operand statistics
+# ---------------------------------------------------------------------------
+
+def _statable(spec: QuantSpec) -> bool:
+    return not spec.is_passthrough and spec.fmt != "fp16"
+
+
+def operand_stats(a2d: jnp.ndarray, spec: QuantSpec,
+                  reduction_axis: int) -> Dict[str, jnp.ndarray]:
+    """Quant-health stats of one matmul operand under ``spec`` (f32 scalars).
+
+    ``reduction_axis`` is relative to the stored 2-D layout; block/tile
+    group *contents* are orientation-invariant, so stats for transposed
+    roles (wgrad_x, dgrad_w) are computed on the stored array with the
+    reduction axis mapped accordingly.
+
+    Everything is computed in ONE blocked pass (view + scale + simulated
+    rounding shared across the four stats) — the taps sit next to every
+    quantized matmul, so redundant QDQ work here is step-time overhead.
+    For ``token``/``block`` granularities the scale groups lie entirely
+    along the reduction axis, so the operand is strided-subsampled along
+    the *other* axis first: per-group math stays exact, and the reported
+    rates become an unbiased sample mean — this caps the tap cost at
+    O(``_SAMPLE_GROUPS`` * reduction-dim) per operand regardless of batch.
+    """
+    from repro.core import formats as F
+    fmt = spec.format
+    if spec.granularity in ("token", "block"):
+        axis = 1 - reduction_axis
+        stride = a2d.shape[axis] // _SAMPLE_GROUPS
+        if stride > 1:
+            a2d = a2d[::stride] if axis == 0 else a2d[:, ::stride]
+    ab, axes, rows, cols = _blocked_view(a2d, spec.granularity, spec.block,
+                                         reduction_axis)
+    af = ab.astype(jnp.float32)
+    mag = jnp.abs(af)
+    if spec.granularity == "tensor":
+        amax = jnp.max(mag)
+    elif spec.granularity == "token":
+        amax = jnp.max(mag, axis=reduction_axis, keepdims=True)
+    else:
+        amax = jnp.max(mag, axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / fmt.max_value   # Eq. 3
+    if spec.pow2_scale:
+        scale = jnp.exp2(jnp.floor(jnp.log2(scale)))
+    q = F.round_to_format(af / scale, fmt) * scale     # simulated QDQ
+    n = rows * cols  # padding contributes zero to every numerator below
+    nonzero = mag > 0
+    underflow = (jnp.sum(nonzero & (q == 0))
+                 / jnp.maximum(jnp.sum(nonzero), 1))
+    rel_err = jnp.sqrt(jnp.sum((af - q) ** 2)
+                       / jnp.maximum(jnp.sum(af * af), 1e-30))
+    clip = jnp.sum(mag > scale * (fmt.max_value * (1.0 + 1e-6))) / n
+    spread = jnp.log2(jnp.maximum(jnp.max(scale), 1e-30)
+                      / jnp.maximum(jnp.min(scale), 1e-30))
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    return {"clip": f32(clip), "underflow": f32(underflow),
+            "rel_err": f32(rel_err), "scale_spread": f32(spread)}
+
+
+# The forward pass holds both operands of all three matmuls except the
+# cotangent g: slot -> (operand selector, spec selector, reduction axis in
+# the *stored* (M,K) x / (K,N) w layout).
+_FWD_SLOTS = (
+    ("fwd_x", 0, "fwd_x", 1),     # x quantized over K
+    ("fwd_w", 1, "fwd_w", 0),     # w quantized over K
+    ("wgrad_x", 0, "wgrad_x", 0),  # x^T quantized over M  == x over axis 0
+    ("dgrad_w", 1, "dgrad_w", 1),  # w^T quantized over N  == w over axis 1
+)
+
+
+def tap_matmul(x2d: jnp.ndarray, w: jnp.ndarray,
+               recipe: MatmulRecipe) -> None:
+    """Record forward-computable operand stats for one quantized matmul
+    into the current collection frame.  No-op without a collector."""
+    col = active()
+    if col is None:
+        return
+    fr = col.frame
+    scope = col.scope_path
+    j = fr.next_index(scope)
+    ops = (x2d, w)
+    for slot, op_i, spec_name, axis in _FWD_SLOTS:
+        spec = getattr(recipe, spec_name)
+        if not _statable(spec):
+            continue
+        for stat, v in operand_stats(ops[op_i], spec, axis).items():
+            fr.stats[f"{scope}/mm{j}/{slot}/{stat}"] = v
+
+
+def tap_matmul_batched(x3: jnp.ndarray, w3: jnp.ndarray,
+                       recipe: MatmulRecipe) -> None:
+    """Batched (per-expert) variant: stats vmapped over the leading dim and
+    averaged.  The internal vmap is self-contained, so this is safe to call
+    at the caller's trace level (unlike tapping inside the matmul vmap)."""
+    col = active()
+    if col is None:
+        return
+    fr = col.frame
+    scope = col.scope_path
+    j = fr.next_index(scope)
+    ops = (x3, w3)
+    for slot, op_i, spec_name, axis in _FWD_SLOTS:
+        spec = getattr(recipe, spec_name)
+        if not _statable(spec):
+            continue
+        per_e = jax.vmap(lambda a: operand_stats(a, spec, axis))(ops[op_i])
+        for stat, v in per_e.items():
+            fr.stats[f"{scope}/mm{j}/{slot}/{stat}"] = jnp.mean(v)
+
+
+# ---------------------------------------------------------------------------
+# Gradient-side taps (probe-gradient transport)
+# ---------------------------------------------------------------------------
+
+def make_probes() -> Dict[str, jnp.ndarray]:
+    """Zero-valued probe vector per module class; differentiate the loss
+    w.r.t. these to receive the backward-side stats."""
+    return {c: jnp.zeros((PROBE_SIZE,), jnp.float32) for c in PROBE_CLASSES}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _grad_tap(y, probe, recipe: MatmulRecipe):
+    return y
+
+
+def _grad_tap_fwd(y, probe, recipe):
+    return y, None
+
+
+def _grad_tap_bwd(recipe, _res, g):
+    g2 = g.reshape(-1, g.shape[-1])
+    vals = []
+    # dgrad: g reduced over N (axis 1); wgrad: g reduced over M (axis 0).
+    for spec, axis in ((recipe.dgrad_g, 1), (recipe.wgrad_g, 0)):
+        if _statable(spec):
+            s = operand_stats(g2, spec, axis)
+            vals += [s["clip"], s["underflow"], s["rel_err"]]
+        else:
+            vals += [jnp.zeros((), jnp.float32)] * 3
+    vals.append(jnp.sum(g2.astype(jnp.float32) ** 2))
+    vals.append(jnp.ones((), jnp.float32))  # tap count
+    return g, jnp.stack(vals)
+
+
+_grad_tap.defvjp(_grad_tap_fwd, _grad_tap_bwd)
+
+
+def grad_tap(y: jnp.ndarray, recipe: MatmulRecipe) -> jnp.ndarray:
+    """Identity wrapper whose VJP emits cotangent quant stats into the
+    module-class probe.  Forward value (and the cotangent passed upstream)
+    are untouched, so training math is unchanged."""
+    col = active()
+    if col is None or col.probes is None:
+        return y
+    if not (_statable(recipe.dgrad_g) or _statable(recipe.wgrad_g)):
+        return y
+    cls = SCOPE_CLASS.get(col.scope_root, "other")
+    return _grad_tap(y, col.probes[cls], recipe)
+
+
+def probe_metrics(probe_grads: Dict[str, jnp.ndarray]
+                  ) -> Dict[str, jnp.ndarray]:
+    """Normalize accumulated probe cotangents into per-class metrics."""
+    out = {}
+    for cls, vec in probe_grads.items():
+        cnt = vec[-1]
+        denom = jnp.maximum(cnt, 1.0)
+        for i, name in enumerate(GRAD_STATS):
+            if name == "gnorm_sq":
+                out[f"tel/bwd/{cls}/gout_norm"] = jnp.sqrt(vec[i] / denom)
+            else:
+                out[f"tel/bwd/{cls}/{name}"] = vec[i] / denom
+        out[f"tel/bwd/{cls}/taps"] = cnt
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-layer gradient norms (computed on the grads pytree in the train step)
+# ---------------------------------------------------------------------------
+
+def grad_norm_metrics(grads) -> Dict[str, jnp.ndarray]:
+    """Per-layer gradient norms from the stacked/unrolled params tree."""
+    out: Dict[str, jnp.ndarray] = {}
+    stack = grads.get("stack") if isinstance(grads, dict) else None
+    if not isinstance(stack, dict):
+        return out
+    if "groups" in stack:
+        groups = stack["groups"]
+        names = sorted(groups)
+        period = len(names)
+        for i, lname in enumerate(names):
+            leaves = jax.tree.leaves(groups[lname])
+            ss = sum(jnp.sum(l.astype(jnp.float32) ** 2,
+                             axis=tuple(range(1, l.ndim)))
+                     for l in leaves)  # (n_groups,)
+            for g in range(ss.shape[0]):
+                out[f"tel/gnorm/l{g * period + i:02d}"] = jnp.sqrt(ss[g])
+    elif "layers" in stack:
+        for i, sub in enumerate(stack["layers"]):
+            ss = sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                     for l in jax.tree.leaves(sub))
+            out[f"tel/gnorm/l{i:02d}"] = jnp.sqrt(ss)
+    return out

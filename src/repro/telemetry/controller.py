@@ -1,0 +1,192 @@
+"""Adaptive precision controller driven by live quantization telemetry.
+
+Generalizes the static §3.3 two-stage schedule with three decision rules
+(each opt-in via ``ControllerSettings``, see ``configs.base``):
+
+  * **Dynamic target-precision switch** — switch to the stage-2 (target)
+    recipe when the EMA of the forward quant relative error crosses a
+    threshold, OR at the schedule's fixed fraction, whichever comes first
+    (cf. "FP4 All the Way", arXiv:2505.19115, which switches on measured
+    quantization noise).
+  * **Per-module-class demotion** — sustained wgrad overflow (clip rate)
+    for a module class promotes that class FP4 -> FP8, i.e. moves along the
+    Table-2 ablation axis (cf. outlier clamping in arXiv:2501.17116).
+  * **Loss-spike rollback** — a loss spike against its EMA restores the
+    last checkpoint and replays ``replay_steps`` steps at the target (high)
+    precision before FP4 resumes.
+
+The controller is pure Python consuming per-step history rows (the metrics
+emitted by the in-graph taps, ``telemetry.collect``); precision changes stay
+Python-level recipe swaps, so every step graph remains static — exactly the
+mechanism the trainer already uses for the fixed schedule.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional
+
+from repro.configs.base import ControllerSettings
+from repro.core import recipe as recipe_lib
+from repro.core.schedule import TargetPrecisionSchedule
+from repro.telemetry.collect import SCOPE_CLASS
+
+__all__ = ["PrecisionController"]
+
+_CLASSES = ("attn", "ffn", "head")
+_LAYER_SEG = re.compile(r"^l\d+$")
+
+
+def _fwd_error_signal(row: Dict) -> Optional[float]:
+    """Mean forward quant relative error across all layers/slots."""
+    vals = [v for k, v in row.items()
+            if k.startswith("tel/") and "/fwd_" in k
+            and k.endswith("/rel_err") and isinstance(v, (int, float))]
+    return sum(vals) / len(vals) if vals else None
+
+
+def _wgrad_overflow_by_class(row: Dict) -> Dict[str, float]:
+    """Mean wgrad-operand clip rate per module class (fwd-side wgrad_x taps
+    + backward wgrad_g probe stats)."""
+    acc: Dict[str, List[float]] = {}
+    for k, v in row.items():
+        if not (k.startswith("tel/") and "wgrad" in k
+                and k.endswith("/clip")):
+            continue
+        # Key shapes: tel/lNN/<scope>/mmJ/... (layer frames),
+        # tel/bwd/<cls>/... (probes), tel/<scope>/mmJ/... (root frame —
+        # e.g. the lm-head linear, which has no layer segment).
+        parts = k.split("/")
+        scope = (parts[2] if parts[1] == "bwd" or _LAYER_SEG.match(parts[1])
+                 else parts[1])
+        cls = scope if scope in _CLASSES else SCOPE_CLASS.get(scope)
+        if cls is not None and isinstance(v, (int, float)):
+            acc.setdefault(cls, []).append(float(v))
+    return {c: sum(vs) / len(vs) for c, vs in acc.items()}
+
+
+class PrecisionController:
+    """Consumes per-step telemetry rows; owns the active-recipe decision."""
+
+    def __init__(self, schedule: TargetPrecisionSchedule,
+                 settings: Optional[ControllerSettings] = None):
+        self.schedule = schedule
+        self.cfg = settings or ControllerSettings()
+        self.error_ema: Optional[float] = None
+        self.loss_ema: Optional[float] = None
+        self._loss_n = 0
+        self.switched_at: Optional[int] = None
+        self.demoted: List[str] = []
+        self._streak: Dict[str, int] = {}
+        self.replay_until: int = -1
+        self.rollbacks = 0
+        self.events: List[Dict] = []
+        self._recipe_cache: Dict[str, recipe_lib.PrecisionRecipe] = {}
+
+    # -- recipe selection --------------------------------------------------
+
+    def active_recipe(self, step: int) -> recipe_lib.PrecisionRecipe:
+        if step < self.replay_until:
+            return self.schedule.target_recipe   # post-rollback replay
+        if self.switched_at is not None and step >= self.switched_at:
+            return self.schedule.target_recipe   # dynamic early switch
+        base = self.schedule.recipe_at(step)     # fixed-fraction switch
+        if base is not self.schedule.recipe or not self.demoted:
+            return base
+        return self._demoted_recipe(base)
+
+    def _demoted_recipe(self, base: recipe_lib.PrecisionRecipe
+                        ) -> recipe_lib.PrecisionRecipe:
+        key = ",".join(sorted(self.demoted))
+        if key not in self._recipe_cache:
+            r = base
+            for cls in sorted(self.demoted):
+                r = recipe_lib.promote_module_class(r, cls)
+            self._recipe_cache[key] = r
+        return self._recipe_cache[key]
+
+    # -- observation -------------------------------------------------------
+
+    def observe(self, step: int, row: Dict) -> List[Dict]:
+        """Digest one history row; returns controller events (possibly
+        including a ``rollback`` request the trainer must act on)."""
+        events: List[Dict] = []
+        in_replay = step < self.replay_until
+        events += self._observe_error(step, row)
+        events += self._observe_overflow(step, row)
+        if not in_replay:
+            events += self._observe_loss(step, row)
+        self.events += events
+        return events
+
+    def _observe_error(self, step: int, row: Dict) -> List[Dict]:
+        e = _fwd_error_signal(row)
+        if e is None:
+            return []
+        d = self.cfg.error_ema_decay
+        self.error_ema = (e if self.error_ema is None
+                          else d * self.error_ema + (1 - d) * e)
+        thr = self.cfg.switch_error_threshold
+        if (thr > 0 and self.error_ema > thr and self.switched_at is None
+                and step < self.schedule.switch_step):
+            self.switched_at = step + 1
+            return [{"event": "switch", "step": step,
+                     "error_ema": self.error_ema,
+                     "to": self.schedule.target_recipe.name}]
+        return []
+
+    def _observe_overflow(self, step: int, row: Dict) -> List[Dict]:
+        thr = self.cfg.demote_overflow_threshold
+        if thr <= 0:
+            return []
+        events = []
+        for cls, rate in _wgrad_overflow_by_class(row).items():
+            if rate > thr:
+                self._streak[cls] = self._streak.get(cls, 0) + 1
+            else:
+                self._streak[cls] = 0
+            if (self._streak[cls] >= self.cfg.demote_patience
+                    and cls not in self.demoted):
+                self.demoted.append(cls)
+                events.append({"event": "demote", "step": step,
+                               "module_class": cls, "overflow": rate})
+        return events
+
+    def _observe_loss(self, step: int, row: Dict) -> List[Dict]:
+        if self.cfg.spike_factor <= 0 or "loss" not in row:
+            return []
+        loss = float(row["loss"])
+        self._loss_n += 1
+        if self.loss_ema is None:
+            self.loss_ema = loss
+            return []
+        is_spike = (self._loss_n > self.cfg.spike_warmup
+                    and loss > self.cfg.spike_factor * self.loss_ema)
+        if is_spike and self.rollbacks < self.cfg.max_rollbacks:
+            self.rollbacks += 1
+            return [{"event": "rollback", "step": step, "loss": loss,
+                     "loss_ema": self.loss_ema}]
+        d = self.cfg.loss_ema_decay
+        self.loss_ema = d * self.loss_ema + (1 - d) * loss
+        return []
+
+    # -- rollback handshake (trainer-owned checkpoint restore) -------------
+
+    def begin_replay(self, restored_step: int) -> None:
+        """Trainer restored a checkpoint at ``restored_step``; replay the
+        next ``replay_steps`` steps at the target precision."""
+        self.replay_until = restored_step + self.cfg.replay_steps
+        self._loss_n = 0  # re-warm spike detection after the rewind
+
+    # -- checkpoint persistence --------------------------------------------
+
+    def state_dict(self) -> Dict:
+        return {"switched_at": self.switched_at,
+                "demoted": list(self.demoted),
+                "replay_until": self.replay_until,
+                "rollbacks": self.rollbacks}
+
+    def load_state(self, state: Dict) -> None:
+        self.switched_at = state.get("switched_at")
+        self.demoted = list(state.get("demoted", []))
+        self.replay_until = int(state.get("replay_until", -1))
+        self.rollbacks = int(state.get("rollbacks", 0))

@@ -1,0 +1,54 @@
+"""Append-only JSONL metrics writer for telemetry rows + controller events.
+
+One JSON object per line.  Step rows are the trainer's history rows
+(``{"step": int, "recipe": str, "loss": float, "tel/...": float, ...}``);
+controller events carry ``{"event": "switch"|"demote"|"rollback", ...}``.
+``benchmarks/telemetry_report.py`` consumes this format.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterable, List, Optional
+
+
+def _jsonable(v):
+    if hasattr(v, "item"):
+        v = v.item()
+    if isinstance(v, float):
+        return v
+    return v
+
+
+class JsonlWriter:
+    def __init__(self, path: str, append: bool = True):
+        self.path = path
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._f = open(path, "a" if append else "w")
+
+    def write(self, row: Dict[str, Any]) -> None:
+        self._f.write(json.dumps({k: _jsonable(v) for k, v in row.items()})
+                      + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "JsonlWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_jsonl(path: str) -> List[Dict[str, Any]]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows

@@ -19,6 +19,7 @@ from repro.core.recipe import PrecisionRecipe
 from repro.models.model import Model
 from repro.optim import (clip_by_global_norm, fp8_compress_grads,
                          get_optimizer, warmup_cosine)
+from repro.telemetry import collect as telemetry
 
 __all__ = ["make_train_step", "make_eval_step", "make_optimizer"]
 
@@ -55,11 +56,28 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     lr_fn = warmup_cosine(tcfg.learning_rate, tcfg.total_steps,
                           tcfg.warmup_frac, tcfg.min_lr_frac)
     use_compression = tcfg.grad_compression == "fp8"
+    # Telemetry: when enabled, a trace-time collector is installed around
+    # the loss (per-layer forward-side stats ride the loss aux; backward
+    # cotangent stats arrive as gradients of zero-valued probes).  When
+    # disabled, the code below is exactly the telemetry-free step — no
+    # collector, no probes, bit-identical graph.
+    collector = telemetry.TelemetryCollector() if tcfg.telemetry else None
 
     def loss_fn(params, batch):
         return model.loss(params, batch, recipe)
 
+    def loss_fn_tel(params, batch, probes):
+        with telemetry.collecting(collector, probes):
+            loss, metrics = model.loss(params, batch, recipe)
+            metrics = dict(metrics)
+            metrics.update(collector.drain_root())
+        return loss, metrics
+
     def compute_grads(params, batch):
+        probes = telemetry.make_probes() if collector is not None else None
+        if collector is not None:
+            vg = jax.value_and_grad(loss_fn_tel, argnums=(0, 2),
+                                    has_aux=True)
         if tcfg.microbatch and tcfg.microbatch > 1:
             mbs = _split_microbatches(batch, tcfg.microbatch)
 
@@ -70,14 +88,34 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                 g_acc = jax.tree.map(jnp.add, g_acc, g)
                 return (g_acc, l_acc + loss), metrics
 
+            def acc_tel(carry, mb):
+                (g_acc, pg_acc), l_acc = carry
+                (loss, metrics), (g, pg) = vg(params, mb, probes)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                # probe stats are sums with a tap-count slot, so plain
+                # accumulation keeps them self-normalizing
+                pg_acc = jax.tree.map(jnp.add, pg_acc, pg)
+                return ((g_acc, pg_acc), l_acc + loss), metrics
+
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                               params)
-            (g, loss_sum), metrics = jax.lax.scan(
-                acc, (g0, jnp.zeros((), jnp.float32)), mbs)
+            if collector is None:
+                (g, loss_sum), metrics = jax.lax.scan(
+                    acc, (g0, jnp.zeros((), jnp.float32)), mbs)
+            else:
+                ((g, pg), loss_sum), metrics = jax.lax.scan(
+                    acc_tel, ((g0, telemetry.make_probes()),
+                              jnp.zeros((), jnp.float32)), mbs)
             k = tcfg.microbatch
             grads = jax.tree.map(lambda x: x / k, g)
             metrics = jax.tree.map(lambda m: m.mean(), metrics)
             metrics["loss"] = loss_sum / k
+            if collector is not None:
+                metrics.update(telemetry.probe_metrics(pg))
+            return grads, metrics
+        if collector is not None:
+            (loss, metrics), (grads, pg) = vg(params, batch, probes)
+            metrics.update(telemetry.probe_metrics(pg))
             return grads, metrics
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch)
@@ -85,6 +123,8 @@ def make_train_step(model: Model, tcfg: TrainConfig,
 
     def train_step(params, opt_state, comp_state, batch, step):
         grads, metrics = compute_grads(params, batch)
+        if collector is not None:
+            metrics.update(telemetry.grad_norm_metrics(grads))
         grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
         if use_compression:
             grads, comp_state = fp8_compress_grads(grads, comp_state)

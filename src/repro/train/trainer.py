@@ -2,13 +2,20 @@
 
 Responsibilities:
   * target-precision schedule (§3.3): low-precision step graph for stage 1,
-    high-precision graph for the final 5-10% of steps;
+    high-precision graph for the final 5-10% of steps (stage-2 recipe
+    configurable via ``TrainConfig.target_recipe``);
+  * adaptive precision (``TrainConfig.controller``): the telemetry-driven
+    ``PrecisionController`` picks the active recipe per step (dynamic early
+    switch, module-class demotion) and can request a loss-spike rollback —
+    restore the last checkpoint and replay at the target precision;
   * checkpoint/restart: atomic step-indexed checkpoints of params + optimizer
-    + compression residuals + step; index-addressed data needs no iterator
-    state — ``resume()`` continues bit-exact (tested);
+    + compression residuals + step (+ controller state); index-addressed data
+    needs no iterator state — ``resume()`` continues bit-exact (tested,
+    including across the precision-switch boundary);
   * straggler monitoring: per-step wall-time EMA outlier detection with a
-    pluggable action (on a real cluster: trigger hot-spare swap / skip-host);
-  * eval + metrics history.
+    pluggable action; flags are folded into the history rows;
+  * eval + metrics history; optional JSONL telemetry log
+    (``TrainConfig.telemetry_jsonl``).
 """
 from __future__ import annotations
 
@@ -26,6 +33,8 @@ from repro.core.recipe import PrecisionRecipe, RECIPES
 from repro.core.schedule import TargetPrecisionSchedule
 from repro.models.model import Model
 from repro.optim import init_compression_state
+from repro.telemetry.controller import PrecisionController
+from repro.telemetry.writer import JsonlWriter
 from repro.train.train_step import make_optimizer, make_train_step
 
 __all__ = ["Trainer", "TrainState", "StepTimeMonitor"]
@@ -76,9 +85,10 @@ class Trainer:
         self.pipeline = pipeline
         self.eval_pipeline = eval_pipeline
         self.recipe: PrecisionRecipe = RECIPES[tcfg.recipe]
-        self.schedule = TargetPrecisionSchedule(self.recipe,
-                                                tcfg.total_steps)
-        self._steps: Dict[str, Callable] = {}
+        self.schedule = TargetPrecisionSchedule(
+            self.recipe, tcfg.total_steps,
+            target=RECIPES[tcfg.target_recipe])
+        self._steps: Dict[tuple, Callable] = {}
         self._jit = jit
         self.monitor = StepTimeMonitor()
         self.history: List[Dict[str, float]] = []
@@ -87,6 +97,13 @@ class Trainer:
             self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
                                           keep=tcfg.keep_checkpoints,
                                           async_save=tcfg.async_checkpoint)
+        self.controller: Optional[PrecisionController] = None
+        if tcfg.controller is not None:
+            self.controller = PrecisionController(self.schedule,
+                                                  tcfg.controller)
+        self.writer: Optional[JsonlWriter] = None
+        if tcfg.telemetry_jsonl:
+            self.writer = JsonlWriter(tcfg.telemetry_jsonl)
 
     # ------------------------------------------------------------------
 
@@ -100,22 +117,34 @@ class Trainer:
                       jnp.zeros((), jnp.float32))
         return TrainState(params, opt_state, comp_state, 0)
 
-    def _step_fn(self, recipe: PrecisionRecipe) -> Callable:
-        if recipe.name not in self._steps:
-            self._steps[recipe.name] = make_train_step(
-                self.model, self.tcfg, recipe, jit=self._jit, donate=False)
-        return self._steps[recipe.name]
+    def _step_fn(self, recipe: PrecisionRecipe,
+                 telemetry: Optional[bool] = None) -> Callable:
+        tel = self.tcfg.telemetry if telemetry is None else telemetry
+        key = (recipe.name, tel)
+        if key not in self._steps:
+            tcfg = (self.tcfg if tel == self.tcfg.telemetry
+                    else dataclasses.replace(self.tcfg, telemetry=tel))
+            self._steps[key] = make_train_step(
+                self.model, tcfg, recipe, jit=self._jit, donate=False)
+        return self._steps[key]
 
     # ------------------------------------------------------------------
 
     def resume(self) -> Optional[TrainState]:
-        """Restore latest intact checkpoint, or None if there is none."""
+        """Restore latest intact checkpoint, or None if there is none.
+
+        The active recipe is *re-derived* from the restored step (schedule
+        fraction + persisted controller state), so resuming across the
+        precision-switch boundary continues with the correct graph.
+        """
         if self.ckpt is None or self.ckpt.latest_step() is None:
             return None
         ref = self.init_state()
         tree = {"params": ref.params, "opt_state": ref.opt_state,
                 "comp_state": ref.comp_state}
         restored, extra = self.ckpt.restore(tree)
+        if self.controller is not None and "controller" in extra:
+            self.controller.load_state(extra["controller"])
         return TrainState(restored["params"], restored["opt_state"],
                           restored["comp_state"], int(extra["step"]))
 
@@ -124,8 +153,10 @@ class Trainer:
             return
         tree = {"params": state.params, "opt_state": state.opt_state,
                 "comp_state": state.comp_state}
-        self.ckpt.save(state.step, tree,
-                       extra={"recipe": self.recipe.name})
+        extra = {"recipe": self.recipe.name}
+        if self.controller is not None:
+            extra["controller"] = self.controller.state_dict()
+        self.ckpt.save(state.step, tree, extra=extra)
 
     # ------------------------------------------------------------------
 
@@ -138,11 +169,17 @@ class Trainer:
         log = log or (lambda s: None)
         while state.step < end:
             step = state.step
-            recipe = self.schedule.recipe_at(step)
-            if self.schedule.is_switch_boundary(step):
+            recipe = self._active_recipe(step)
+            if self.controller is None and self.schedule.is_switch_boundary(
+                    step):
                 log(f"[schedule] step {step}: switching to target precision "
                     f"({self.schedule.target_recipe.name})")
-            fn = self._step_fn(recipe)
+            # telemetry sampling: every N-th step runs the instrumented
+            # graph, the rest run the stat-free one (both static graphs)
+            tel_on = self.tcfg.telemetry and (
+                self.tcfg.telemetry_every <= 1
+                or step % self.tcfg.telemetry_every == 0)
+            fn = self._step_fn(recipe, telemetry=tel_on)
             batch = {k: jnp.asarray(v)
                      for k, v in self.pipeline.batch(step).items()}
             t0 = time.time()
@@ -151,7 +188,8 @@ class Trainer:
                 jnp.asarray(step, jnp.int32))
             jax.block_until_ready(metrics["loss"])
             dt = time.time() - t0
-            if self.monitor.record(step, dt):
+            straggler = self.monitor.record(step, dt)
+            if straggler:
                 log(f"[straggler] step {step} took {dt:.2f}s "
                     f"(ema {self.monitor.ema:.2f}s)")
             state = TrainState(params, opt_state, comp_state, step + 1)
@@ -159,16 +197,70 @@ class Trainer:
             row["step"] = step
             row["recipe"] = recipe.name
             row["dt"] = dt
+            row["straggler"] = straggler
             self.history.append(row)
+            if self.writer is not None:
+                self.writer.write(row)
             if self.tcfg.log_every and step % self.tcfg.log_every == 0:
                 log(f"step {step:5d} loss {row['loss']:.4f} "
                     f"gnorm {row['grad_norm']:.3f} lr {row['lr']:.2e} "
                     f"[{recipe.name}] {dt*1000:.0f}ms")
+            # controller first: a loss-spike rollback must restore a
+            # checkpoint from BEFORE the spiked update, so the boundary
+            # save below happens only after the row was judged healthy
+            # (or after the restore, persisting the armed replay window).
+            if self.controller is not None:
+                state = self._apply_controller_events(
+                    state, self.controller.observe(step, row), log)
             if (self.ckpt is not None and self.tcfg.checkpoint_every
                     and (step + 1) % self.tcfg.checkpoint_every == 0):
                 self.save(state)
         if self.ckpt is not None:
             self.ckpt.wait()
+        return state
+
+    # ------------------------------------------------------------------
+
+    def _active_recipe(self, step: int) -> PrecisionRecipe:
+        if self.controller is not None:
+            return self.controller.active_recipe(step)
+        return self.schedule.recipe_at(step)
+
+    def _apply_controller_events(self, state: TrainState, events,
+                                 log: Callable[[str], None]) -> TrainState:
+        """Apply controller decisions.  switch/demote only alter which
+        recipe ``_active_recipe`` selects next step; rollback restores the
+        last checkpoint and arms the high-precision replay window."""
+        ctrl = self.controller
+        for ev in events:
+            if self.writer is not None:
+                self.writer.write(ev)
+            if ev["event"] == "switch":
+                log(f"[controller] step {ev['step']}: quant-error EMA "
+                    f"{ev['error_ema']:.4f} crossed threshold -> early "
+                    f"switch to {ev['to']}")
+            elif ev["event"] == "demote":
+                log(f"[controller] step {ev['step']}: sustained overflow "
+                    f"({ev['overflow']:.4f}) -> demoting "
+                    f"{ev['module_class']} to FP8")
+            elif ev["event"] == "rollback":
+                # keep the attempt counter across the checkpointed
+                # controller state resume() reloads (guards infinite loops)
+                attempts = ctrl.rollbacks
+                restored = self.resume()
+                if restored is None:
+                    log(f"[controller] step {ev['step']}: loss spike "
+                        f"({ev['loss']:.3f} vs ema {ev['loss_ema']:.3f}) "
+                        "but no checkpoint to roll back to")
+                    continue
+                ctrl.rollbacks = max(ctrl.rollbacks, attempts)
+                ctrl.begin_replay(restored.step)
+                log(f"[controller] step {ev['step']}: loss spike "
+                    f"({ev['loss']:.3f} vs ema {ev['loss_ema']:.3f}) -> "
+                    f"rollback to step {restored.step}, replaying "
+                    f"{ctrl.cfg.replay_steps} steps at "
+                    f"{self.schedule.target_recipe.name}")
+                state = restored
         return state
 
     # ------------------------------------------------------------------

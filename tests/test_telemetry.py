@@ -1,0 +1,347 @@
+"""Telemetry subsystem: in-graph stats, controller decision rules,
+schedule target-recipe knob, resume across the switch boundary, JSONL."""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ControllerSettings, TrainConfig, get_config
+from repro.core.recipe import MM_FP8, RECIPES, promote_module_class
+from repro.core.schedule import TargetPrecisionSchedule
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.telemetry import collect as tel_collect
+from repro.telemetry.controller import PrecisionController
+from repro.telemetry.writer import JsonlWriter, read_jsonl
+from repro.train.train_step import make_optimizer, make_train_step
+from repro.train.trainer import Trainer
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("tiny")
+    model = build_model(cfg)
+    pipe = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
+    return cfg, model, pipe
+
+
+def _schedule(total=100, recipe="paper_fp4", target=None):
+    return TargetPrecisionSchedule(
+        RECIPES[recipe], total,
+        target=RECIPES[target] if target else None)
+
+
+# ---------------------------------------------------------------------------
+# In-graph collection
+# ---------------------------------------------------------------------------
+
+def test_telemetry_metrics_present(tiny_setup, tmp_path):
+    cfg, model, pipe = tiny_setup
+    jsonl = str(tmp_path / "tel.jsonl")
+    tcfg = TrainConfig(recipe="paper_fp4", total_steps=3, global_batch=8,
+                       seq_len=64, learning_rate=3e-3, log_every=0,
+                       telemetry=True, telemetry_jsonl=jsonl)
+    tr = Trainer(model, tcfg, pipe)
+    tr.train()
+    row = tr.history[-1]
+    # per-layer x per-role forward stats for both layers
+    for layer in ("l00", "l01"):
+        for slot in ("fwd_x", "fwd_w", "wgrad_x"):
+            key = f"tel/{layer}/ffn/mm0/{slot}/underflow"
+            assert key in row, sorted(k for k in row if "ffn/mm0" in k)
+            assert 0.0 <= row[key] <= 1.0
+        assert row[f"tel/{layer}/ffn/mm0/fwd_x/rel_err"] > 0  # FP4 is noisy
+        assert f"tel/gnorm/{layer}" in row and row[f"tel/gnorm/{layer}"] > 0
+    # backward-side (probe-transported) per-class stats
+    assert row["tel/bwd/attn/taps"] > 0
+    assert row["tel/bwd/ffn/wgrad_g/rel_err"] > 0        # FP8 wgrad
+    assert row["tel/bwd/ffn/dgrad_g/rel_err"] == 0.0      # BF16 dgrad
+    assert 0.0 <= row["tel/bwd/attn/dgrad_g/underflow"] <= 1.0
+    # JSONL log mirrors history
+    logged = read_jsonl(jsonl)
+    assert len(logged) == 3
+    assert logged[-1]["step"] == 2
+    assert any(k.startswith("tel/") for k in logged[-1])
+    assert "straggler" in logged[-1]  # StepTimeMonitor folded into rows
+
+
+def test_telemetry_disabled_is_aux_free_and_bit_identical(tiny_setup):
+    """Off => no tel aux in the graph outputs AND the training math with
+    telemetry on is untouched (params evolve bit-identically)."""
+    cfg, model, pipe = tiny_setup
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    params = model.init(jax.random.PRNGKey(0))
+    results = {}
+    for tel in (False, True):
+        tcfg = TrainConfig(recipe="paper_fp4", total_steps=10,
+                           global_batch=8, seq_len=64, telemetry=tel)
+        step = make_train_step(model, tcfg, RECIPES["paper_fp4"],
+                               jit=True, donate=False)
+        opt_state = make_optimizer(model, tcfg).init(params)
+        p, o, c, metrics = step(params, opt_state,
+                                jnp.zeros((), jnp.float32), batch,
+                                jnp.asarray(0, jnp.int32))
+        p, o, c, metrics2 = step(p, o, c, batch, jnp.asarray(1, jnp.int32))
+        results[tel] = (p, metrics, metrics2)
+    p_off, m_off, _ = results[False]
+    p_on, m_on, _ = results[True]
+    assert not any(k.startswith("tel/") for k in m_off)
+    assert any(k.startswith("tel/") for k in m_on)
+    # identical non-telemetry metric set (aux-free graph apart from tel/)
+    assert set(m_off) == {k for k in m_on if not k.startswith("tel/")}
+    for a, b in zip(jax.tree.leaves(p_off), jax.tree.leaves(p_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_telemetry_every_samples_alternate_steps(tiny_setup):
+    cfg, model, pipe = tiny_setup
+    tcfg = TrainConfig(recipe="paper_fp4", total_steps=4, global_batch=8,
+                       seq_len=64, learning_rate=3e-3, log_every=0,
+                       telemetry=True, telemetry_every=2)
+    tr = Trainer(model, tcfg, pipe)
+    tr.train()
+    has_tel = [any(k.startswith("tel/") for k in r) for r in tr.history]
+    assert has_tel == [True, False, True, False]
+
+
+def test_grad_tap_identity_gradients():
+    """grad_tap must not perturb cotangents; probe grads carry the stats."""
+    recipe = RECIPES["paper_fp4"].ffn_linear
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 64), jnp.float32)
+    probes = tel_collect.make_probes()
+    col = tel_collect.TelemetryCollector()
+
+    def f(x, probes):
+        with tel_collect.collecting(col, probes):
+            with tel_collect.module_scope("ffn"):
+                y = tel_collect.grad_tap(x * 2.0, recipe)
+        return jnp.sum(y ** 2)
+
+    g, pg = jax.grad(f, argnums=(0, 1))(x, probes)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(8.0 * x), rtol=1e-6)
+    assert float(pg["ffn"][-1]) == 1.0          # one tap counted
+    assert float(pg["attn"][-1]) == 0.0
+    m = tel_collect.probe_metrics(pg)
+    assert m["tel/bwd/ffn/wgrad_g/rel_err"] > 0  # FP8 wgrad_g quant error
+
+
+# ---------------------------------------------------------------------------
+# Schedule target recipe (satellite)
+# ---------------------------------------------------------------------------
+
+def test_schedule_target_recipe_configurable(tiny_setup):
+    cfg, model, pipe = tiny_setup
+    sched = _schedule(total=100, target="fp8")
+    assert sched.target_recipe.name == "fp8"
+    assert sched.recipe_at(99).name == "fp8"
+    assert sched.recipe_at(0).name == "paper_fp4"
+    # default stays the BF16 baseline
+    assert _schedule(total=100).target_recipe.name == "bf16"
+    # threaded from TrainConfig
+    tcfg = TrainConfig(recipe="paper_fp4", total_steps=10,
+                       target_recipe="fp8")
+    tr = Trainer(model, tcfg, pipe)
+    assert tr.schedule.target_recipe.name == "fp8"
+
+
+def test_promote_module_class():
+    base = RECIPES["paper_fp4"]
+    r = promote_module_class(base, "ffn")
+    assert r.ffn_linear == MM_FP8
+    assert r.attn_linear == base.attn_linear
+    assert r.name != base.name
+    # no-op when the class already runs FP8
+    assert promote_module_class(r, "ffn") is r
+
+
+# ---------------------------------------------------------------------------
+# Controller decision rules (deterministic, synthetic rows)
+# ---------------------------------------------------------------------------
+
+def test_controller_dynamic_switch_on_error_ema():
+    ctrl = PrecisionController(
+        _schedule(total=100),  # fixed switch at 92
+        ControllerSettings(switch_error_threshold=0.1, error_ema_decay=0.5))
+    row = {"loss": 1.0, "tel/l00/ffn/mm0/fwd_x/rel_err": 0.3}
+    events = []
+    for step in range(10):
+        events += ctrl.observe(step, row)
+    assert [e["event"] for e in events] == ["switch"]
+    s = events[0]["step"]
+    assert s < 92
+    assert ctrl.active_recipe(s + 1).name == "bf16"
+    assert ctrl.active_recipe(s).name == "paper_fp4"  # switch is next-step
+
+
+def test_controller_fixed_fraction_still_applies():
+    ctrl = PrecisionController(
+        _schedule(total=100),
+        ControllerSettings(switch_error_threshold=0.0))  # rule disabled
+    for step in range(5):
+        ctrl.observe(step, {"loss": 1.0,
+                            "tel/l00/ffn/mm0/fwd_x/rel_err": 0.9})
+    assert ctrl.switched_at is None
+    assert ctrl.active_recipe(91).name == "paper_fp4"
+    assert ctrl.active_recipe(92).name == "bf16"       # fraction boundary
+
+
+def test_controller_demotes_on_overflow_storm():
+    ctrl = PrecisionController(
+        _schedule(total=100),
+        ControllerSettings(demote_overflow_threshold=0.2,
+                           demote_patience=3))
+    storm = {"loss": 1.0, "tel/l00/ffn/mm0/wgrad_x/clip": 0.5,
+             "tel/bwd/ffn/wgrad_g/clip": 0.6,
+             "tel/l00/attn/mm0/wgrad_x/clip": 0.0}
+    events = []
+    for step in range(5):
+        events += ctrl.observe(step, storm)
+    demotes = [e for e in events if e["event"] == "demote"]
+    assert len(demotes) == 1 and demotes[0]["module_class"] == "ffn"
+    active = ctrl.active_recipe(10)
+    assert active.ffn_linear == MM_FP8                     # demoted
+    assert active.attn_linear == RECIPES["paper_fp4"].attn_linear
+    # a calm class never demotes
+    assert "attn" not in ctrl.demoted
+
+
+def test_controller_classifies_rootframe_head_keys():
+    """Root-frame (lm-head) keys have no lNN segment; they must still feed
+    the demotion signal for the head class."""
+    ctrl = PrecisionController(
+        _schedule(total=100),
+        ControllerSettings(demote_overflow_threshold=0.2,
+                           demote_patience=2))
+    storm = {"loss": 1.0, "tel/head/mm0/wgrad_x/clip": 0.9}
+    events = []
+    for step in range(3):
+        events += ctrl.observe(step, storm)
+    assert [e["module_class"] for e in events
+            if e["event"] == "demote"] == ["head"]
+
+
+def test_controller_demotion_needs_sustained_signal():
+    ctrl = PrecisionController(
+        _schedule(total=100),
+        ControllerSettings(demote_overflow_threshold=0.2,
+                           demote_patience=3))
+    hot = {"loss": 1.0, "tel/l00/ffn/mm0/wgrad_x/clip": 0.5}
+    cold = {"loss": 1.0, "tel/l00/ffn/mm0/wgrad_x/clip": 0.0}
+    for step, row in enumerate([hot, hot, cold, hot, hot]):
+        assert ctrl.observe(step, row) == []               # streak broken
+    assert ctrl.demoted == []
+
+
+def test_controller_spike_triggers_rollback_and_replay():
+    ctrl = PrecisionController(
+        _schedule(total=100),
+        ControllerSettings(spike_factor=2.0, spike_warmup=3,
+                           replay_steps=4, max_rollbacks=1))
+    events = []
+    for step in range(6):
+        events += ctrl.observe(step, {"loss": 1.0})
+    assert events == []
+    events = ctrl.observe(6, {"loss": 5.0})                # spike
+    assert [e["event"] for e in events] == ["rollback"]
+    ctrl.begin_replay(4)                                   # trainer restored
+    assert ctrl.active_recipe(5).name == "bf16"            # replay window
+    assert ctrl.active_recipe(8).name == "paper_fp4"       # window over
+    # replay steps don't re-trigger; max_rollbacks caps further ones
+    assert ctrl.observe(5, {"loss": 5.0}) == []
+    assert ctrl.observe(9, {"loss": 50.0}) == []           # capped
+    # state round-trips through checkpoint extra (JSON)
+    state = json.loads(json.dumps(ctrl.state_dict()))
+    ctrl2 = PrecisionController(_schedule(total=100), ControllerSettings())
+    ctrl2.load_state(state)
+    assert ctrl2.replay_until == ctrl.replay_until
+    assert ctrl2.rollbacks == 1
+
+
+def test_trainer_rollback_restores_checkpoint(tiny_setup, tmp_path):
+    """Trainer-level rollback: a rollback event restores the latest
+    checkpoint and arms the high-precision replay window."""
+    cfg, model, pipe = tiny_setup
+    tcfg = TrainConfig(recipe="paper_fp4", total_steps=100, global_batch=8,
+                       seq_len=64, learning_rate=3e-3, log_every=0,
+                       checkpoint_every=4, checkpoint_dir=str(tmp_path),
+                       controller=ControllerSettings(spike_factor=2.0,
+                                                     replay_steps=3))
+    tr = Trainer(model, tcfg, pipe)
+    state = tr.train(num_steps=8)          # checkpoints at steps 4 and 8
+    assert state.step == 8
+    ev = {"event": "rollback", "step": 7, "loss": 9.0, "loss_ema": 1.0}
+    tr.controller.rollbacks = 1            # as if observe() emitted it
+    state2 = tr._apply_controller_events(state, [ev], lambda s: None)
+    assert state2.step == 8                # latest intact checkpoint
+    assert tr.controller.replay_until == 8 + 3
+    assert tr._active_recipe(9).name == "bf16"    # replaying at target
+    assert tr._active_recipe(11).name == "paper_fp4"
+
+
+# ---------------------------------------------------------------------------
+# Resume across the precision-switch boundary (satellite)
+# ---------------------------------------------------------------------------
+
+def test_resume_across_switch_boundary(tiny_setup, tmp_path):
+    """Checkpoint in stage 1, resume in a fresh Trainer, cross the §3.3
+    switch: the active recipe is re-derived and training is bit-exact
+    vs. an uninterrupted run."""
+    cfg, model, pipe = tiny_setup
+
+    def mk(ckdir):
+        tcfg = TrainConfig(recipe="paper_fp4", total_steps=40,
+                           global_batch=8, seq_len=64, learning_rate=3e-3,
+                           log_every=0, checkpoint_every=10,
+                           checkpoint_dir=str(ckdir))
+        return Trainer(model, tcfg, SyntheticLM(cfg.vocab_size, 64, 8,
+                                                seed=0))
+
+    ref = mk(tmp_path / "a").train()               # uninterrupted
+    trb = mk(tmp_path / "b")
+    trb.train(num_steps=30)                        # stop in stage 1
+    trc = mk(tmp_path / "b")                       # fresh process stand-in
+    resumed = trc.resume()
+    assert resumed is not None and resumed.step == 30
+    assert trc._active_recipe(resumed.step).name == "paper_fp4"
+    final = trc.train(resumed)
+    recipes = [r["recipe"] for r in trc.history]
+    assert recipes[0] == "paper_fp4" and recipes[-1] == "bf16"
+    switch = trc.schedule.switch_step
+    assert trc.history[switch - 30]["recipe"] == "bf16"
+    assert trc.history[switch - 31]["recipe"] == "paper_fp4"
+    for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(final.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Writers / bench JSON (satellite)
+# ---------------------------------------------------------------------------
+
+def test_jsonl_writer_roundtrip(tmp_path):
+    path = str(tmp_path / "x.jsonl")
+    with JsonlWriter(path) as w:
+        w.write({"step": 0, "loss": 1.5, "recipe": "paper_fp4"})
+        w.write({"event": "demote", "module_class": "ffn",
+                 "overflow": np.float32(0.5)})
+    rows = read_jsonl(path)
+    assert rows[0]["loss"] == 1.5
+    assert rows[1]["event"] == "demote"
+    assert isinstance(rows[1]["overflow"], float)  # numpy scalars coerced
+
+
+def test_bench_write_json(tmp_path):
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import common
+    common.emit("kernel/test_row", 12.34, "impl=test")
+    out = str(tmp_path / "BENCH_test.json")
+    common.write_json(out)
+    with open(out) as f:
+        payload = json.load(f)
+    assert payload["schema"] == "bench.v1"
+    names = [r["name"] for r in payload["benchmarks"]]
+    assert "kernel/test_row" in names
