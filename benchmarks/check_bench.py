@@ -1,0 +1,99 @@
+"""Compare a fresh ``kernel_bench --json`` run against the committed
+baseline (``BENCH_kernels.json``) and fail on step-time regressions.
+
+CPU/interpret-mode wall-times are trend-only: absolute numbers vary with
+the host, so every timing is normalized twice before comparison — first by
+the same run's plain-matmul time (``kernel/matmul_plain_512``, cancels raw
+host speed), then by the median of all normalized ratios (cancels the
+class-wide drift between interpret-mode Pallas emulation and native XLA
+across hosts/jax versions).  A regression is an entry that got slower
+relative to its *peers* in the same run.  Counter records
+(``unit=tile_qdqs`` etc.) are compared exactly: analytic quantize-work
+counts must never silently grow.
+
+Exit code 1 if any timing ratio regresses by more than ``--threshold``
+(default 15%) or any counter grows.
+
+Usage:
+    python -m benchmarks.check_bench BENCH_kernels.json fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+NORM_KEY = "kernel/matmul_plain_512"
+# Entries below this absolute time (us) are too noisy for a ratio gate.
+MIN_US = 200.0
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload["benchmarks"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="allowed relative regression of normalized time")
+    args = ap.parse_args(argv)
+
+    base, cur = _load(args.baseline), _load(args.current)
+    if NORM_KEY not in base or NORM_KEY not in cur:
+        print(f"[check_bench] missing normalizer {NORM_KEY}", file=sys.stderr)
+        return 1
+    bn, cn = base[NORM_KEY]["us_per_call"], cur[NORM_KEY]["us_per_call"]
+
+    failures, compared, timing = [], 0, []
+    for name, brec in sorted(base.items()):
+        if name == NORM_KEY or name not in cur:
+            continue
+        crec = cur[name]
+        is_counter = (brec.get("unit", "us") != "us"
+                      or "unit=" in brec.get("derived", ""))
+        if is_counter:  # analytic counter, compared exactly
+            compared += 1
+            if crec["us_per_call"] > brec["us_per_call"]:
+                failures.append(
+                    f"{name}: counter grew {brec['us_per_call']} -> "
+                    f"{crec['us_per_call']}")
+            continue
+        if brec["us_per_call"] < MIN_US:
+            continue
+        compared += 1
+        ratio = (crec["us_per_call"] / cn) / (brec["us_per_call"] / bn)
+        timing.append((name, ratio))
+
+    # Interpret-mode Pallas (Python emulation) and the native-XLA normalizer
+    # scale differently across hosts, so the whole entry class can drift
+    # together on a different machine.  Dividing by the median ratio cancels
+    # that class-wide drift; only entries that regress RELATIVE to their
+    # peers trip the gate.
+    med = sorted(r for _, r in timing)[len(timing) // 2] if timing else 1.0
+    for name, ratio in timing:
+        rel = ratio / med
+        status = "ok"
+        if rel > 1.0 + args.threshold:
+            status = "REGRESSED"
+            failures.append(f"{name}: {rel:.3f}x the run's median-adjusted "
+                            f"baseline (> {1 + args.threshold:.2f}x)")
+        print(f"[check_bench] {name}: {ratio:.3f}x baseline, "
+              f"{rel:.3f}x median-adjusted ({status})")
+
+    print(f"[check_bench] compared {compared} entries "
+          f"(norm: baseline {bn:.0f}us, current {cn:.0f}us)")
+    if failures:
+        print("[check_bench] FAILURES:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print("[check_bench] no regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,11 +35,15 @@ ROWS: List[str] = []
 RECORDS: List[Dict[str, Any]] = []
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
+def emit(name: str, us_per_call: float, derived: str,
+         unit: str = "us") -> None:
+    """Record one benchmark row.  ``unit`` defaults to microseconds;
+    analytic counters (e.g. tile-QDQ counts) pass their own unit so JSON
+    consumers can separate counts from timings without string-sniffing."""
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                    "derived": derived})
+                    "unit": unit, "derived": derived})
     print(row, flush=True)
 
 

@@ -21,6 +21,32 @@ from repro.models.attention import chunked_attention
 from repro.kernels.ref import flash_attention_ref
 
 
+def _quant_work_counters(m, k, n, tag: str) -> None:
+    """Analytic per-role quantize-work counters for the two-phase pipeline.
+
+    The pre-rework fused kernel re-QDQ'd every LHS (128 x 128) K-tile once
+    per output-column visit and every RHS K-tile once per output-row visit
+    — O(M/bm * N/bn) tile-QDQs per operand element-touch.  The quantize
+    pass does each K-panel ONCE.  Counts are exact tile-QDQ totals for one
+    matmul of the given shape (128-padded), emitted so the redundancy win
+    is visible in the BENCH JSON.
+    """
+    t = 128
+    mt, kt, nt = -(-m // t), -(-k // t), -(-n // t)
+    for role, (op_tiles, revisit) in {
+        "fwd": ((mt * kt, nt), (kt * nt, mt)),
+        "dgrad": ((mt * nt, kt), (nt * kt, mt)),
+        "wgrad": ((kt * mt, nt), (mt * nt, kt)),
+    }.items():
+        (lhs_tiles, lhs_rev), (rhs_tiles, rhs_rev) = op_tiles, revisit
+        old = lhs_tiles * lhs_rev + rhs_tiles * rhs_rev
+        new = lhs_tiles + rhs_tiles
+        emit(f"kernel/{tag}_quant_tile_qdqs_{role}", float(new),
+             f"old_fused={old};new_pipeline={new};"
+             f"redundancy_x={old / new:.1f};one_qdq_per_kpanel=true",
+             unit="tile_qdqs")
+
+
 def _bench_fused_roles(x, w, recipe, tag: str) -> None:
     """Time the fused pallas_qmatmul path vs unfused qmatmul for all three
     training matmuls: fwd via the primal, dgrad+wgrad via the VJP."""
@@ -33,10 +59,29 @@ def _bench_fused_roles(x, w, recipe, tag: str) -> None:
         # the jitted pullback so the row really is dgrad+wgrad.
         _, pullback = jax.vjp(lambda p, q: mm(p, q, key, recipe), x, w)
         f_bwd = jax.jit(pullback)
-        emit(f"kernel/{tag}_fwd_{impl_name}", timeit(f_fwd, x, w, n=5),
+        emit(f"kernel/{tag}_fwd_{impl_name}", timeit(f_fwd, x, w, n=15),
              f"impl={impl_name};role=fwd")
         emit(f"kernel/{tag}_dgrad_wgrad_{impl_name}",
-             timeit(f_bwd, c, n=5), f"impl={impl_name};role=dgrad+wgrad")
+             timeit(f_bwd, c, n=15), f"impl={impl_name};role=dgrad+wgrad")
+    _quant_work_counters(x.shape[0], x.shape[1], w.shape[1], tag)
+
+
+def _bench_telemetry_epilogue(x, w, recipe, tag: str) -> None:
+    """Quantize-pass telemetry epilogue on vs off (same kernel, stats
+    accumulators + (1, 8) stats output added) for the fwd role."""
+    from repro.core.qlinear import kernel_quant_mode
+    from repro.kernels.ops import pallas_qmm
+    sa, sb = recipe.fwd_x, recipe.fwd_w
+    ma, mb = kernel_quant_mode(sa), kernel_quant_mode(sb)
+    f_off = jax.jit(lambda a, b: pallas_qmm(
+        a, b, sa, sb, mode_a=ma, mode_b=mb))
+    f_on = jax.jit(lambda a, b: pallas_qmm(
+        a, b, sa, sb, mode_a=ma, mode_b=mb, collect_stats=True)[0])
+    t_off = timeit(f_off, x, w, n=15)
+    t_on = timeit(f_on, x, w, n=15)
+    emit(f"kernel/{tag}_quant_epilogue_off", t_off, "telemetry_epilogue=off")
+    emit(f"kernel/{tag}_quant_epilogue_on", t_on,
+         f"telemetry_epilogue=on;overhead_x={t_on / t_off:.3f}")
 
 
 def _bench_telemetry_step() -> None:
@@ -105,6 +150,8 @@ def run() -> None:
     xs, ws = x[:256, :256], w[:256, :256]
     _bench_fused_roles(xs, ws, RECIPES["paper_fp4"].ffn_linear,
                        "qmm256_ffn_paper")
+    _bench_telemetry_epilogue(xs, ws, RECIPES["paper_fp4"].ffn_linear,
+                              "qmm256_ffn_paper")
 
     b, s, h, d = 2, 512, 4, 64
     ks = jax.random.split(jax.random.PRNGKey(2), 3)

@@ -9,13 +9,16 @@ master weight unchanged).
 Two implementations share the same recipe semantics:
 
   * ``qmatmul``        — unfused QDQ + ``lax.dot`` (simulation reference);
-  * ``pallas_qmatmul`` — fwd, dgrad and wgrad each run through the fused
-    per-group-quantize + tiled-MXU Pallas kernel
-    (``kernels.fp4_matmul.fused_qmm``), with transposed-operand variants so
-    the backward matmuls quantize relative to their own reduction axes
-    without materializing ``w^T``/``x^T`` in HBM.  Roles whose specs the
-    kernel cannot realize (stochastic rounding, fp16 clipping, non-128
-    blocks) fall back to the QDQ path for that role only.
+  * ``pallas_qmatmul`` — fwd, dgrad and wgrad each run through the
+    quantize-once two-phase Pallas pipeline
+    (``kernels.fp4_matmul.fused_qmm``: one quantize pass per operand's
+    K-panels + a decoupled-tiling matmul pass), with transposed-operand
+    variants so the backward matmuls quantize relative to their own
+    reduction axes without materializing ``w^T``/``x^T`` in HBM.
+    Stochastic-rounding specs are kernel-realizable (in-kernel PRNG noise
+    seeded from ``key_data``); roles the kernel cannot realize (fp16
+    clipping, non-128 blocks) fall back to the QDQ path for that role
+    only.
 
 The public entry point ``qlinear`` folds arbitrary leading batch dims and
 selects the implementation via ``impl`` ('qdq' | 'pallas', threaded from
@@ -41,8 +44,8 @@ from repro.core.quantize import QuantSpec, qdq
 from repro.core.recipe import MatmulRecipe
 from repro.telemetry import collect as telemetry
 
-__all__ = ["qmatmul", "pallas_qmatmul", "qlinear", "dot_qdq",
-           "kernel_quant_mode", "matmul_impl"]
+__all__ = ["qmatmul", "pallas_qmatmul", "pallas_qmatmul_stats", "qlinear",
+           "dot_qdq", "kernel_quant_mode", "matmul_impl"]
 
 
 def _maybe_key(key_data: Optional[jnp.ndarray], spec: QuantSpec,
@@ -108,25 +111,28 @@ _KERNEL_BLOCK = 128
 
 
 def kernel_quant_mode(spec: QuantSpec) -> Optional[str]:
-    """The fused kernel's quantization mode realizing ``spec``, or None.
+    """The fused pipeline's quantization mode realizing ``spec``, or None.
 
-    ``pass``   bf16/fp32 passthrough roles;
-    ``block``  per-(1 x 128) groups along the reduction axis (in-kernel);
-    ``tile``   per-(128 x 128) tiles (in-kernel);
-    ``scaled`` per-token / per-tensor (amax group spans the full reduction
-               axis -> scale precomputed outside, streamed into the kernel).
+    ``pass``            bf16/fp32 passthrough roles;
+    ``block``           per-(1 x 128) groups along the reduction axis;
+    ``tile``            per-(128 x 128) tiles;
+    ``token``/``tensor`` amax group spans the full reduction axis — the
+                        quantize pass computes it with a two-sweep grid
+                        (no external scale precompute).
 
-    None means unrealizable (stochastic rounding, fp16 clip-only codec,
-    non-128 block sizes) — the caller falls back to QDQ for that role.
+    Stochastic rounding is kernel-realizable since the quantize-once
+    rework (in-kernel PRNG noise).  None means unrealizable (fp16
+    clip-only codec, non-128 block sizes) — the caller falls back to QDQ
+    for that role.
     """
     if spec.is_passthrough:
         return "pass"
-    if spec.stochastic or spec.fmt == "fp16":
+    if spec.fmt == "fp16":
         return None
     if spec.granularity in ("block", "tile"):
         return spec.granularity if spec.block == _KERNEL_BLOCK else None
     if spec.granularity in ("token", "tensor"):
-        return "scaled"
+        return spec.granularity
     return None
 
 
@@ -134,13 +140,18 @@ def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
                spec_a: QuantSpec, spec_b: QuantSpec,
                *, trans_a: bool = False, trans_b: bool = False,
                key_data: Optional[jnp.ndarray] = None,
-               salt: int = 0) -> jnp.ndarray:
-    """One matmul role through the fused Pallas kernel when its specs are
-    kernel-realizable, else through ``dot_qdq`` (transposes materialized).
+               salt: int = 0, collect_stats: bool = False):
+    """One matmul role through the quantize-once Pallas pipeline when its
+    specs are kernel-realizable, else through ``dot_qdq`` (transposes
+    materialized).
 
     ``a``/``b`` are the STORED arrays; the effective operands are
     ``a^T``/``b^T`` under the trans flags, and quantization granularities
-    apply in effective orientation (reduction-relative).
+    apply in effective orientation (reduction-relative).  Stochastic specs
+    consume ``key_data`` through the kernel's in-kernel PRNG (different
+    stream than the QDQ path's ``jax.random`` — statistically equivalent,
+    not bit-equal).  With ``collect_stats`` returns ``(y, (sa, sb))`` raw
+    quantize-pass stat vectors (None for pass/fallback operands).
     """
     mode_a, mode_b = kernel_quant_mode(spec_a), kernel_quant_mode(spec_b)
     if mode_a is not None and mode_b is not None:
@@ -148,10 +159,13 @@ def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
         # this module at import time).
         from repro.kernels.ops import pallas_qmm
         return pallas_qmm(a, b, spec_a, spec_b, mode_a=mode_a, mode_b=mode_b,
-                          trans_a=trans_a, trans_b=trans_b)
+                          trans_a=trans_a, trans_b=trans_b,
+                          key_data=key_data, salt=salt,
+                          collect_stats=collect_stats)
     ae = a.T if trans_a else a
     be = b.T if trans_b else b
-    return dot_qdq(ae, be, spec_a, spec_b, key_data=key_data, salt=salt)
+    y = dot_qdq(ae, be, spec_a, spec_b, key_data=key_data, salt=salt)
+    return (y, (None, None)) if collect_stats else y
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
@@ -182,6 +196,35 @@ def _pallas_qmatmul_bwd(recipe, res, g):
 
 
 pallas_qmatmul.defvjp(_pallas_qmatmul_fwd, _pallas_qmatmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def pallas_qmatmul_stats(x: jnp.ndarray, w: jnp.ndarray,
+                         key_data: jnp.ndarray, recipe: MatmulRecipe):
+    """``pallas_qmatmul`` that additionally returns the forward quantize
+    pass's telemetry-epilogue vectors ``(y, (stats_x, stats_w))``.
+
+    The stats come from the SAME kernel invocation that quantizes the
+    operands for the dot (no second QDQ pass); ``y`` is bit-identical to
+    ``pallas_qmatmul``.  Pass/fallback slots are None.  Gradients match
+    ``pallas_qmatmul`` (stat outputs carry no cotangent).
+    """
+    return _dot_fused(x, w, recipe.fwd_x, recipe.fwd_w, key_data=key_data,
+                      salt=0, collect_stats=True)
+
+
+def _pallas_qmatmul_stats_fwd(x, w, key_data, recipe):
+    out = pallas_qmatmul_stats(x, w, key_data, recipe)
+    return out, (x, w, key_data)
+
+
+def _pallas_qmatmul_stats_bwd(recipe, res, ct):
+    g = ct[0]
+    return _pallas_qmatmul_bwd(recipe, res, g)
+
+
+pallas_qmatmul_stats.defvjp(_pallas_qmatmul_stats_fwd,
+                            _pallas_qmatmul_stats_bwd)
 
 _IMPLS = {"qdq": qmatmul, "pallas": pallas_qmatmul}
 
@@ -219,13 +262,32 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
         if key_data is None:
             key_data = _zero_key()
         x2d = x.reshape(-1, k)
-        # Telemetry taps (no-ops unless a collector is installed; the
-        # stats use the same QDQ math both impls realize, so one tap site
-        # covers the qdq and pallas paths).  fwd-computable operand stats
-        # go to the active collection frame; grad_tap transports dgrad_g/
-        # wgrad_g cotangent stats out via the probe-gradient channel.
-        telemetry.tap_matmul(x2d, w, recipe)
-        y = matmul_impl(impl)(x2d, w, key_data, recipe)
+        # Telemetry taps (no-ops unless a collector is installed).
+        # fwd-computable operand stats go to the active collection frame;
+        # grad_tap transports dgrad_g/wgrad_g cotangent stats out via the
+        # probe-gradient channel.  On the pallas impl the fwd_x/fwd_w slots
+        # come from the quantize pass's telemetry EPILOGUE — the very kernel
+        # that feeds the dot — instead of tap_matmul re-running QDQ math;
+        # the remaining fwd-side slots (wgrad_x, dgrad_w: different
+        # orientation, only quantized in the backward) keep the tap path.
+        fused_fwd = None
+        y = None
+        if impl == "pallas" and telemetry.active() is not None:
+            ma = kernel_quant_mode(recipe.fwd_x)
+            mb = kernel_quant_mode(recipe.fwd_w)
+            if (ma is not None and mb is not None
+                    and (ma != "pass" or mb != "pass")):
+                from repro.kernels.fp4_matmul import finalize_quant_stats
+                y, (sa, sb) = pallas_qmatmul_stats(x2d, w, key_data, recipe)
+                fused_fwd = {
+                    "fwd_x": finalize_quant_stats(sa) if sa is not None
+                    else None,
+                    "fwd_w": finalize_quant_stats(sb) if sb is not None
+                    else None,
+                }
+        telemetry.tap_matmul(x2d, w, recipe, fused_fwd=fused_fwd)
+        if y is None:
+            y = matmul_impl(impl)(x2d, w, key_data, recipe)
         y = telemetry.grad_tap(y, recipe)
     y = y.reshape(*lead, w.shape[-1])
     if bias is not None:

@@ -29,13 +29,47 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import formats as F
 
 __all__ = ["QuantSpec", "qdq", "quantize_dequantize", "compute_scale",
-           "underflow_rate", "BF16_SPEC"]
+           "scale_from_amax", "pow2_floor", "underflow_rate", "BF16_SPEC"]
 
 _EPS = 1e-12
+
+
+def pow2_floor(s: jnp.ndarray) -> jnp.ndarray:
+    """Largest power of two <= ``s`` (positive normal f32), exactly.
+
+    Clears the mantissa field of the f32 bit pattern — bit-exact (unlike
+    ``exp2(floor(log2(s)))``, whose XLA:CPU lowering is off by >1 ulp at
+    some arguments) and free of transcendentals, so the identical code
+    lowers inside Pallas kernels.
+    """
+    bits = jax.lax.bitcast_convert_type(s.astype(jnp.float32), jnp.int32)
+    return jax.lax.bitcast_convert_type(bits & np.int32(0x7F800000),
+                                        jnp.float32)
+
+
+def scale_from_amax(amax: jnp.ndarray, fmt: F.FloatFormat,
+                    pow2: bool = False,
+                    qmax: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Per-group scale ``alpha = amax / Q_max`` (Eq. 3) in f32, eps-floored.
+
+    THE scale formula — the unfused QDQ path, the fused Pallas pipeline and
+    the telemetry stats all call this, so their scales agree bitwise.
+    ``qmax``: optional *traced* Q_max scalar.  Inside a Pallas kernel the
+    divisor must be traced (an SMEM operand): XLA strength-reduces float
+    division by a compile-time constant to reciprocal-multiply there (1 ulp
+    off, and not idempotent), while a traced divisor lowers to true IEEE
+    division — bitwise identical to this formula outside the kernel.
+    """
+    div = qmax if qmax is not None else np.float32(fmt.max_value)
+    s = jnp.maximum(amax.astype(jnp.float32), _EPS) / div
+    if pow2:
+        s = pow2_floor(s)
+    return s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,10 +159,7 @@ def compute_scale(x2d: jnp.ndarray, spec: QuantSpec,
         amax = jnp.max(mag, axis=reduction_axis, keepdims=True)
     else:
         amax = jnp.max(mag, axis=axes, keepdims=True)
-    scale = jnp.maximum(amax.astype(jnp.float32), _EPS) / fmt.max_value
-    if spec.pow2_scale:
-        scale = jnp.exp2(jnp.floor(jnp.log2(scale)))
-    return scale
+    return scale_from_amax(amax, fmt, spec.pow2_scale)
 
 
 def quantize_dequantize(

@@ -1,15 +1,19 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-  fp4_matmul        fused per-block QDQ + tiled MXU matmul (the §3.2 FFN)
+  fp4_matmul        quantize-once K-panel pipeline: per-operand quantize
+                    pass + decoupled-tiling MXU matmul (the §3.2 FFN)
+  rounding          shared bit-exact integer RTN / stochastic-rounding
+                    codec + counter-hash noise (single source of truth)
   quantize          standalone per-tile quantizer
   flash_attention   causal online-softmax attention fwd (§3.1 protection)
 
 Each kernel ships with ops.py (jit'd wrapper + interpret fallback on CPU)
 and ref.py (pure-jnp oracle used by the allclose test sweeps).
 
-``fp4_matmul`` generalizes to ``fused_qmm`` / ``pallas_qmm``: the
-role-parameterized fused quantize+matmul family backing the training path's
-fwd, dgrad and wgrad (``core.qlinear.pallas_qmatmul``).
+``fp4_matmul.fused_qmm`` / ``ops.pallas_qmm`` form the role-parameterized
+quantized-matmul family backing the training path's fwd, dgrad and wgrad
+(``core.qlinear.pallas_qmatmul``), including in-kernel stochastic rounding
+and the quantize-pass telemetry epilogue.
 """
 from repro.kernels.ops import (flash_attention, fp4_matmul, pallas_qmm,
                                quantize_blockwise)

@@ -1,55 +1,81 @@
-"""Pallas TPU kernels: fused per-group FP4/FP8 quantize + tiled MXU matmul.
+"""Pallas TPU kernels: quantize-once K-panel pipeline for FP4/FP8 matmuls.
 
-The paper's §3.2 hotspot: an FFN linear whose activations are quantized
-per-(1 x 128) along the reduction dim and whose weights are quantized
-per-(128 x 128) tiles, with the dot running on the low-precision unit.  On
-TPU the natural mapping is:
+The paper's §3.2 hotspot — a linear whose operands are quantized per-group
+and whose dot runs on the low-precision unit — used to be ONE fused kernel
+that re-quantized every LHS K-tile ``N/bn`` times and every RHS K-tile
+``M/bm`` times (once per output-tile visit), with RTN emulated through
+``log2``/``ldexp`` transcendentals on the VPU.  Following the
+quantize-once operand caching of "FP4 All the Way" (Chmiel et al., 2025)
+and "Quartet" (Castro et al., 2025), the pipeline is now two phases:
 
-  * grid (M/bm, N/bn, K/bk) with K innermost (revisiting the same output
-    block accumulates in a VMEM f32 scratch — no HBM roundtrips);
-  * every tile 128-aligned so dequantized operands feed the 128x128 MXU
-    directly; the per-tile scales are rank-1 rescales computed IN-KERNEL
-    from the VMEM-resident tile (fused: quantize + dequantize + matmul in
-    one pass, the HBM traffic is exactly one read of x and w per K-step);
-  * FP4 arithmetic itself is simulated (QDQ then bf16/f32 dot) as in the
-    paper; on FP4-capable hardware only the dot changes.
+**Phase 1 — quantize pass** (``quantize_panels`` / ``_quantize_operand``).
+One grid sweep over each operand's K-panels QDQs every element exactly
+once, in the *effective* (post-transpose) orientation, and writes the
+on-grid values back in MXU-ready layout.  In this QDQ simulation the
+emitted values are the dequantized grid points (bf16/f32 — what the MXU
+consumes); on FP4-native hardware the same layout holds the 4-bit codes
+plus per-group scales.  All four paper granularities run in-kernel:
 
-``block`` here equals the quantization block size AND the tile size (128).
+  * ``block`` — per-(1 x 128) groups along the reduction axis;
+  * ``tile``  — per-(128 x 128) tiles;
+  * ``token`` / ``tensor`` — amax groups spanning the whole reduction axis,
+    computed by a two-sweep grid (sweep 0 accumulates amax in scratch,
+    sweep 1 quantizes) — this subsumes the old external ``_rank1_scale``
+    XLA reduction, so "scaled" modes no longer exist.
 
-``fused_qmm`` is the role-parameterized generalization that backs all three
-training matmuls (fwd / dgrad / wgrad — see ``core.qlinear.pallas_qmatmul``):
-each operand gets an independent quantization *mode*
+Rounding is the **bit-exact integer RTN** of ``kernels.rounding`` (exponent
+extracted from the f32 bit pattern, grid step assembled by writing the
+exponent field — no transcendentals), verified bit-exact against
+``formats.round_to_format``.  ``sr=True`` switches to in-kernel unbiased
+stochastic rounding: on TPU via ``pltpu.prng_seed`` +
+``pltpu.prng_random_bits``, in interpret mode (no CPU lowering for the TPU
+PRNG) via the tiling-invariant counter hash ``rounding.hash_uniform`` —
+noise is keyed by each element's *global* coordinate, so results do not
+depend on panel sizes.  ``collect_stats=True`` adds a telemetry epilogue:
+clip/underflow/rel-err/scale-spread accumulators ride in VMEM scratch and
+are emitted as one (1, 8) vector, replacing the full re-QDQ that
+``telemetry.tap_matmul`` used to pay (see ``finalize_quant_stats``).
 
-  * ``pass``   — no quantization (bf16 passthrough roles, e.g. the paper's
-                 unquantized FFN dgrad);
-  * ``block``  — per-(1 x 128) groups along the reduction axis, scale
-                 computed in-kernel from the VMEM tile (LHS rows / RHS cols);
-  * ``tile``   — one scale per (128 x 128) tile, in-kernel;
-  * ``scaled`` — scale precomputed outside the kernel and streamed in as a
-                 rank-1 operand (per-token / per-tensor granularities whose
-                 amax group spans the whole reduction axis, so a single
-                 K-step tile cannot compute it);
+**Phase 2 — matmul pass** (``_tiled_matmul``).  A plain tiled MXU matmul
+over the quantize-pass outputs with grid tiling ``(bm, bn, bk)`` fully
+**decoupled** from the 128-element quant group — multiple quant groups per
+MXU tile, fewer grid steps, zero re-quantization.  K stays innermost and
+accumulates into an f32 VMEM scratch; ``pass``-mode (unquantized bf16)
+operands skip phase 1 entirely and are read transposed via BlockSpec index
+maps, exactly as before.
 
-plus ``trans_a`` / ``trans_b`` operand transposition handled via the
-BlockSpec index maps, so dgrad ``g @ w^T`` and wgrad ``x^T @ g`` read the
-stored arrays directly (no HBM transpose) while quantizing relative to their
-own reduction axes.
+``fused_qmm`` orchestrates both phases and keeps its role-parameterized
+contract: per-operand modes ``pass | block | tile | token | tensor``,
+``trans_a``/``trans_b`` stored-layout transposition, per-operand formats
+and pow2-scale flags, plus new per-operand ``sr`` flags and seeds.  Tile
+knobs: ``block`` (quant group, 128), ``bm``/``bn``/``bk`` (MXU tiling,
+defaults auto-picked per shape), quantize-pass panels auto-picked.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import FORMATS
+from repro.kernels.rounding import (group_scale, hash_uniform, round_to_grid,
+                                    uniform_from_bits)
 
-__all__ = ["fp4_matmul", "fused_qmm", "quantize_tile", "compiler_params"]
+__all__ = ["fp4_matmul", "fused_qmm", "quantize_panels", "compiler_params",
+           "finalize_quant_stats", "QUANT_MODES", "STATS_WIDTH"]
 
-_EPS = 1e-12
+QUANT_MODES = ("pass", "block", "tile", "token", "tensor")
+
+# Telemetry-epilogue accumulator lanes (f32, shape (1, STATS_WIDTH)):
+#   0 clip count   1 underflow count   2 nonzero count   3 sum err^2
+#   4 sum x^2      5 min group scale   6 max group scale 7 valid-element count
+STATS_WIDTH = 8
+_STATS_BIG = 3.0e38
 
 # jax renamed TPUCompilerParams -> CompilerParams across versions; the repo
 # must run on both.
@@ -62,149 +88,469 @@ def compiler_params(**kw):
     return _CompilerParams(**kw)
 
 
-def _round_tile(t: jnp.ndarray, fmt) -> jnp.ndarray:
-    """RTN onto the fmt grid (kernel-side copy of formats.round_to_format,
-    written with primitive jnp ops only so it lowers inside Pallas)."""
-    sign = jnp.sign(t)
-    mag = jnp.minimum(jnp.abs(t), fmt.max_value)
-    safe = jnp.maximum(mag, fmt.min_subnormal * 0.25)
-    e = jnp.maximum(jnp.floor(jnp.log2(safe)), float(fmt.emin))
-    step = jnp.ldexp(jnp.ones_like(t), (e - fmt.mbits).astype(jnp.int32))
-    q = jnp.round(mag / step)
-    return jnp.clip(sign * q * step, -fmt.max_value, fmt.max_value)
+def _pick_tile(dim: int, block: int = 128) -> int:
+    """Largest friendly tile (multiple of ``block``) dividing ``dim``."""
+    for c in (4 * block, 3 * block, 2 * block, block):
+        if dim % c == 0:
+            return c
+    raise ValueError(f"dim {dim} not a multiple of block {block}")
 
 
-def quantize_tile(tile: jnp.ndarray, fmt, *, per_row: bool) -> jnp.ndarray:
-    """QDQ a VMEM tile: per-row (1 x bk) scales or whole-tile scale."""
-    mag = jnp.abs(tile)
-    amax = (jnp.max(mag, axis=-1, keepdims=True) if per_row
-            else jnp.max(mag))
-    scale = jnp.maximum(amax, _EPS) / fmt.max_value
-    return _round_tile(tile / scale, fmt) * scale
+def finalize_quant_stats(vec: jnp.ndarray):
+    """Reduce a quantize-pass stats vector to the telemetry stat dict.
 
-
-def _quant_operand(t: jnp.ndarray, fmt, mode: str, red_axis: int,
-                   scale: Optional[jnp.ndarray], pow2: bool) -> jnp.ndarray:
-    """QDQ one effective-orientation operand tile inside the kernel.
-
-    ``red_axis`` is the reduction axis of the tile (1 for LHS, 0 for RHS);
-    ``block`` groups reduce over it, ``tile`` over the whole tile, ``scaled``
-    uses the streamed-in rank-1 scale.
-
-    Dtype discipline mirrors ``core.quantize.quantize_dequantize`` exactly
-    (amax in the input dtype, scale math in f32, divide/round/rescale in
-    the input dtype) so 'qdq' and 'pallas' impls agree elementwise on the
-    quantized operands — in bf16 training too, not just f32 tests.
+    Same four signals as ``telemetry.collect.operand_stats`` (clip /
+    underflow / rel_err / scale_spread), but computed over the FULL operand
+    in the quantization kernel itself (no group subsampling, no second QDQ
+    pass).  Padded rows/cols are masked out of counts and scale extrema.
     """
-    if mode == "pass":
-        return t
-    if mode == "scaled":
-        s = scale.astype(t.dtype)
-    else:
-        mag = jnp.abs(t)
-        amax = (jnp.max(mag, axis=red_axis, keepdims=True)
-                if mode == "block" else jnp.max(mag))
-        s = jnp.maximum(amax.astype(jnp.float32), _EPS) / fmt.max_value
-        if pow2:
-            s = jnp.exp2(jnp.floor(jnp.log2(s)))
-        s = s.astype(t.dtype)
-    return _round_tile(t / s, fmt) * s
+    v = vec.reshape(STATS_WIDTH).astype(jnp.float32)
+    clip_c, under, nz, err2, val2, smin, smax, cnt = (v[i] for i in range(8))
+    smin = jnp.minimum(smin, smax)  # guard the +inf init if no valid group
+    return {
+        "clip": clip_c / jnp.maximum(cnt, 1.0),
+        "underflow": under / jnp.maximum(nz, 1.0),
+        "rel_err": jnp.sqrt(err2 / jnp.maximum(val2, 1e-30)),
+        "scale_spread": jnp.log2(jnp.maximum(smax, 1e-30)
+                                 / jnp.maximum(smin, 1e-30)),
+    }
 
 
-def _qmm_kernel(*refs, n_k, a_mode, b_mode, a_fmt, b_fmt, a_pow2, b_pow2,
-                trans_a, trans_b):
-    """One (bm, bn) output tile step at K-step pl.program_id(2)."""
+# ---------------------------------------------------------------------------
+# Phase 1: quantize pass
+# ---------------------------------------------------------------------------
+
+def _quant_kernel(*refs, mode, fmt, pow2, sr, trans, emit_trans, use_hw_rng,
+                  grid_kind, bq, bkq, nk, block, m_real, k_real,
+                  collect_stats):
+    """QDQ one (bq, bkq) quant-orientation panel tile.
+
+    Quant orientation = (non-reduction rows, reduction cols): (M, K) for
+    the LHS, (N, K) for the RHS — groups always reduce along axis 1 here.
+    ``trans`` transposes the stored read into that orientation in VMEM;
+    ``emit_trans`` transposes the write back out (the RHS emits (K, N) so
+    the matmul pass reads it plain).
+
+    ``grid_kind``: 'one' = single sweep, grid (panels, ktiles) — block/tile
+    groups live inside a tile.  'token' = grid (panels, 2, ktiles), sweep 0
+    accumulates per-row amax in scratch; 'tensor' = grid (2, panels,
+    ktiles), sweep 0 accumulates one global amax (the scale group spans the
+    whole operand, so amax must complete before any element quantizes).
+    """
     it = iter(refs)
-    a_ref, b_ref = next(it), next(it)
-    as_ref = next(it) if a_mode == "scaled" else None
-    bs_ref = next(it) if b_mode == "scaled" else None
-    o_ref, acc_ref = next(it), next(it)
+    seed_ref = next(it) if sr else None
+    # Q_max arrives as a traced SMEM scalar: a compile-time-constant divisor
+    # would be strength-reduced to reciprocal-multiply inside the kernel
+    # (1 ulp off the QDQ reference's true division, and non-idempotent).
+    qmax_ref = next(it)
+    x_ref, o_ref = next(it), next(it)
+    stats_ref = next(it) if collect_stats else None
+    amax_ref = next(it) if grid_kind in ("token", "tensor") else None
+    sacc_ref = next(it) if collect_stats else None
+    qm = qmax_ref[0]
 
+    if grid_kind == "one":
+        p, kt, s = pl.program_id(0), pl.program_id(1), None
+        first = (p == 0) & (kt == 0)
+        last = ((p == pl.num_programs(0) - 1)
+                & (kt == pl.num_programs(1) - 1))
+    elif grid_kind == "token":
+        p, s, kt = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        first = (p == 0) & (s == 0) & (kt == 0)
+        last = ((p == pl.num_programs(0) - 1) & (s == 1)
+                & (kt == pl.num_programs(2) - 1))
+    else:  # tensor
+        s, p, kt = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        first = (s == 0) & (p == 0) & (kt == 0)
+        last = ((s == 1) & (p == pl.num_programs(1) - 1)
+                & (kt == pl.num_programs(2) - 1))
+
+    xt = x_ref[...]
+    if trans:
+        xt = xt.T  # stored (bkq, bq) -> effective (bq, bkq)
+    in_dt = xt.dtype
+    mag = jnp.abs(xt)
+
+    if collect_stats:
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, STATS_WIDTH), 1)
+
+        @pl.when(first)
+        def _():
+            sacc_ref[...] = jnp.where(lane == 5, _STATS_BIG, 0.0)
+
+    # --- sweep 0: amax accumulation for whole-reduction-axis groups ------
+    if grid_kind == "token":
+        @pl.when((s == 0) & (kt == 0))
+        def _():
+            amax_ref[...] = jnp.zeros_like(amax_ref)
+
+        @pl.when(s == 0)
+        def _():
+            amax_ref[...] = jnp.maximum(
+                amax_ref[...],
+                jnp.max(mag, axis=1, keepdims=True).astype(jnp.float32))
+    elif grid_kind == "tensor":
+        @pl.when(first)
+        def _():
+            amax_ref[...] = jnp.zeros_like(amax_ref)
+
+        @pl.when(s == 0)
+        def _():
+            amax_ref[...] = jnp.maximum(amax_ref[...],
+                                        jnp.max(mag).astype(jnp.float32))
+
+    # --- quantize sweep ---------------------------------------------------
+    def _quantize():
+        if sr:
+            if use_hw_rng:
+                # Distinct hardware stream per grid step (TPU path).
+                pltpu.prng_seed(seed_ref[0] + p * nk + kt)
+                bits = pltpu.bitcast(pltpu.prng_random_bits((bq, bkq)),
+                                     jnp.uint32)
+                noise = uniform_from_bits(bits)
+            else:
+                # Interpret mode: tiling-invariant counter hash keyed by the
+                # element's global (row, col) in the effective operand.
+                noise = hash_uniform((bq, bkq), seed_ref[0],
+                                     p * bq, kt * bkq)
+        else:
+            noise = None
+
+        if collect_stats:
+            rows_valid = (p * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, 1), 0)) < m_real
+            cols_valid = (kt * bkq + jax.lax.broadcasted_iota(
+                jnp.int32, (1, bkq), 1)) < k_real
+            st = dict(clip=np.float32(0), under=np.float32(0),
+                      nzc=np.float32(0), err2=np.float32(0),
+                      val2=np.float32(0), smin=np.float32(_STATS_BIG),
+                      smax=np.float32(0))
+
+        def _accum_stats(sub, qsub, scale_f32, gvalid):
+            af, qf = sub.astype(jnp.float32), qsub.astype(jnp.float32)
+            magf = jnp.abs(af)
+            nonzero = magf > 0  # zero-padding never counts as nonzero
+            thr = scale_f32 * np.float32(fmt.max_value * (1.0 + 1e-6))
+            st["clip"] += jnp.sum((magf > thr).astype(jnp.float32))
+            st["under"] += jnp.sum((nonzero & (qf == 0)).astype(jnp.float32))
+            st["nzc"] += jnp.sum(nonzero.astype(jnp.float32))
+            st["err2"] += jnp.sum((af - qf) ** 2)
+            st["val2"] += jnp.sum(af * af)
+            st["smin"] = jnp.minimum(
+                st["smin"], jnp.min(jnp.where(gvalid, scale_f32, _STATS_BIG)))
+            st["smax"] = jnp.maximum(
+                st["smax"], jnp.max(jnp.where(gvalid, scale_f32, 0.0)))
+
+        if mode in ("block", "tile"):
+            per_row = mode == "block"
+            for i in range(bq // block):
+                for j in range(bkq // block):
+                    rs = slice(i * block, (i + 1) * block)
+                    cs = slice(j * block, (j + 1) * block)
+                    sub, smag = xt[rs, cs], mag[rs, cs]
+                    amax = (jnp.max(smag, axis=1, keepdims=True) if per_row
+                            else jnp.max(smag))
+                    scale = group_scale(amax, fmt, pow2, qm)
+                    sc = scale.astype(in_dt)
+                    nsub = noise[rs, cs] if noise is not None else None
+                    qsub = round_to_grid(sub / sc, fmt, nsub) * sc
+                    if emit_trans:
+                        o_ref[cs, rs] = qsub.T
+                    else:
+                        o_ref[rs, cs] = qsub
+                    if collect_stats:
+                        if per_row:  # (1 x block) groups: row x k-group
+                            gvalid = (rows_valid[rs]
+                                      & (kt * bkq + j * block < k_real))
+                        else:        # one (block x block) tile group
+                            gvalid = ((p * bq + i * block < m_real)
+                                      & (kt * bkq + j * block < k_real))
+                        _accum_stats(sub, qsub, scale, gvalid)
+        else:  # token / tensor: scale broadcast from the amax scratch
+            scale = group_scale(amax_ref[...], fmt, pow2, qm)
+            sc = scale.astype(in_dt)
+            qt = round_to_grid(xt / sc, fmt, noise) * sc
+            o_ref[...] = qt.T if emit_trans else qt
+            if collect_stats:
+                gvalid = rows_valid if grid_kind == "token" else True
+                _accum_stats(xt, qt, scale, gvalid)
+
+        if collect_stats:
+            cnt = (jnp.sum(rows_valid.astype(jnp.float32))
+                   * jnp.sum(cols_valid.astype(jnp.float32)))
+            addvec = jnp.stack(
+                [st["clip"], st["under"], st["nzc"], st["err2"], st["val2"],
+                 jnp.zeros(()), jnp.zeros(()), cnt]).reshape(1, STATS_WIDTH)
+            acc = sacc_ref[...]
+            new = acc + addvec
+            new = jnp.where(lane == 5, jnp.minimum(acc, st["smin"]), new)
+            new = jnp.where(lane == 6, jnp.maximum(acc, st["smax"]), new)
+            sacc_ref[...] = new
+
+    if grid_kind == "one":
+        _quantize()
+    else:
+        pl.when(s == 1)(_quantize)
+
+    if collect_stats:
+        @pl.when(last)
+        def _():
+            stats_ref[...] = sacc_ref[...]
+
+
+def _quantize_operand(t: jnp.ndarray, *, mode: str, fmt, pow2: bool,
+                      sr: bool, seed: Optional[jnp.ndarray], trans: bool,
+                      emit_trans: bool, block: int, m_real: int, k_real: int,
+                      collect_stats: bool, interpret: bool
+                      ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Run the quantize pass over one padded stored operand.
+
+    ``t`` read in quant orientation (rows, reduction) — transposed from the
+    stored layout when ``trans`` — QDQ'd once, and written out as
+    (rows, reduction), or (reduction, rows) when ``emit_trans`` (the RHS
+    case, so phase 2 reads (K, N) plain).  Also returns the raw stats
+    vector when ``collect_stats``.
+    """
+    if trans:
+        k_eff, m_eff = t.shape
+    else:
+        m_eff, k_eff = t.shape
+    bq, bkq = _pick_tile(m_eff, block), _pick_tile(k_eff, block)
+    np_, nk = m_eff // bq, k_eff // bkq
+    grid_kind = {"block": "one", "tile": "one",
+                 "token": "token", "tensor": "tensor"}[mode]
+
+    if grid_kind == "one":
+        grid = (np_, nk)
+        gids = lambda p, kt: (p, kt)            # noqa: E731
+    elif grid_kind == "token":
+        grid = (np_, 2, nk)
+        gids = lambda p, s, kt: (p, kt)         # noqa: E731
+    else:
+        grid = (2, np_, nk)
+        gids = lambda s, p, kt: (p, kt)         # noqa: E731
+
+    def xmap(*ids):
+        p, kt = gids(*ids)
+        return (kt, p) if trans else (p, kt)
+
+    in_specs = []
+    operands = []
+    if sr:
+        assert seed is not None, "stochastic quantize pass needs a seed"
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        operands.append(seed.reshape(1).astype(jnp.int32))
+    # Q_max as a traced SMEM scalar (see _quant_kernel); the optimization
+    # barrier keeps XLA from constant-folding it back into the kernel
+    # (which would re-enable the reciprocal-multiply strength reduction).
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+    operands.append(jax.lax.optimization_barrier(
+        jnp.full((1,), fmt.max_value, jnp.float32)))
+    in_specs.append(pl.BlockSpec((bkq, bq) if trans else (bq, bkq), xmap))
+    operands.append(t)
+
+    if emit_trans:
+        out_specs = [pl.BlockSpec((bkq, bq),
+                                  lambda *ids: tuple(reversed(gids(*ids))))]
+        out_shapes = [jax.ShapeDtypeStruct((k_eff, m_eff), t.dtype)]
+    else:
+        out_specs = [pl.BlockSpec((bq, bkq), lambda *ids: gids(*ids))]
+        out_shapes = [jax.ShapeDtypeStruct((m_eff, k_eff), t.dtype)]
+    if collect_stats:
+        out_specs.append(pl.BlockSpec((1, STATS_WIDTH), lambda *ids: (0, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((1, STATS_WIDTH), jnp.float32))
+
+    scratch = []
+    if grid_kind == "token":
+        scratch.append(pltpu.VMEM((bq, 1), jnp.float32))
+    elif grid_kind == "tensor":
+        scratch.append(pltpu.VMEM((1, 1), jnp.float32))
+    if collect_stats:
+        scratch.append(pltpu.VMEM((1, STATS_WIDTH), jnp.float32))
+
+    kernel = functools.partial(
+        _quant_kernel, mode=mode, fmt=fmt, pow2=pow2, sr=sr, trans=trans,
+        emit_trans=emit_trans, use_hw_rng=not interpret, grid_kind=grid_kind,
+        bq=bq, bkq=bkq, nk=nk, block=block, m_real=m_real, k_real=k_real,
+        collect_stats=collect_stats)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=scratch,
+        # Scratch accumulators (amax sweeps, stats epilogue) need sequential
+        # revisiting; the quantize pass is VPU/bandwidth-bound anyway.
+        compiler_params=compiler_params(
+            dimension_semantics=("arbitrary",) * len(grid)),
+        interpret=interpret,
+    )(*operands)
+    if collect_stats:
+        return out[0], out[1]
+    return out[0], None
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "fmt_name", "pow2", "sr", "trans", "block", "real_dims",
+    "collect_stats", "interpret"))
+def quantize_panels(t: jnp.ndarray, *, mode: str = "block",
+                    fmt_name: str = "fp4_e2m1", pow2: bool = False,
+                    sr: bool = False, seed: Optional[jnp.ndarray] = None,
+                    trans: bool = False, block: int = 128,
+                    real_dims: Optional[Tuple[int, int]] = None,
+                    collect_stats: bool = False,
+                    interpret: Optional[bool] = None):
+    """Public quantize-pass entry point (phase 1 standalone).
+
+    ``t``: stored 2-D operand, dims multiples of ``block``; effective
+    orientation is ``t.T`` under ``trans``; groups reduce along axis 1 of
+    the effective operand (the LHS convention).  Returns the QDQ'd
+    effective operand, or ``(values, stats_vec)`` with ``collect_stats``
+    (see ``finalize_quant_stats``).  ``real_dims`` = unpadded (rows, cols)
+    of the effective operand, used only to mask padding out of the stats.
+    """
+    assert mode in QUANT_MODES and mode != "pass", mode
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m_eff, k_eff = (t.shape[1], t.shape[0]) if trans else t.shape
+    m_real, k_real = real_dims if real_dims is not None else (m_eff, k_eff)
+    q, stats = _quantize_operand(
+        t, mode=mode, fmt=FORMATS[fmt_name], pow2=pow2, sr=sr, seed=seed,
+        trans=trans, emit_trans=False, block=block, m_real=m_real,
+        k_real=k_real, collect_stats=collect_stats, interpret=interpret)
+    return (q, stats) if collect_stats else q
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: tiled matmul pass (no quantization left in here)
+# ---------------------------------------------------------------------------
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k, trans_a, trans_b):
+    """One (bm, bn) output tile at K-step pl.program_id(2)."""
     @pl.when(pl.program_id(2) == 0)
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Quantize in the INPUT dtype (bf16 stays bf16, matching the unfused
-    # qdq path elementwise); only the MXU dot upcasts, via its f32
-    # accumulator.
     at = a_ref[...]
     if trans_a:
         at = at.T
     bt = b_ref[...]
     if trans_b:
         bt = bt.T
-    aq = _quant_operand(at, a_fmt, a_mode, 1,
-                        as_ref[...] if as_ref is not None else None, a_pow2)
-    bq = _quant_operand(bt, b_fmt, b_mode, 0,
-                        bs_ref[...] if bs_ref is not None else None, b_pow2)
-    acc_ref[...] += jnp.dot(aq, bq, preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(at, bt, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _tiled_matmul(a: jnp.ndarray, b: jnp.ndarray, *, trans_a: bool,
+                  trans_b: bool, bm: int, bn: int, bk: int,
+                  interpret: bool) -> jnp.ndarray:
+    """y = A' @ B' with (bm, bn, bk) MXU tiling, f32 VMEM accumulation.
+
+    Operands arrive either pre-quantized in effective orientation (trans
+    flag False) or as ``pass``-mode stored arrays read transposed via the
+    BlockSpec index maps (no HBM transpose, as before).
+    """
+    m, k = (a.shape[1], a.shape[0]) if trans_a else a.shape
+    kb, n = (b.shape[1], b.shape[0]) if trans_b else b.shape
+    assert k == kb, (a.shape, b.shape, trans_a, trans_b)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    kernel = functools.partial(_mm_kernel, n_k=k // bk, trans_a=trans_a,
+                               trans_b=trans_b)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bk, bm),
+                         (lambda i, j, kk: (kk, i))) if trans_a
+            else pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk),
+                         (lambda i, j, kk: (j, kk))) if trans_b
+            else pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=(
-    "a_mode", "b_mode", "a_fmt", "b_fmt", "a_pow2", "b_pow2",
-    "trans_a", "trans_b", "block", "interpret"))
+    "a_mode", "b_mode", "a_fmt", "b_fmt", "a_pow2", "b_pow2", "a_sr", "b_sr",
+    "trans_a", "trans_b", "block", "bm", "bn", "bk", "real_dims",
+    "collect_stats", "interpret"))
 def fused_qmm(a: jnp.ndarray, b: jnp.ndarray, *,
               a_mode: str = "block", b_mode: str = "tile",
               a_fmt: str = "fp4_e2m1", b_fmt: str = "fp4_e2m1",
-              a_scale: Optional[jnp.ndarray] = None,
-              b_scale: Optional[jnp.ndarray] = None,
               a_pow2: bool = False, b_pow2: bool = False,
+              a_sr: bool = False, b_sr: bool = False,
+              seed_a: Optional[jnp.ndarray] = None,
+              seed_b: Optional[jnp.ndarray] = None,
               trans_a: bool = False, trans_b: bool = False,
-              block: int = 128, interpret: bool = False) -> jnp.ndarray:
-    """y = Q(A') @ Q(B') fused in VMEM, A' = a^T if trans_a else a (same for
-    B').  Effective shapes A': (M, K), B': (K, N); all dims must be multiples
-    of ``block`` (the ops.py wrapper pads).  Returns A'.dtype (M, N).
+              block: int = 128,
+              bm: Optional[int] = None, bn: Optional[int] = None,
+              bk: Optional[int] = None,
+              real_dims: Optional[Tuple[int, int, int]] = None,
+              collect_stats: bool = False,
+              interpret: bool = False):
+    """y = Q(A') @ Q(B') through the two-phase pipeline; A' = a^T under
+    ``trans_a`` (same for B').  Effective shapes A': (M, K), B': (K, N);
+    all dims must be multiples of ``block`` (the ops.py wrapper pads).
 
-    ``a_scale`` (M, 1) / ``b_scale`` (1, N) are required exactly when the
-    matching mode is ``scaled`` (f32, already divided by the format's Q_max).
+    Each operand is QDQ'd exactly once by the quantize pass (phase 1) —
+    ``pass`` operands skip it — then the matmul pass (phase 2) runs with
+    ``(bm, bn, bk)`` tiling decoupled from the quant group (auto-picked
+    from the shapes when omitted).  ``a_sr``/``b_sr`` enable in-kernel
+    stochastic rounding (seeds required); ``real_dims`` = unpadded
+    (M, K, N) for stats masking; with ``collect_stats`` returns
+    ``(y, (stats_a, stats_b))`` where pass-mode slots are None.
     """
+    assert a_mode in QUANT_MODES and b_mode in QUANT_MODES, (a_mode, b_mode)
     m, k = (a.shape[1], a.shape[0]) if trans_a else a.shape
     kb, n = (b.shape[1], b.shape[0]) if trans_b else b.shape
     assert k == kb, (a.shape, b.shape, trans_a, trans_b)
     assert m % block == 0 and k % block == 0 and n % block == 0, \
         (m, k, n, block)
-    assert (a_scale is not None) == (a_mode == "scaled")
-    assert (b_scale is not None) == (b_mode == "scaled")
-    n_k = k // block
-    fa, fb = FORMATS[a_fmt], FORMATS[b_fmt]
+    mr, kr, nr = real_dims if real_dims is not None else (m, k, n)
 
-    in_specs = [
-        pl.BlockSpec((block, block),
-                     (lambda i, j, kk: (kk, i)) if trans_a
-                     else (lambda i, j, kk: (i, kk))),
-        pl.BlockSpec((block, block),
-                     (lambda i, j, kk: (j, kk)) if trans_b
-                     else (lambda i, j, kk: (kk, j))),
-    ]
-    operands = [a, b]
-    if a_scale is not None:
-        assert a_scale.shape == (m, 1), a_scale.shape
-        in_specs.append(pl.BlockSpec((block, 1), lambda i, j, kk: (i, 0)))
-        operands.append(a_scale.astype(jnp.float32))
-    if b_scale is not None:
-        assert b_scale.shape == (1, n), b_scale.shape
-        in_specs.append(pl.BlockSpec((1, block), lambda i, j, kk: (0, j)))
-        operands.append(b_scale.astype(jnp.float32))
+    stats_a = stats_b = None
+    mm_trans_a, mm_trans_b = trans_a, trans_b
+    if a_mode != "pass":
+        # LHS quant orientation (M, K) == effective orientation.
+        a, stats_a = _quantize_operand(
+            a, mode=a_mode, fmt=FORMATS[a_fmt], pow2=a_pow2,
+            sr=a_sr and not FORMATS[a_fmt].passthrough, seed=seed_a,
+            trans=trans_a, emit_trans=False, block=block, m_real=mr,
+            k_real=kr, collect_stats=collect_stats, interpret=interpret)
+        mm_trans_a = False
+    if b_mode != "pass":
+        # RHS quant orientation is (N, K) — groups reduce over K, which is
+        # axis 0 of the effective (K, N) — so the pass reads the stored
+        # array transposed iff NOT trans_b, and emits (K, N) back.
+        b, stats_b = _quantize_operand(
+            b, mode=b_mode, fmt=FORMATS[b_fmt], pow2=b_pow2,
+            sr=b_sr and not FORMATS[b_fmt].passthrough, seed=seed_b,
+            trans=not trans_b, emit_trans=True, block=block, m_real=nr,
+            k_real=kr, collect_stats=collect_stats, interpret=interpret)
+        mm_trans_b = False
 
-    kernel = functools.partial(
-        _qmm_kernel, n_k=n_k, a_mode=a_mode, b_mode=b_mode, a_fmt=fa,
-        b_fmt=fb, a_pow2=a_pow2, b_pow2=b_pow2, trans_a=trans_a,
-        trans_b=trans_b)
-    return pl.pallas_call(
-        kernel,
-        grid=(m // block, n // block, n_k),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
-        scratch_shapes=[pltpu.VMEM((block, block), jnp.float32)],
-        compiler_params=compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(*operands)
+    bm = bm if bm is not None else _pick_tile(m, block)
+    bn = bn if bn is not None else _pick_tile(n, block)
+    bk = bk if bk is not None else _pick_tile(k, block)
+    y = _tiled_matmul(a, b, trans_a=mm_trans_a, trans_b=mm_trans_b,
+                      bm=bm, bn=bn, bk=bk, interpret=interpret)
+    if collect_stats:
+        return y, (stats_a, stats_b)
+    return y
 
 
 @functools.partial(jax.jit, static_argnames=("x_fmt", "w_fmt", "block",
@@ -212,7 +558,7 @@ def fused_qmm(a: jnp.ndarray, b: jnp.ndarray, *,
 def fp4_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
                x_fmt: str = "fp4_e2m1", w_fmt: str = "fp4_e2m1",
                block: int = 128, interpret: bool = False) -> jnp.ndarray:
-    """y = Q_blk(x) @ Q_tile(w), fused in VMEM (the paper's fwd FFN matmul).
+    """y = Q_blk(x) @ Q_tile(w) (the paper's fwd FFN matmul).
 
     x: (M, K), w: (K, N); M, K, N must be multiples of ``block``
     (the ops.py wrapper pads).  Returns x.dtype.  Kept as the historical

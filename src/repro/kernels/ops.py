@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import QuantSpec, compute_scale
+from repro.core.quantize import QuantSpec
 from repro.kernels import fp4_matmul as _mm
 from repro.kernels import quantize as _q
 from repro.kernels import flash_attention as _fa
@@ -52,57 +52,56 @@ def fp4_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
     return y[:m, :n]
 
 
-def _rank1_scale(eff: jnp.ndarray, spec: QuantSpec, reduction_axis: int,
-                 shape) -> jnp.ndarray:
-    """Precompute the streamed-in scale for 'scaled' kernel modes.
-
-    Per-token scales keep their vector shape; per-tensor scalars broadcast
-    to the same rank-1 layout so the kernel sees one code path.  Computed on
-    the PADDED effective operand: zero rows/cols hit the eps floor and are
-    sliced away with the output.
-    """
-    s = compute_scale(eff, spec, reduction_axis).astype(jnp.float32)
-    return jnp.broadcast_to(s.reshape((-1, 1) if shape[1] == 1 else (1, -1)),
-                            shape)
-
-
 def pallas_qmm(a: jnp.ndarray, b: jnp.ndarray,
                spec_a: QuantSpec, spec_b: QuantSpec, *,
                mode_a: str, mode_b: str,
                trans_a: bool = False, trans_b: bool = False,
                block: int = 128,
-               interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Fused per-role quantized matmul ``Q(A') @ Q(B')`` with padding.
+               key_data: Optional[jnp.ndarray] = None, salt: int = 0,
+               collect_stats: bool = False,
+               interpret: Optional[bool] = None):
+    """Per-role quantized matmul ``Q(A') @ Q(B')`` through the two-phase
+    quantize-once pipeline, with padding.
 
     ``a``/``b`` are stored arrays; ``A' = a^T`` under ``trans_a`` (same for
-    B') — the kernel reads the stored layout directly via its index maps.
-    Quantization (``mode_*`` from ``core.qlinear.kernel_quant_mode``) is
-    relative to the *effective* orientation, i.e. each backward matmul's own
-    reduction axis.  Padding semantics: zero K-padding adds nothing to the
-    dot and leaves real rows' amax groups unchanged; padded M/N rows/cols
-    quantize on the eps-floor scale path and are sliced away.
+    B') — the quantize pass reads the stored layout via its index maps and
+    emits effective-orientation panels.  Quantization (``mode_*`` from
+    ``core.qlinear.kernel_quant_mode``) is relative to the *effective*
+    orientation, i.e. each backward matmul's own reduction axis; ``token``/
+    ``tensor`` amax now runs inside the quantize pass (no XLA pre-reduction).
+    Stochastic specs draw in-kernel noise seeded from ``key_data``+``salt``.
+    Padding semantics: zero K-padding adds nothing to the dot and leaves
+    real rows' amax groups unchanged; padded M/N rows/cols quantize on the
+    eps-floor scale path and are sliced away.  With ``collect_stats``
+    returns ``(y, (stats_a, stats_b))`` raw telemetry-epilogue vectors
+    (``kernels.fp4_matmul.finalize_quant_stats`` reduces them).
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     ap, _, _ = _pad2d(a, block)
     bp, _, _ = _pad2d(b, block)
-    # Effective shapes from the stored layout + trans flags; the transposed
-    # views are built only when a 'scaled' amax actually needs them (XLA
-    # fuses transpose+reduce, so no HBM transpose materializes even then).
-    mp = ap.shape[1] if trans_a else ap.shape[0]
-    np_ = bp.shape[0] if trans_b else bp.shape[1]
-    a_scale = (_rank1_scale(ap.T if trans_a else ap, spec_a, 1, (mp, 1))
-               if mode_a == "scaled" else None)
-    b_scale = (_rank1_scale(bp.T if trans_b else bp, spec_b, 0, (1, np_))
-               if mode_b == "scaled" else None)
-    y = _mm.fused_qmm(
+    m = a.shape[1] if trans_a else a.shape[0]
+    k = a.shape[0] if trans_a else a.shape[1]
+    n = b.shape[0] if trans_b else b.shape[1]
+    a_sr = bool(spec_a.stochastic) and mode_a != "pass"
+    b_sr = bool(spec_b.stochastic) and mode_b != "pass"
+    seed_a = seed_b = None
+    if a_sr or b_sr:
+        assert key_data is not None, "stochastic spec needs key_data"
+        from repro.kernels.rounding import fold_seed
+        seed_a = fold_seed(key_data, salt, 0) if a_sr else None
+        seed_b = fold_seed(key_data, salt, 1) if b_sr else None
+    out = _mm.fused_qmm(
         ap, bp, a_mode=mode_a, b_mode=mode_b,
         a_fmt=spec_a.fmt, b_fmt=spec_b.fmt,
-        a_scale=a_scale, b_scale=b_scale,
         a_pow2=spec_a.pow2_scale, b_pow2=spec_b.pow2_scale,
-        trans_a=trans_a, trans_b=trans_b, block=block, interpret=interpret)
-    m = a.shape[1] if trans_a else a.shape[0]
-    n = b.shape[0] if trans_b else b.shape[1]
-    return y[:m, :n]
+        a_sr=a_sr, b_sr=b_sr, seed_a=seed_a, seed_b=seed_b,
+        trans_a=trans_a, trans_b=trans_b, block=block,
+        real_dims=(m, k, n), collect_stats=collect_stats,
+        interpret=interpret)
+    if collect_stats:
+        y, stats = out
+        return y[:m, :n], stats
+    return out[:m, :n]
 
 
 def quantize_blockwise(x: jnp.ndarray, fmt_name: str = "fp4_e2m1",

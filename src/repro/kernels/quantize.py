@@ -15,15 +15,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.formats import FORMATS
-from repro.kernels.fp4_matmul import quantize_tile
+# Rounding/QDQ math comes from the shared kernel-side helper module (the
+# same bit-exact integer RTN the fused pipeline uses) — no private copy.
+from repro.kernels.rounding import quantize_tile
 
 __all__ = ["quantize_blockwise"]
 
 
-def _q_kernel(x_ref, o_ref, *, fmt, per_row):
+def _q_kernel(qmax_ref, x_ref, o_ref, *, fmt, per_row):
     o_ref[...] = quantize_tile(
         x_ref[...].astype(jnp.float32), fmt,
-        per_row=per_row).astype(o_ref.dtype)
+        per_row=per_row, qmax=qmax_ref[0]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("fmt_name", "block", "per_row",
@@ -37,11 +39,17 @@ def quantize_blockwise(x: jnp.ndarray, fmt_name: str = "fp4_e2m1",
     assert m % block == 0 and n % block == 0, (m, n, block)
     fmt = FORMATS[fmt_name]
     kernel = functools.partial(_q_kernel, fmt=fmt, per_row=per_row)
+    from jax.experimental.pallas import tpu as pltpu
+    # Q_max as a traced SMEM scalar so the in-kernel scale division is true
+    # IEEE division (constant divisors get reciprocal-multiplied by XLA).
+    qmax = jax.lax.optimization_barrier(
+        jnp.full((1,), fmt.max_value, jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=(m // block, n // block),
-        in_specs=[pl.BlockSpec((block, block), lambda i, j: (i, j))],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((block, block), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((block, block), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         interpret=interpret,
-    )(x)
+    )(qmax, x)

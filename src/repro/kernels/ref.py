@@ -1,15 +1,61 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+Rounding comes from the shared helper ``kernels.rounding`` (the same
+bit-exact integer RTN/SR codec the kernels lower) — no private
+``_round_tile`` copy lives here.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import FORMATS, round_to_format
-from repro.core.quantize import QuantSpec, qdq
+from repro.core.quantize import QuantSpec, _blocked_view, qdq
+from repro.kernels.rounding import group_scale, round_to_grid
 
 __all__ = ["quantize_blockwise_ref", "fp4_matmul_ref", "qmm_ref",
+           "qdq_grid_ref", "quantize_panels_ref",
            "pallas_qmatmul_grads_ref", "flash_attention_ref"]
+
+
+def qdq_grid_ref(x2d: jnp.ndarray, spec: QuantSpec, reduction_axis: int,
+                 noise: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """QDQ through the SHARED grid codec, with injectable SR noise.
+
+    Same group/scale math as ``core.quantize.quantize_dequantize`` but
+    rounding via ``kernels.rounding.round_to_grid`` — given the same
+    uniform noise the kernel drew, this reproduces in-kernel stochastic
+    rounding bit-exactly (the kernel's noise is keyed by global element
+    coordinate, so it is tiling-invariant and reconstructible outside).
+    Shapes must already be multiples of ``spec.block`` (no padding here).
+    """
+    if spec.is_passthrough:
+        return x2d
+    rows, cols = x2d.shape
+    xb, axes, _, _ = _blocked_view(x2d, spec.granularity, spec.block,
+                                   reduction_axis)
+    mag = jnp.abs(xb)
+    if spec.granularity == "tensor":
+        amax = jnp.max(mag)
+    elif spec.granularity == "token":
+        amax = jnp.max(mag, axis=reduction_axis, keepdims=True)
+    else:
+        amax = jnp.max(mag, axis=axes, keepdims=True)
+    scale = group_scale(amax, spec.format, spec.pow2_scale).astype(x2d.dtype)
+    nb = noise.reshape(xb.shape) if noise is not None else None
+    y = round_to_grid(xb / scale, spec.format, nb) * scale
+    return y.reshape(rows, cols).astype(x2d.dtype)
+
+
+def quantize_panels_ref(t: jnp.ndarray, spec: QuantSpec, *,
+                        trans: bool = False,
+                        noise: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Oracle for ``kernels.fp4_matmul.quantize_panels``: QDQ of the
+    effective (post-transpose) operand, reduction axis 1."""
+    eff = t.T if trans else t
+    return qdq_grid_ref(eff, spec, 1, noise)
 
 
 def quantize_blockwise_ref(x: jnp.ndarray, fmt_name: str,

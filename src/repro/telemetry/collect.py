@@ -226,9 +226,8 @@ def operand_stats(a2d: jnp.ndarray, spec: QuantSpec,
         amax = jnp.max(mag, axis=reduction_axis, keepdims=True)
     else:
         amax = jnp.max(mag, axis=axes, keepdims=True)
-    scale = jnp.maximum(amax, 1e-12) / fmt.max_value   # Eq. 3
-    if spec.pow2_scale:
-        scale = jnp.exp2(jnp.floor(jnp.log2(scale)))
+    from repro.core.quantize import scale_from_amax
+    scale = scale_from_amax(amax, fmt, spec.pow2_scale)   # Eq. 3
     q = F.round_to_format(af / scale, fmt) * scale     # simulated QDQ
     n = rows * cols  # padding contributes zero to every numerator below
     nonzero = mag > 0
@@ -256,9 +255,19 @@ _FWD_SLOTS = (
 
 
 def tap_matmul(x2d: jnp.ndarray, w: jnp.ndarray,
-               recipe: MatmulRecipe) -> None:
+               recipe: MatmulRecipe,
+               fused_fwd: Optional[Dict[str, Optional[Dict]]] = None
+               ) -> None:
     """Record forward-computable operand stats for one quantized matmul
-    into the current collection frame.  No-op without a collector."""
+    into the current collection frame.  No-op without a collector.
+
+    ``fused_fwd`` (pallas impl): already-finalized stat dicts for the
+    ``fwd_x``/``fwd_w`` slots, produced by the quantize pass's telemetry
+    epilogue inside the very kernel that fed the dot — those slots then
+    skip the QDQ re-run here.  Epilogue stats cover the FULL operand;
+    ``operand_stats`` subsamples large group sets, so the two agree exactly
+    only up to sampling.
+    """
     col = active()
     if col is None:
         return
@@ -270,7 +279,10 @@ def tap_matmul(x2d: jnp.ndarray, w: jnp.ndarray,
         spec = getattr(recipe, spec_name)
         if not _statable(spec):
             continue
-        for stat, v in operand_stats(ops[op_i], spec, axis).items():
+        pre = fused_fwd.get(slot) if fused_fwd else None
+        stats = pre if pre is not None else operand_stats(
+            ops[op_i], spec, axis)
+        for stat, v in stats.items():
             fr.stats[f"{scope}/mm{j}/{slot}/{stat}"] = v
 
 
