@@ -26,6 +26,14 @@ import sys
 NORM_KEY = "kernel/matmul_plain_512"
 # Entries below this absolute time (us) are too noisy for a ratio gate.
 MIN_US = 200.0
+# Kernel entries that must exist in BOTH files: losing one (a renamed or
+# dropped bench) would silently remove its regression guard.  Covers the
+# three fused matmul roles and the flash-attention forward kernel.
+REQUIRED = (
+    "kernel/qmm256_ffn_paper_fwd_pallas_fused",
+    "kernel/qmm256_ffn_paper_dgrad_wgrad_pallas_fused",
+    "kernel/flash_attention_fwd_256",
+)
 
 
 def _load(path: str) -> dict:
@@ -45,6 +53,14 @@ def main(argv=None) -> int:
     base, cur = _load(args.baseline), _load(args.current)
     if NORM_KEY not in base or NORM_KEY not in cur:
         print(f"[check_bench] missing normalizer {NORM_KEY}", file=sys.stderr)
+        return 1
+    missing = [(tag, name) for name in REQUIRED
+               for tag, d in (("baseline", base), ("current", cur))
+               if name not in d]
+    if missing:
+        for tag, name in missing:
+            print(f"[check_bench] required entry missing from {tag}: "
+                  f"{name}", file=sys.stderr)
         return 1
     bn, cn = base[NORM_KEY]["us_per_call"], cur[NORM_KEY]["us_per_call"]
 

@@ -2,10 +2,12 @@
 
 Reads the per-step rows + controller events the trainer appended and emits a
 markdown report: loss/quant-error trajectories (ASCII sparklines), a
-per-layer x per-role table of final-step quant health, backward-side
-per-class stats, and the controller's decision log.  With matplotlib
-available (optional — not a dependency), ``--plots DIR`` also writes PNG
-curves.
+layer x role quant-health heatmap (forward-side slots from the per-layer
+scan-output stats AND backward-side dgrad_g/wgrad_g from the layer-indexed
+probes — full per-layer resolution on both sides since the indexed-probe
+transport), backward-side per-class aggregates, and the controller's
+decision log.  With matplotlib available (optional — not a dependency),
+``--plots DIR`` also writes PNG curves and a layer x role heatmap image.
 
 Usage:
     python -m benchmarks.telemetry_report runs/telemetry.jsonl
@@ -25,6 +27,8 @@ from repro.telemetry.writer import read_jsonl
 _SPARK = "▁▂▃▄▅▆▇█"
 
 _LAYER_RE = re.compile(r"^tel/l(\d+)/([^/]+)/mm(\d+)/([^/]+)/([^/]+)$")
+_BWD_LAYER_RE = re.compile(
+    r"^tel/bwd/l(\d+)/([^/]+)/(dgrad_g|wgrad_g)/([^/]+)$")
 
 
 def sparkline(xs: List[float], width: int = 40) -> str:
@@ -67,26 +71,41 @@ def fwd_error_series(steps: List[Dict]) -> List[float]:
     return out
 
 
-def per_layer_table(last: Dict) -> List[str]:
-    """Final-step per-layer x per-slot table (mean over mm call sites)."""
+def heatmap_cells(last: Dict, stats=("underflow", "rel_err")):
+    """(layer, role-column, stat) -> values from one row, combining the
+    forward-side per-layer taps (fwd_x/fwd_w/wgrad_x/dgrad_w, mean over mm
+    call sites) with the backward-side layer-indexed probe rows
+    (dgrad_g/wgrad_g) — the full layer x role resolution."""
     cells: Dict[tuple, List[float]] = collections.defaultdict(list)
-    slots, layers = set(), set()
+    cols, layers = set(), set()
     for k, v in last.items():
         m = _LAYER_RE.match(k)
-        if not m:
-            continue
-        layer, scope, _mm, slot, stat = m.groups()
-        if stat not in ("underflow", "rel_err"):
+        if m:
+            layer, scope, _mm, slot, stat = m.groups()
+        else:
+            mb = _BWD_LAYER_RE.match(k)
+            if not mb:
+                continue
+            layer, _cls, slot, stat = mb.groups()
+            if float(last.get(f"tel/bwd/l{int(layer):02d}/{_cls}/taps",
+                              0.0)) <= 0:
+                continue  # untapped probe row (all-zero, not a signal)
+        if stat not in stats:
             continue
         layers.add(int(layer))
-        slots.add((slot, stat))
+        cols.add((slot, stat))
         cells[(int(layer), slot, stat)].append(float(v))
+    return cells, sorted(cols), sorted(layers)
+
+
+def per_layer_table(last: Dict) -> List[str]:
+    """Final-step layer x role heatmap table (fwd taps + bwd probes)."""
+    cells, cols, layers = heatmap_cells(last)
     if not cells:
         return ["(no per-layer telemetry in log)"]
-    cols = sorted(slots)
     lines = ["| layer | " + " | ".join(f"{s}/{t}" for s, t in cols) + " |",
              "|---" * (len(cols) + 1) + "|"]
-    for layer in sorted(layers):
+    for layer in layers:
         vals = [cells.get((layer, s, t)) for s, t in cols]
         lines.append(f"| l{layer:02d} | " + " | ".join(
             f"{_mean(v):.4f}" if v else "-" for v in vals) + " |")
@@ -136,8 +155,9 @@ def build_report(rows: List[Dict]) -> str:
                     if any(k.startswith("tel/bwd/") and k.endswith("/taps")
                            and float(v) > 0 for k, v in r.items())),
                    steps[-1])
-    out += [f"## Per-layer quant health (step {layer_row['step']}, mean "
-            "over call sites)", ""] + per_layer_table(layer_row) + [""]
+    out += [f"## Layer x role quant health (step {layer_row['step']}; "
+            "fwd slots mean over call sites, dgrad_g/wgrad_g from the "
+            "layer-indexed probes)", ""] + per_layer_table(layer_row) + [""]
     out += [f"## Backward-side stats (step {bwd_row['step']}, per module "
             "class)", ""] + bwd_table(bwd_row) + [""]
     if events:
@@ -175,6 +195,32 @@ def write_plots(rows: List[Dict], directory: str) -> bool:
         fig.tight_layout()
         fig.savefig(os.path.join(directory, f"{name}.png"), dpi=120)
         plt.close(fig)
+    # layer x role heatmap (rel_err) from the last instrumented step
+    layer_row = next((r for r in reversed(steps)
+                      if any(_LAYER_RE.match(k) for k in r)), None)
+    if layer_row is not None:
+        cells, cols, layers = heatmap_cells(layer_row, stats=("rel_err",))
+        if cells:
+            import numpy as _np
+            grid = _np.full((len(layers), len(cols)), _np.nan)
+            for i, layer in enumerate(layers):
+                for j, (slot, stat) in enumerate(cols):
+                    vs = cells.get((layer, slot, stat))
+                    if vs:
+                        grid[i, j] = _mean(vs)
+            fig, ax = plt.subplots(
+                figsize=(1.2 + 0.9 * len(cols), 1.0 + 0.35 * len(layers)))
+            im = ax.imshow(grid, aspect="auto", cmap="viridis")
+            ax.set_xticks(range(len(cols)),
+                          [sl for sl, _ in cols], rotation=45, ha="right")
+            ax.set_yticks(range(len(layers)),
+                          [f"l{l:02d}" for l in layers])
+            ax.set_title("quant rel_err by layer x role")
+            fig.colorbar(im, ax=ax, shrink=0.8)
+            fig.tight_layout()
+            fig.savefig(os.path.join(directory, "layer_role_heatmap.png"),
+                        dpi=120)
+            plt.close(fig)
     return True
 
 

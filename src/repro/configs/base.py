@@ -132,9 +132,10 @@ class ControllerSettings:
     # schedule's fixed fraction, whichever comes first).  0 = fraction only.
     switch_error_threshold: float = 0.0
     error_ema_decay: float = 0.9
-    # Per-module-class demotion: sustained overflow (clip rate) above the
-    # threshold for ``demote_patience`` consecutive steps promotes that class
-    # to FP8 (the Table-2 ablation recipes).  0 = disabled.
+    # Per-(layer, class) demotion: sustained overflow (clip rate) above the
+    # threshold for ``demote_patience`` consecutive steps promotes that one
+    # plan cell to FP8 (a ``PrecisionPlan.promote`` transform — one noisy
+    # layer no longer demotes the whole class).  0 = disabled.
     demote_overflow_threshold: float = 0.0
     demote_patience: int = 8
     # Loss-spike rollback: loss > spike_factor * EMA(loss) triggers a restore
@@ -145,6 +146,13 @@ class ControllerSettings:
     spike_warmup: int = 20       # steps of EMA warmup before spikes arm
     replay_steps: int = 5
     max_rollbacks: int = 2
+    # Controller-driven LR backoff: each rollback multiplies the LR scale by
+    # ``lr_backoff`` (e.g. 0.5); the scale then recovers geometrically to
+    # 1.0 over ~``lr_recovery_steps`` clean steps.  The scale is a traced
+    # scalar input of the step graph (no recompile) and persists in the
+    # controller's checkpoint state.  0 = disabled.
+    lr_backoff: float = 0.0
+    lr_recovery_steps: int = 50
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +186,13 @@ class TrainConfig:
     telemetry_jsonl: str = ""        # append per-step rows to this JSONL file
     target_recipe: str = "bf16"      # stage-2 recipe of the §3.3 schedule
     controller: Optional[ControllerSettings] = None  # adaptive controller
+    # Layer-resolved precision plan (core.recipe.PrecisionPlan) built from
+    # ``recipe``: 'uniform' (every layer runs the class template) |
+    # 'first_last_k' (first/last ``plan_k`` layers protected at FP8) |
+    # 'ramp' (linear FP8->FP4 ramp over the first ``plan_frac`` of depth).
+    plan_preset: str = "uniform"
+    plan_k: int = 2                  # first_last_k: protected depth
+    plan_frac: float = 0.5           # ramp: ramp fraction of the depth
 
 
 # ---------------------------------------------------------------------------

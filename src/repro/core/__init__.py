@@ -4,22 +4,26 @@ Public API:
   formats          low-bit float grids + RTN/stochastic rounding
   quantize         scaled QDQ with tensor/token/block/tile granularity
   qlinear          custom_vjp quantized matmul / linear (STE)
-  recipe           per-module-class precision recipes (paper + ablations)
-  schedule         two-stage target-precision training schedule
+  recipe           class-template recipes (paper + ablations) and
+                   layer-resolved PrecisionPlans (depth-graded presets,
+                   per-(layer, class) transforms)
+  schedule         two-stage target-precision schedule (plan transform)
   cost_model       the paper's theoretical compute-cost accounting
 """
 from repro.core.formats import (FORMATS, FP4_E2M1, FP8_E4M3, FP8_E5M2,
                                 FloatFormat, round_to_format)
 from repro.core.quantize import QuantSpec, qdq, underflow_rate
 from repro.core.qlinear import matmul_impl, pallas_qmatmul, qlinear, qmatmul
-from repro.core.recipe import (RECIPES, MatmulRecipe, PrecisionRecipe,
-                               named_recipe)
+from repro.core.recipe import (RECIPES, LayerRecipe, MatmulRecipe,
+                               PrecisionPlan, PrecisionRecipe, as_plan,
+                               named_recipe, stage2_plan)
 from repro.core.schedule import TargetPrecisionSchedule
 
 __all__ = [
     "FORMATS", "FP4_E2M1", "FP8_E4M3", "FP8_E5M2", "FloatFormat",
     "round_to_format", "QuantSpec", "qdq", "underflow_rate", "qlinear",
     "qmatmul", "pallas_qmatmul", "matmul_impl", "RECIPES", "MatmulRecipe",
-    "PrecisionRecipe", "named_recipe",
+    "PrecisionRecipe", "named_recipe", "LayerRecipe", "PrecisionPlan",
+    "as_plan", "stage2_plan",
     "TargetPrecisionSchedule",
 ]

@@ -2,9 +2,12 @@
 
 ``qmatmul(x2d, w, key, recipe)`` computes a matmul whose forward and two
 backward matmuls each quantize their operands according to an independent
-``QuantSpec`` (see ``core.recipe``).  Gradients flow by straight-through
-estimation (App. B: the gradient of the quantized weight is passed to the
-master weight unchanged).
+``QuantSpec`` (see ``core.recipe``).  The ``MatmulRecipe`` argument is one
+resolved cell of a layer-resolved ``PrecisionPlan`` (layer x class), so
+this primitive is depth-agnostic; per-layer precision is decided one level
+up, in ``models.stack``.  Gradients flow by straight-through estimation
+(App. B: the gradient of the quantized weight is passed to the master
+weight unchanged).
 
 Two implementations share the same recipe semantics:
 
@@ -265,7 +268,8 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
         # Telemetry taps (no-ops unless a collector is installed).
         # fwd-computable operand stats go to the active collection frame;
         # grad_tap transports dgrad_g/wgrad_g cotangent stats out via the
-        # probe-gradient channel.  On the pallas impl the fwd_x/fwd_w slots
+        # layer-indexed probe-gradient channel (the collector knows the
+        # current layer, so nothing layer-shaped threads through here).  On the pallas impl the fwd_x/fwd_w slots
         # come from the quantize pass's telemetry EPILOGUE — the very kernel
         # that feeds the dot — instead of tap_matmul re-running QDQ math;
         # the remaining fwd-side slots (wgrad_x, dgrad_w: different

@@ -25,6 +25,7 @@ transposes in the backward matmuls.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Optional
 
 import jax
@@ -104,6 +105,50 @@ class QuantSpec:
         if self.is_passthrough:
             return self.fmt
         return f"{self.fmt}/{self.granularity}"
+
+    # -- compact string syntax (plans / checkpoints / telemetry) ----------
+    #
+    #   <fmt>                       passthrough, e.g. "bf16"
+    #   <fmt>@<gran>[<block>]       e.g. "fp8_e4m3@token", "fp4_e2m1@block128"
+    #   ...[:pow2][:sr]             scale/rounding flags
+    #
+    # The canonical serialization used by ``core.recipe.PrecisionPlan``'s
+    # dict form; ``from_str(to_str(s)) == s`` for every realizable spec
+    # (passthrough specs canonicalize their irrelevant granularity away).
+
+    def to_str(self) -> str:
+        if self.is_passthrough:
+            s = self.fmt
+        else:
+            s = f"{self.fmt}@{self.granularity}"
+            if self.granularity in ("block", "tile"):
+                s += str(self.block)
+        if self.pow2_scale:
+            s += ":pow2"
+        if self.stochastic:
+            s += ":sr"
+        return s
+
+    @classmethod
+    def from_str(cls, s: str) -> "QuantSpec":
+        head, *flags = s.split(":")
+        bad = set(flags) - {"pow2", "sr"}
+        if bad:
+            raise ValueError(f"unknown QuantSpec flags {sorted(bad)} in {s!r}")
+        pow2, sr = "pow2" in flags, "sr" in flags
+        if "@" in head:
+            fmt, gran = head.split("@", 1)
+            m = re.fullmatch(r"([a-z]+)(\d+)?", gran)
+            if not m or m.group(1) not in ("tensor", "token", "block",
+                                           "tile"):
+                raise ValueError(f"bad granularity {gran!r} in {s!r}")
+            spec = cls(fmt, m.group(1), int(m.group(2) or 128),
+                       pow2_scale=pow2, stochastic=sr)
+        else:
+            spec = cls(head, pow2_scale=pow2, stochastic=sr)
+        if spec.fmt not in F.FORMATS:
+            raise ValueError(f"unknown format {spec.fmt!r} in {s!r}")
+        return spec
 
 
 BF16_SPEC = QuantSpec("bf16")

@@ -1,4 +1,4 @@
-"""Precision recipes: which format/granularity each matmul role uses.
+"""Precision recipes and layer-resolved precision plans.
 
 A transformer linear layer ``y = x @ w`` spawns three matmuls per step:
 
@@ -16,19 +16,34 @@ operand, per module class:
     activation-gradient path breaks convergence).
   * router / lm-head / embeddings / norms -> full precision.
 
-``PrecisionRecipe`` captures this; ``named_recipe()`` provides the paper's
-configurations plus the Table-2 ablation grid.
+``PrecisionRecipe`` captures the depth-independent class template;
+``named_recipe()`` provides the paper's configurations plus the Table-2
+ablation grid.
+
+``PrecisionPlan`` resolves the template over depth: one
+``LayerRecipe`` (class -> ``MatmulRecipe``) per layer, plus the lm-head.
+Plans are what the model/trainer actually consume (a ``PrecisionRecipe``
+is coerced via :func:`as_plan` to the uniform plan).  Depth-graded
+constructors follow the depth-dependence in related FP4-training work
+(first/last-K protected — "FP4 All the Way"; trailing-fraction holdout —
+"Pretraining LLMs with NVFP4"): :meth:`PrecisionPlan.first_last_k` and
+:meth:`PrecisionPlan.ramp`.  Plan *transforms* (:meth:`PrecisionPlan.
+promote`, :func:`stage2_plan`) replace the previously scattered knobs:
+per-(layer, class) demotion subsumes class-global demotion, and the §3.3
+stage-2 switch is "swap every row for the target plan's".
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.quantize import QuantSpec
 
 __all__ = ["MatmulRecipe", "PrecisionRecipe", "named_recipe", "RECIPES",
-           "promote_module_class",
+           "LayerRecipe", "PrecisionPlan", "as_plan", "stage2_plan",
            "MM_BF16", "MM_FP8", "MM_FP4_ALL", "MM_FFN_PAPER"]
+
+_ROLES = ("fwd_x", "fwd_w", "dgrad_g", "dgrad_w", "wgrad_x", "wgrad_g")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +67,14 @@ class MatmulRecipe:
         return all(s.is_passthrough for s in (
             self.fwd_x, self.fwd_w, self.dgrad_g, self.dgrad_w,
             self.wgrad_x, self.wgrad_g))
+
+    def to_dict(self) -> Dict[str, str]:
+        """Role -> compact spec string (``QuantSpec.to_str`` syntax)."""
+        return {r: getattr(self, r).to_str() for r in _ROLES}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, str]) -> "MatmulRecipe":
+        return cls(**{r: QuantSpec.from_str(d[r]) for r in _ROLES})
 
 
 def _mm(fwd: str, bwd_w: str, bwd_d: Optional[str], *,
@@ -131,20 +154,271 @@ _CLASS_FIELD = {"attn": "attn_linear", "ffn": "ffn_linear",
                 "head": "head_linear"}
 
 
-def promote_module_class(recipe: PrecisionRecipe, cls: str,
-                         to: Optional[MatmulRecipe] = None
-                         ) -> PrecisionRecipe:
-    """Derive a recipe with one module class promoted to higher precision
-    (default FP8-everywhere for that class — the Table-2 ablation axis).
-    Used by the adaptive controller to demote an FP4 class that shows
-    sustained quantization overflow.  No-op if the class already runs the
-    target MatmulRecipe."""
-    field = _CLASS_FIELD[cls]
-    to = to if to is not None else MM_FP8
-    if getattr(recipe, field) == to:
-        return recipe
-    return dataclasses.replace(recipe, name=f"{recipe.name}+{cls}=fp8",
-                               **{field: to})
+def _protect(mm: MatmulRecipe) -> MatmulRecipe:
+    """Higher-precision stand-in for a class recipe, role-wise: every
+    *quantized* role is raised to its FP8 counterpart; passthrough roles
+    are untouched.  Per-role matters: MM_FFN_PAPER keeps dgrad in BF16
+    (§3.2 — quantizing the activation-gradient path breaks convergence),
+    and a protection preset or demotion must never turn that unquantized
+    path INTO a quantized FP8 one."""
+    repl = {r: getattr(MM_FP8, r) for r in _ROLES
+            if not getattr(mm, r).is_passthrough}
+    return dataclasses.replace(mm, **repl) if repl else mm
+
+
+def _hybrid(mm: MatmulRecipe) -> MatmulRecipe:
+    """Middle rung of the FP8->FP4 depth ramp: the forward runs the target
+    (low-precision) specs, both backward matmuls stay at the protected
+    (FP8) specs — the §3.2 observation that the gradient path is the
+    sensitive one, applied per depth rung."""
+    if mm.is_passthrough:
+        return mm
+    hi = _protect(mm)
+    return dataclasses.replace(hi, fwd_x=mm.fwd_x, fwd_w=mm.fwd_w)
+
+
+# ---------------------------------------------------------------------------
+# Layer-resolved precision plans
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerRecipe:
+    """One plan row: the class -> MatmulRecipe table of a single layer."""
+
+    attn_linear: MatmulRecipe = MM_BF16
+    ffn_linear: MatmulRecipe = MM_BF16
+
+    def for_class(self, cls: str) -> MatmulRecipe:
+        return {"attn": self.attn_linear, "ffn": self.ffn_linear}[cls]
+
+    @property
+    def is_passthrough(self) -> bool:
+        return (self.attn_linear.is_passthrough
+                and self.ffn_linear.is_passthrough)
+
+    def to_dict(self) -> Dict[str, Dict[str, str]]:
+        return {"attn": self.attn_linear.to_dict(),
+                "ffn": self.ffn_linear.to_dict()}
+
+    @classmethod
+    def from_dict(cls, d) -> "LayerRecipe":
+        return cls(attn_linear=MatmulRecipe.from_dict(d["attn"]),
+                   ffn_linear=MatmulRecipe.from_dict(d["ffn"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Per-layer x module-class x role precision table for a whole model.
+
+    ``layers[i]`` holds layer i's class recipes; the lm-head (outside the
+    stack) has its own slot.  Frozen + tuple-backed, so plans are hashable
+    — the trainer keys its compiled step graphs on the plan itself, and
+    ``models.stack`` partitions scan layers by row equality.
+    """
+
+    name: str
+    layers: Tuple[LayerRecipe, ...]
+    head_linear: MatmulRecipe = MM_BF16
+    # Target-precision schedule (§3.3): fraction of final steps retrained at
+    # the target (high) precision. 0.0 disables stage 2.
+    target_precision_frac: float = 0.0
+
+    # -- lookups -----------------------------------------------------------
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    def layer(self, i: int) -> LayerRecipe:
+        return self.layers[i]
+
+    def for_class(self, cls: str, layer: Optional[int] = None
+                  ) -> MatmulRecipe:
+        if cls == "head":
+            return self.head_linear
+        if layer is None:
+            raise ValueError(f"class {cls!r} is layer-resolved; pass layer=")
+        return self.layers[layer].for_class(cls)
+
+    @property
+    def is_passthrough(self) -> bool:
+        return (self.head_linear.is_passthrough
+                and all(r.is_passthrough for r in self.layers))
+
+    @property
+    def is_uniform(self) -> bool:
+        return all(r == self.layers[0] for r in self.layers)
+
+    def scan_runs(self, period: int) -> List[Tuple[int, int]]:
+        """Partition scan groups into maximal contiguous runs whose layers
+        share a plan signature: ``[(g0, g1), ...)`` group ranges.  Group g
+        covers layers ``[g*period, (g+1)*period)``; a uniform plan yields
+        the single run ``[(0, n_groups)]`` (one ``lax.scan``, the
+        pre-plan graph)."""
+        assert len(self.layers) % period == 0, (len(self.layers), period)
+        n_groups = len(self.layers) // period
+        runs: List[Tuple[int, int]] = []
+        prev_sig = None
+        for g in range(n_groups):
+            sig = self.layers[g * period:(g + 1) * period]
+            if runs and sig == prev_sig:
+                runs[-1] = (runs[-1][0], g + 1)
+            else:
+                runs.append((g, g + 1))
+            prev_sig = sig
+        return runs
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def uniform(cls, recipe: PrecisionRecipe, n_layers: int
+                ) -> "PrecisionPlan":
+        """Every layer runs the recipe's class template (the pre-plan
+        semantics; resolves to a single scan run)."""
+        row = LayerRecipe(recipe.attn_linear, recipe.ffn_linear)
+        return cls(recipe.name, (row,) * n_layers, recipe.head_linear,
+                   recipe.target_precision_frac)
+
+    @classmethod
+    def first_last_k(cls, recipe: PrecisionRecipe, n_layers: int,
+                     k: int = 2, high: Optional[LayerRecipe] = None
+                     ) -> "PrecisionPlan":
+        """Depth-graded preset: the first and last ``k`` layers run the
+        protected (default FP8) row, the middle runs the recipe (cf. "FP4
+        All the Way", which keeps first/last blocks in higher precision)."""
+        base = cls.uniform(recipe, n_layers)
+        hi = high if high is not None else LayerRecipe(
+            _protect(recipe.attn_linear), _protect(recipe.ffn_linear))
+        rows = tuple(hi if (i < k or i >= n_layers - k) else base.layers[i]
+                     for i in range(n_layers))
+        return dataclasses.replace(base, name=f"{recipe.name}+fl{k}",
+                                   layers=rows)
+
+    @classmethod
+    def ramp(cls, recipe: PrecisionRecipe, n_layers: int,
+             frac: float = 0.5) -> "PrecisionPlan":
+        """Depth-graded preset: linear FP8 -> FP4 ramp over the first
+        ``frac`` of the depth.  Three rungs per class — protected (FP8),
+        hybrid (FP4 forward / FP8 backward), full recipe — assigned
+        linearly over the ramp region; the remaining depth runs the
+        recipe unchanged."""
+        ramp_n = max(int(round(frac * n_layers)), 0)
+        rungs = (
+            LayerRecipe(_protect(recipe.attn_linear),
+                        _protect(recipe.ffn_linear)),
+            LayerRecipe(_hybrid(recipe.attn_linear),
+                        _hybrid(recipe.ffn_linear)),
+            LayerRecipe(recipe.attn_linear, recipe.ffn_linear),
+        )
+        rows = []
+        for i in range(n_layers):
+            if i >= ramp_n:
+                rows.append(rungs[-1])
+            else:
+                rows.append(rungs[min(i * len(rungs) // ramp_n,
+                                      len(rungs) - 1)])
+        return cls(f"{recipe.name}+ramp{frac:g}", tuple(rows),
+                   recipe.head_linear, recipe.target_precision_frac)
+
+    # -- transforms --------------------------------------------------------
+
+    def promote(self, cls: str, layer: Optional[int] = None,
+                to: Optional[MatmulRecipe] = None) -> "PrecisionPlan":
+        """Plan with one (layer, class) cell — or a whole class when
+        ``layer`` is None, or the head — promoted to higher precision.
+        The default target is the role-wise FP8 protection of the cell's
+        current recipe (quantized roles -> FP8, passthrough roles — e.g.
+        the paper's BF16 FFN dgrad — stay unquantized); pass ``to`` for an
+        explicit replacement.  The adaptive controller's per-layer
+        demotion rule; no-op (same object) if nothing changes."""
+        if cls == "head":
+            tgt = to if to is not None else _protect(self.head_linear)
+            if self.head_linear == tgt:
+                return self
+            return dataclasses.replace(
+                self, name=f"{self.name}+head=fp8", head_linear=tgt)
+        field = _CLASS_FIELD[cls]
+        idxs = range(self.n_layers) if layer is None else (layer,)
+        rows = list(self.layers)
+        changed = False
+        for i in idxs:
+            cur = getattr(rows[i], field)
+            tgt = to if to is not None else _protect(cur)
+            if cur != tgt:
+                rows[i] = dataclasses.replace(rows[i], **{field: tgt})
+                changed = True
+        if not changed:
+            return self
+        where = f"l{layer:02d}." if layer is not None else ""
+        return dataclasses.replace(
+            self, name=f"{self.name}+{where}{cls}=fp8", layers=tuple(rows))
+
+    def resize(self, n_layers: int) -> "PrecisionPlan":
+        """Plan for a different depth by proportional row mapping (exact
+        for uniform plans; used for the audio encoder stack, whose depth
+        differs from the decoder the plan was built for)."""
+        if n_layers == self.n_layers:
+            return self
+        if self.n_layers == 1 or n_layers == 1:
+            rows = (self.layers[0],) * n_layers
+        else:
+            rows = tuple(
+                self.layers[round(i * (self.n_layers - 1)
+                                  / (n_layers - 1))]
+                for i in range(n_layers))
+        return dataclasses.replace(self, layers=rows)
+
+    # -- serialization (checkpoints / telemetry) ---------------------------
+
+    def to_dict(self) -> Dict:
+        """JSON-able dict form (rows deduplicated by reference table)."""
+        table: List[Dict] = []
+        index: Dict[LayerRecipe, int] = {}
+        idxs = []
+        for row in self.layers:
+            if row not in index:
+                index[row] = len(table)
+                table.append(row.to_dict())
+            idxs.append(index[row])
+        return {"name": self.name,
+                "head": self.head_linear.to_dict(),
+                "target_precision_frac": self.target_precision_frac,
+                "rows": table, "layers": idxs}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PrecisionPlan":
+        table = [LayerRecipe.from_dict(r) for r in d["rows"]]
+        return cls(d["name"], tuple(table[i] for i in d["layers"]),
+                   MatmulRecipe.from_dict(d["head"]),
+                   float(d.get("target_precision_frac", 0.0)))
+
+
+def as_plan(p: Union[PrecisionPlan, PrecisionRecipe], n_layers: int
+            ) -> PrecisionPlan:
+    """Coerce a recipe (class template) or plan to a plan of ``n_layers``.
+
+    The single choke point that lets every entry path — tests and serving
+    code passing ``RECIPES[...]``, the trainer passing real plans — feed
+    the same plan-resolved model internals.  A plan of the wrong depth is
+    an error, not a silent broadcast."""
+    if isinstance(p, PrecisionPlan):
+        if p.n_layers != n_layers:
+            raise ValueError(f"plan {p.name!r} has {p.n_layers} layers, "
+                             f"model has {n_layers}")
+        return p
+    return PrecisionPlan.uniform(p, n_layers)
+
+
+def stage2_plan(plan: PrecisionPlan, target: PrecisionPlan
+                ) -> PrecisionPlan:
+    """The §3.3 stage-2 switch as a plan transform: every row and the head
+    take the target plan's cells (identity if already equal)."""
+    if (plan.layers == target.layers
+            and plan.head_linear == target.head_linear):
+        return plan
+    return dataclasses.replace(
+        plan, name=target.name, layers=target.layers,
+        head_linear=target.head_linear)
 
 
 def named_recipe(name: str) -> PrecisionRecipe:

@@ -1,16 +1,21 @@
-"""Target-precision training schedule (§3.3).
+"""Target-precision training schedule (§3.3), expressed as a plan transform.
 
 Two stages: (1) low-precision pretraining for the first ``1 - frac`` of
 steps, (2) a short high-precision ("target precision") continuation for the
 final ``frac`` (paper: 5-10%) that lets the model shed quantization-noise
-adaptations.  The trainer keeps two jitted train_steps (one per recipe) and
-switches at the boundary — switching is a Python-level decision so each graph
-stays static.
+adaptations.  The trainer keeps one jitted train_step per *plan* and
+switches at the boundary — switching is a Python-level decision so each
+graph stays static.
 
-The stage-2 recipe is configurable (``target``, default the BF16 baseline;
-``TrainConfig.target_recipe`` threads the knob) so the Table-3 schedule
-ablations — e.g. an FP8 stage 2 — are runnable.  ``telemetry.controller``
-generalizes the fixed-fraction switch to a telemetry-driven one.
+Since the layer-resolved refactor the schedule operates on
+``PrecisionPlan``s: stage 2 is :func:`core.recipe.stage2_plan` applied to
+the stage-1 plan (every layer row and the head swap to the target plan's
+cells), so a depth-graded stage-1 plan still collapses to the uniform
+target at the boundary.  The stage-2 target is configurable
+(``TrainConfig.target_recipe`` threads the knob; default the BF16
+baseline) so the Table-3 schedule ablations — e.g. an FP8 stage 2 — are
+runnable.  ``telemetry.controller`` generalizes the fixed-fraction switch
+to a telemetry-driven one.
 """
 from __future__ import annotations
 
@@ -18,35 +23,40 @@ import dataclasses
 from typing import Optional
 
 from repro.core import recipe as recipe_lib
+from repro.core.recipe import PrecisionPlan
 
 __all__ = ["TargetPrecisionSchedule"]
 
 
 @dataclasses.dataclass(frozen=True)
 class TargetPrecisionSchedule:
-    recipe: recipe_lib.PrecisionRecipe
+    plan: PrecisionPlan
     total_steps: int
-    target: Optional[recipe_lib.PrecisionRecipe] = None
+    target: Optional[PrecisionPlan] = None
 
     @property
     def switch_step(self) -> int:
-        frac = self.recipe.target_precision_frac
+        frac = self.plan.target_precision_frac
         if frac <= 0.0:
             return self.total_steps  # never switch
         return int(round(self.total_steps * (1.0 - frac)))
 
-    def recipe_at(self, step: int) -> recipe_lib.PrecisionRecipe:
-        """Active recipe for ``step`` (0-indexed)."""
+    def plan_at(self, step: int) -> PrecisionPlan:
+        """Active plan for ``step`` (0-indexed)."""
         if step >= self.switch_step:
-            return self.target_recipe
-        return self.recipe
+            return self.target_plan
+        return self.plan
 
     @property
-    def target_recipe(self) -> recipe_lib.PrecisionRecipe:
-        """Stage-2 recipe (default: the full-precision BF16 baseline)."""
+    def target_plan(self) -> PrecisionPlan:
+        """Stage-2 plan (default: the full-precision BF16 baseline),
+        applied as a transform of the stage-1 plan."""
         if self.target is not None:
-            return self.target
-        return recipe_lib.RECIPES["bf16"]
+            tgt = self.target
+        else:
+            tgt = PrecisionPlan.uniform(recipe_lib.RECIPES["bf16"],
+                                        self.plan.n_layers)
+        return recipe_lib.stage2_plan(self.plan, tgt)
 
     def is_switch_boundary(self, step: int) -> bool:
         return step == self.switch_step

@@ -1,8 +1,9 @@
 """Attention: GQA/MQA, causal/sliding-window/cross, chunked flash, KV caches.
 
 Per the paper (§3.1 + App. B): the QKV and output projections are
-"attention-protected" linears (FP8 under the paper recipe, configured by
-``MatmulRecipe``), while the attention math itself (softmax(QK^T)V) always
+"attention-protected" linears (FP8 under the paper recipe; the
+``MatmulRecipe`` argument is the layer's attn cell of the active
+``PrecisionPlan``), while the attention math itself (softmax(QK^T)V) always
 runs in the compute dtype via a FlashAttention-equivalent — here a chunked
 online-softmax over KV blocks (O(S * chunk) memory), optionally the Pallas
 kernel on TPU.

@@ -31,7 +31,8 @@ def mlp_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
 
 def mlp(params: Dict[str, jnp.ndarray], cfg: ModelConfig, x: jnp.ndarray,
         recipe: MatmulRecipe) -> jnp.ndarray:
-    """x: (B, S, D) -> (B, S, D).  All matmuls quantized per ``recipe``;
+    """x: (B, S, D) -> (B, S, D).  All matmuls quantized per ``recipe`` —
+    this layer's ffn cell of the active ``PrecisionPlan``;
     the nonlinearity stays in the compute dtype (§3.2: there is always a
     nonlinear op between linear layers that needs precise representation)."""
     if cfg.activation == "swiglu":

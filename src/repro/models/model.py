@@ -1,8 +1,10 @@
 """Unified model API: build_model(cfg) -> Model with init/loss/prefill/decode.
 
 Families: dense | moe | vlm | audio (enc-dec) | ssm | hybrid — all assembled
-from the unified stack (models.stack).  The paper's precision recipe enters
-exclusively through the ``recipe`` argument threaded to every linear.
+from the unified stack (models.stack).  Precision enters exclusively through
+the ``plan`` argument: a layer-resolved ``PrecisionPlan`` (or a
+``PrecisionRecipe`` class template, coerced to the uniform plan via
+``core.recipe.as_plan``) threaded to every linear.
 """
 from __future__ import annotations
 
@@ -14,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.recipe import PrecisionRecipe
+from repro.core.recipe import PrecisionPlan, as_plan
 from repro.models import stack as stack_lib
 from repro.nn.layers import (apply_norm, linear, shard_hint,
                              sincos_positions)
@@ -118,7 +120,7 @@ class Model:
         return shard_hint(x, ("batch", "seq", "embed"))
 
     def _head(self, params, x: jnp.ndarray,
-              recipe: PrecisionRecipe) -> jnp.ndarray:
+              plan: PrecisionPlan) -> jnp.ndarray:
         cfg = self.cfg
         x = apply_norm(params["final_norm"], x, cfg.norm)
         if cfg.tie_embeddings:
@@ -126,8 +128,13 @@ class Model:
         else:
             w = params["head"].astype(self._dt)
         with telemetry.module_scope("head"):
-            logits = linear(x, w, recipe.head_linear, cfg)
+            logits = linear(x, w, plan.head_linear, cfg)
         return shard_hint(logits, ("batch", "seq", "vocab"))
+
+    def _plan(self, p) -> PrecisionPlan:
+        """Coerce a recipe (class template) or plan to this model's
+        depth-resolved plan (see ``core.recipe.as_plan``)."""
+        return as_plan(p, self.cfg.n_layers)
 
     @property
     def _dt(self):
@@ -138,21 +145,24 @@ class Model:
     # ------------------------------------------------------------------
 
     def _encode(self, params, frames: jnp.ndarray,
-                recipe: PrecisionRecipe) -> jnp.ndarray:
+                plan: PrecisionPlan) -> jnp.ndarray:
         """frames: precomputed conv-frontend embeddings (B, F, D) — stub per
-        assignment; adds sinusoidal positions and runs the encoder stack."""
+        assignment; adds sinusoidal positions and runs the encoder stack.
+        The decoder's plan is depth-resized onto the encoder stack
+        (proportional row mapping; exact for uniform plans)."""
         enc = _encoder_cfg(self.cfg)
         x = frames.astype(self._dt)
         x = x + sincos_positions(x.shape[1], enc.d_model).astype(self._dt)
         x, _, _ = stack_lib.run_stack(
-            params["encoder"]["stack"], enc, recipe, x, causal=False)
+            params["encoder"]["stack"], enc, plan.resize(enc.n_layers), x,
+            causal=False, indexed_probes=False)
         return apply_norm(params["encoder"]["final_norm"], x, enc.norm)
 
-    def _cross_states(self, params, batch, recipe) -> Optional[jnp.ndarray]:
+    def _cross_states(self, params, batch, plan) -> Optional[jnp.ndarray]:
         if self.cfg.family == "vlm":
             return batch["vision"].astype(self._dt)
         if self.cfg.family == "audio":
-            return self._encode(params, batch["frames"], recipe)
+            return self._encode(params, batch["frames"], plan)
         return None
 
     # ------------------------------------------------------------------
@@ -160,27 +170,29 @@ class Model:
     # ------------------------------------------------------------------
 
     def forward(self, params, batch: Dict[str, jnp.ndarray],
-                recipe: PrecisionRecipe) -> Tuple[jnp.ndarray, Dict]:
+                plan) -> Tuple[jnp.ndarray, Dict]:
         """Full training-mode forward.  batch['tokens']: (B, S) int32."""
         cfg = self.cfg
+        plan = self._plan(plan)
         params = self.cast_params(params)
         tokens = batch["tokens"]
         x = self._embed(params, tokens)
-        cross = self._cross_states(params, batch, recipe)
+        cross = self._cross_states(params, batch, plan)
         x, _, aux = stack_lib.run_stack(
-            params["stack"], cfg, recipe, x, cross_states=cross)
-        logits = self._head(params, x, recipe)
+            params["stack"], cfg, plan, x, cross_states=cross)
+        logits = self._head(params, x, plan)
         return logits, aux
 
     def hidden(self, params, batch: Dict[str, jnp.ndarray],
-               recipe: PrecisionRecipe) -> Tuple[jnp.ndarray, Dict]:
+               plan) -> Tuple[jnp.ndarray, Dict]:
         """Training-mode forward up to (but excluding) the LM head."""
         cfg = self.cfg
+        plan = self._plan(plan)
         params = self.cast_params(params)
         x = self._embed(params, batch["tokens"])
-        cross = self._cross_states(params, batch, recipe)
+        cross = self._cross_states(params, batch, plan)
         x, _, aux = stack_lib.run_stack(
-            params["stack"], cfg, recipe, x, cross_states=cross)
+            params["stack"], cfg, plan, x, cross_states=cross)
         return apply_norm(params["final_norm"], x, cfg.norm), aux
 
     def _head_weight(self, params):
@@ -202,7 +214,7 @@ class Model:
         return nll, z2, mask.sum()
 
     def loss(self, params, batch: Dict[str, jnp.ndarray],
-             recipe: PrecisionRecipe) -> Tuple[jnp.ndarray, Dict]:
+             plan) -> Tuple[jnp.ndarray, Dict]:
         """Next-token cross-entropy (fp32).  targets==-1 masks a position.
 
         With ``cfg.loss_chunk > 0`` the head matmul + xent run seq-chunked
@@ -210,12 +222,13 @@ class Model:
         required for the 128k-256k-vocab configs at train_4k scale.
         """
         cfg = self.cfg
+        plan = self._plan(plan)
         targets = batch["targets"]
         if not cfg.loss_chunk:
-            logits, aux = self.forward(params, batch, recipe)
+            logits, aux = self.forward(params, batch, plan)
             nll, z2, n = self._xent_terms(logits, targets)
         else:
-            h, aux = self.hidden(params, batch, recipe)
+            h, aux = self.hidden(params, batch, plan)
             w = self._head_weight(self.cast_params(params))
             c = cfg.loss_chunk
             s = h.shape[1]
@@ -229,7 +242,7 @@ class Model:
                 # telemetry stays off in here: stats pushed from inside the
                 # chunk scan could not legally escape its trace scope.
                 with telemetry.suppressed():
-                    logits = linear(h_c, w, recipe.head_linear, cfg)
+                    logits = linear(h_c, w, plan.head_linear, cfg)
                 return self._xent_terms(logits, t_c)
 
             def body(carry, xs):
@@ -275,9 +288,10 @@ class Model:
         }
 
     def prefill(self, params, batch: Dict[str, jnp.ndarray], cache,
-                recipe: PrecisionRecipe) -> Tuple[jnp.ndarray, Any]:
+                plan) -> Tuple[jnp.ndarray, Any]:
         """Process the prompt; returns (last-position logits, filled cache)."""
         cfg = self.cfg
+        plan = self._plan(plan)
         params = self.cast_params(params)
         tokens = batch["tokens"]
         sq = tokens.shape[1]
@@ -286,27 +300,28 @@ class Model:
         positions = (cache["length"].astype(jnp.int32)
                      + jnp.arange(sq, dtype=jnp.int32))
         x = self._embed(params, tokens, positions=positions)
-        cross = self._cross_states(params, batch, recipe)
+        cross = self._cross_states(params, batch, plan)
         x, new_stack, _ = stack_lib.run_stack(
-            params["stack"], cfg, recipe, x, positions=positions,
+            params["stack"], cfg, plan, x, positions=positions,
             cross_states=cross, cache=cache["stack"],
             cache_len=cache["length"], decode=False)
-        logits = self._head(params, x[:, -1:], recipe)
+        logits = self._head(params, x[:, -1:], plan)
         return logits, {"stack": new_stack, "length": cache["length"] + sq}
 
     def decode_step(self, params, token: jnp.ndarray, cache,
-                    recipe: PrecisionRecipe) -> Tuple[jnp.ndarray, Any]:
+                    plan) -> Tuple[jnp.ndarray, Any]:
         """One decode step.  token: (B, 1) int32 -> logits (B, 1, V)."""
         cfg = self.cfg
+        plan = self._plan(plan)
         params = self.cast_params(params)
         pos = cache["length"]
         positions = pos[None].astype(jnp.int32)
         x = self._embed(params, token, positions=positions)
         x, new_stack, _ = stack_lib.run_stack(
-            params["stack"], cfg, recipe, x, positions=positions,
+            params["stack"], cfg, plan, x, positions=positions,
             cross_states=None, cache=cache["stack"], cache_len=pos,
             decode=True)
-        logits = self._head(params, x, recipe)
+        logits = self._head(params, x, plan)
         return logits, {"stack": new_stack, "length": pos + 1}
 
 

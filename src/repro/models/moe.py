@@ -1,7 +1,8 @@
 """Mixture-of-Experts FFN (GShard-style top-k routing, capacity dispatch).
 
-Expert matmuls are FFN-class linears under the paper's recipe (FP4 forward /
-FP8 wgrad).  The router is a tiny nonlinearity-adjacent matmul and stays in
+Expert matmuls are FFN-class linears — they run this layer's ffn cell of
+the active ``PrecisionPlan`` (FP4 forward / FP8 wgrad under the paper
+recipe, possibly demoted per layer by the controller).  The router is a tiny nonlinearity-adjacent matmul and stays in
 FP32 — exactly the class §3.2 protects (see DESIGN.md §Arch-applicability).
 
 Dispatch uses the classic GShard one-hot capacity einsums, reshaped into

@@ -4,8 +4,9 @@ TPU adaptation: the SSD formulation (Dao & Gu 2024, arXiv:2405.21060)
 re-expresses the selective-scan as block matmuls — intra-chunk "attention-
 like" products plus a short inter-chunk state recurrence — which is exactly
 what the MXU wants (dense 128-aligned dots) instead of the GPU's warp-level
-sequential scan.  The in/out projections are FFN-class linears under the
-paper's recipe (FP4 fwd / FP8 wgrad); the SSD mixing math itself is the
+sequential scan.  The in/out projections are FFN-class linears
+(they run the layer's ffn plan cell: FP4 fwd / FP8 wgrad under the paper
+recipe); the SSD mixing math itself is the
 token-mixing component and stays in the compute dtype, analogous to the
 paper's attention protection (§3.1) — see DESIGN.md §Arch-applicability.
 

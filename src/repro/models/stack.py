@@ -15,6 +15,13 @@ Stacking strategies:
     by the multi-pod dry-run and training);
   * ``scan_layers=False`` : python-loop unroll (exact cost_analysis for the
     roofline pass).
+
+Precision enters as a layer-resolved ``PrecisionPlan`` (``core.recipe``),
+resolved here at trace time: unroll mode indexes the plan row per layer;
+scan mode partitions the scan groups into maximal contiguous runs whose
+layers share a plan signature and emits one ``lax.scan`` per run (a
+uniform plan is a single run, reproducing the pre-plan single-scan graph
+bit-identically).
 """
 from __future__ import annotations
 
@@ -36,7 +43,7 @@ def _checkpoint(fn, cfg):
     return jax.checkpoint(fn)
 
 from repro.configs.base import LayerSpec, ModelConfig
-from repro.core.recipe import PrecisionRecipe
+from repro.core.recipe import LayerRecipe, PrecisionPlan
 from repro.models import attention as attn_lib
 from repro.models import mlp as mlp_lib
 from repro.models import moe as moe_lib
@@ -182,31 +189,34 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
 # Forward
 # ---------------------------------------------------------------------------
 
-def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, recipe:
-               PrecisionRecipe, x, *, positions, cross_states, cache,
-               cache_len, decode, causal=True):
-    """One layer.  Returns (x, new_cache).
+def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, row:
+               LayerRecipe, x, *, positions, cross_states, cache,
+               cache_len, decode, causal=True, layer_idx=None):
+    """One layer, precision-resolved by its plan ``row``.
+    Returns (x, new_cache).
 
     With telemetry enabled, a collection frame is opened around the whole
     layer: the quantized linears inside push per-operand quant-health stats
     into it, and the drained frame rides out through the ``_telemetry``
     cache slot (same channel as ``_moe_aux``) so per-layer stats survive
-    both the scan and the unroll stacking strategies.
+    both the scan and the unroll stacking strategies.  ``layer_idx`` (int
+    in unroll mode, traced scalar in a scan body) routes backward-side
+    probe stats into the layer's row.
     """
     new_cache: Dict[str, Any] = {}
-    with telemetry.layer_frame() as tel_frame:
+    with telemetry.layer_frame(layer_idx) as tel_frame:
         h = apply_norm(params["mixer_norm"], x, cfg.norm)
         if spec.mixer == "attn":
             with telemetry.module_scope("attn"):
                 out, c = attn_lib.attention(
-                    params["mixer"], cfg, h, recipe.attn_linear,
+                    params["mixer"], cfg, h, row.attn_linear,
                     positions=positions,
                     cache=None if cache is None else cache["self"],
                     cache_len=cache_len, causal=causal)
         else:
             with telemetry.module_scope("ssm"):
                 out, c = ssm_lib.mamba_mixer(
-                    params["mixer"], cfg, h, recipe.ffn_linear,
+                    params["mixer"], cfg, h, row.ffn_linear,
                     cache=None if cache is None else cache["self"],
                     decode=decode, unroll=not cfg.scan_layers)
         if cache is not None:
@@ -219,7 +229,7 @@ def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, recipe:
                 else None
             with telemetry.module_scope("cross"):
                 out, ccache = attn_lib.cross_attention(
-                    params["cross"], cfg, h, recipe.attn_linear,
+                    params["cross"], cfg, h, row.attn_linear,
                     kv_states=cross_states, cache=cc)
             gate = jnp.tanh(params["cross_gate"].astype(jnp.float32))
             x = x + (out.astype(jnp.float32) * gate).astype(x.dtype)
@@ -229,12 +239,12 @@ def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, recipe:
         if spec.ffn == "dense":
             h = apply_norm(params["ffn_norm"], x, cfg.norm)
             with telemetry.module_scope("ffn"):
-                x = x + mlp_lib.mlp(params["ffn"], cfg, h, recipe.ffn_linear)
+                x = x + mlp_lib.mlp(params["ffn"], cfg, h, row.ffn_linear)
         elif spec.ffn == "moe":
             h = apply_norm(params["ffn_norm"], x, cfg.norm)
             with telemetry.module_scope("moe"):
                 out, aux = moe_lib.moe(params["ffn"], cfg, h,
-                                       recipe.ffn_linear)
+                                       row.ffn_linear)
             x = x + out
             new_cache["_moe_aux"] = aux  # surfaced via cache slot in unroll
         x = shard_hint(x, ("batch", "seq", "embed"))
@@ -243,18 +253,25 @@ def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, recipe:
     return x, new_cache
 
 
-def run_stack(params, cfg: ModelConfig, recipe: PrecisionRecipe,
+def run_stack(params, cfg: ModelConfig, plan: PrecisionPlan,
               x: jnp.ndarray, *,
               positions: Optional[jnp.ndarray] = None,
               cross_states: Optional[jnp.ndarray] = None,
               cache=None, cache_len=None, decode: bool = False,
               specs: Optional[List[LayerSpec]] = None,
-              causal: bool = True):
-    """Run the full layer stack.
+              causal: bool = True, indexed_probes: bool = True):
+    """Run the full layer stack under a layer-resolved ``PrecisionPlan``.
 
     Returns (x, new_cache_or_None, aux_losses: dict of scalars).
+
+    ``indexed_probes=False`` disables per-layer backward-probe indexing
+    (taps fold into the class-aggregate trailing row).  The audio encoder
+    stack uses this: its layer indices would otherwise collide with the
+    decoder's rows in the shared probe arrays and could mis-drive the
+    controller's per-layer demotion.
     """
     specs = specs if specs is not None else cfg.layer_specs()
+    assert plan.n_layers == len(specs), (plan.n_layers, len(specs))
     aux_total: Dict[str, jnp.ndarray] = {}
 
     def add_aux(aux):
@@ -268,9 +285,10 @@ def run_stack(params, cfg: ModelConfig, recipe: PrecisionRecipe,
         new_caches = []
         for i, spec in enumerate(specs):
             fn = functools.partial(
-                _run_layer, cfg=cfg, spec=spec, recipe=recipe,
+                _run_layer, cfg=cfg, spec=spec, row=plan.layers[i],
                 positions=positions, cross_states=cross_states,
-                cache_len=cache_len, decode=decode, causal=causal)
+                cache_len=cache_len, decode=decode, causal=causal,
+                layer_idx=i if indexed_probes else None)
             if cfg.remat and cfg.remat_policy != "none" and cache is None:
                 ckpt = _checkpoint(
                     lambda p, y, _fn=fn: _fn(p, x=y, cache=None), cfg)
@@ -287,58 +305,100 @@ def run_stack(params, cfg: ModelConfig, recipe: PrecisionRecipe,
         return x, new_cache, aux_total
 
     # --- scan mode ---
+    #
+    # The plan partitions the scan groups into maximal contiguous runs of
+    # identical layer rows (``plan.scan_runs``); each run is one lax.scan
+    # over its slice of the stacked params/cache.  A uniform plan is a
+    # single run over the unsliced trees — the same traced graph as the
+    # pre-plan single scan.  When a telemetry collector is installed, the
+    # group index rides along as an extra scanned input so backward-side
+    # probe stats resolve to absolute layers (the graph with telemetry off
+    # carries no such input and stays bit-identical).
     period = _period(specs)
     n_groups = len(specs) // period
     gparams = params["groups"]
     gcache = cache["groups"] if cache is not None else None
+    runs = plan.scan_runs(period)
+    col_on = telemetry.active() is not None and indexed_probes
 
-    def group_body(carry, xs):
-        h, clen = carry
-        p_g, c_g = xs
-        new_c_g = {} if c_g is not None else None
-        aux_g = []
-        tel_g = {}
-        for i in range(period):
-            spec = specs[i]
-            pos = positions
-            if positions is not None and clen is not None:
+    new_gcache_runs = []
+    carry = (x, cache_len)
+    for g0, g1 in runs:
+        rows = plan.layers[g0 * period:(g0 + 1) * period]
+        whole = (g0, g1) == (0, n_groups)
+
+        def sl(t):
+            return t if whole else jax.tree.map(lambda a: a[g0:g1], t)
+
+        def group_body(carry, xs, rows=rows):
+            h, clen = carry
+            if col_on:
+                p_g, c_g, g_idx = xs
+            else:
+                p_g, c_g = xs
+                g_idx = None
+            new_c_g = {} if c_g is not None else None
+            aux_g = []
+            tel_g = {}
+            for i in range(period):
+                spec = specs[i]
                 pos = positions  # absolute positions already supplied
-            h, c_i = _run_layer(
-                p_g[f"l{i:02d}"], cfg, spec, recipe, h,
-                positions=pos, cross_states=cross_states,
-                cache=None if c_g is None else c_g[f"l{i:02d}"],
-                cache_len=clen, decode=decode, causal=causal)
-            if isinstance(c_i, dict) and "_moe_aux" in c_i:
-                aux_g.append(c_i.pop("_moe_aux"))
-            if isinstance(c_i, dict) and "_telemetry" in c_i:
-                for k, v in c_i.pop("_telemetry").items():
-                    tel_g[f"{i:02d}/{k}"] = v
-            if new_c_g is not None:
-                new_c_g[f"l{i:02d}"] = c_i
-        aux_stacked = jax.tree.map(lambda *xs: sum(xs), *aux_g) if aux_g \
-            else {}
-        return (h, clen), (new_c_g, aux_stacked, tel_g)
+                lidx = None if g_idx is None else g_idx * period + i
+                h, c_i = _run_layer(
+                    p_g[f"l{i:02d}"], cfg, spec, rows[i], h,
+                    positions=pos, cross_states=cross_states,
+                    cache=None if c_g is None else c_g[f"l{i:02d}"],
+                    cache_len=clen, decode=decode, causal=causal,
+                    layer_idx=lidx)
+                if isinstance(c_i, dict) and "_moe_aux" in c_i:
+                    aux_g.append(c_i.pop("_moe_aux"))
+                if isinstance(c_i, dict) and "_telemetry" in c_i:
+                    for k, v in c_i.pop("_telemetry").items():
+                        tel_g[f"{i:02d}/{k}"] = v
+                if new_c_g is not None:
+                    new_c_g[f"l{i:02d}"] = c_i
+            aux_stacked = jax.tree.map(lambda *xs: sum(xs), *aux_g) \
+                if aux_g else {}
+            return (h, clen), (new_c_g, aux_stacked, tel_g)
 
-    body = group_body
-    if cache is None:
-        body = _checkpoint(group_body, cfg)
+        body = group_body
+        if cache is None:
+            body = _checkpoint(group_body, cfg)
 
+        g_ids = (jnp.arange(g0, g1),) if col_on else ()
+        if gcache is not None:
+            carry, (new_c_g, aux_scan, tel_scan) = jax.lax.scan(
+                body, carry, (sl(gparams), sl(gcache)) + g_ids)
+            new_gcache_runs.append(new_c_g)
+        else:
+            if col_on:
+                def body_nocache(carry, xs):
+                    p_g, g_idx = xs
+                    return body(carry, (p_g, None, g_idx))
+                scan_xs = (sl(gparams), g_ids[0])
+            else:
+                def body_nocache(carry, p_g):
+                    return body(carry, (p_g, None))
+                scan_xs = sl(gparams)
+            carry, (_, aux_scan, tel_scan) = jax.lax.scan(
+                body_nocache, carry, scan_xs)
+        if aux_scan:
+            add_aux({k: jnp.sum(v) for k, v in aux_scan.items()})
+        # Per-layer telemetry: each scanned value is (g1 - g0,); unstack
+        # into absolute layer indices (layer = group*period + position).
+        for key, v in tel_scan.items():
+            i, rest = int(key[:2]), key[3:]
+            for g in range(g1 - g0):
+                aux_total[f"tel/l{(g0 + g) * period + i:02d}/{rest}"] = v[g]
+
+    x, _ = carry
     if gcache is not None:
-        (x, _), (new_gcache, aux_scan, tel_scan) = jax.lax.scan(
-            body, (x, cache_len), (gparams, gcache))
-        new_cache = {"groups": new_gcache}
+        if len(new_gcache_runs) == 1:
+            new_cache = {"groups": new_gcache_runs[0]}
+        else:
+            new_cache = {"groups": jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0),
+                *new_gcache_runs)}
     else:
-        def body_nocache(carry, p_g):
-            return body(carry, (p_g, None))
-        (x, _), (_, aux_scan, tel_scan) = jax.lax.scan(
-            body_nocache, (x, cache_len), gparams)
         new_cache = None
-    if aux_scan:
-        add_aux({k: jnp.sum(v) for k, v in aux_scan.items()})
-    # Per-layer telemetry: each scanned value is (n_groups,); unstack into
-    # absolute layer indices (layer = group * period + position-in-group).
-    for key, v in tel_scan.items():
-        i, rest = int(key[:2]), key[3:]
-        for g in range(n_groups):
-            aux_total[f"tel/l{g * period + i:02d}/{rest}"] = v[g]
     return x, new_cache, aux_total

@@ -24,9 +24,12 @@ def linear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe, cfg,
     implementation from ``cfg.linear_impl`` ('qdq' | 'pallas').
 
     The single call site models use for every recipe-carrying linear, so the
-    config knob reaches fwd, dgrad and wgrad of all of them.  ``cfg`` is
-    required: a call site that forgot it would otherwise silently ignore
-    the user's ``linear_impl`` setting.
+    config knob reaches fwd, dgrad and wgrad of all of them.  ``recipe`` is
+    one cell of the active ``PrecisionPlan`` — the layer-resolved row the
+    stack looked up for this layer and module class — so per-layer
+    precision requires no plumbing below this point.  ``cfg`` is required:
+    a call site that forgot it would otherwise silently ignore the user's
+    ``linear_impl`` setting.
     """
     return qlinear(x, w, recipe, bias=bias, key_data=key_data,
                    impl=cfg.linear_impl)

@@ -18,10 +18,15 @@ Two transport channels move stats out of the traced graph:
   * **Gradient-side stats** (dgrad_g / wgrad_g — the cotangent only exists
     in the backward pass).  :func:`grad_tap` wraps each quantized linear's
     output in a custom_vjp identity whose backward rule emits the stats of
-    the incoming cotangent as the "gradient" of a zero-valued *probe*
-    argument.  Probes are shared per module class, so these stats are
-    per-class aggregates (a trailing tap-count slot makes them
-    self-normalizing under scan and grad-accumulation).
+    the incoming cotangent as the "gradient" of a zero-valued *probe* row.
+    Probes are **indexed**: one ``(n_layers + 1, PROBE_SIZE)`` array per
+    module class, and each tap dynamically indexes its layer's row (the
+    trailing row collects out-of-stack taps, i.e. the lm-head).  Inside
+    ``lax.scan`` the layer index is a traced scalar, so the transpose of
+    the row-gather scatter-adds each iteration's stats into the right
+    row — per-layer resolution survives the scan, unlike the previous
+    per-class shared probes.  A trailing tap-count slot per row keeps the
+    stats self-normalizing under scan and grad-accumulation.
 
 Statistics per operand slot (all f32 scalars):
 
@@ -97,15 +102,23 @@ class TelemetryCollector:
         self.probes: Optional[Dict[str, jnp.ndarray]] = None
         self._frames = [_Frame()]
         self._scopes: list = []
+        self._layers: list = []
 
     def reset(self, probes) -> None:
         self.probes = probes
         self._frames = [_Frame()]
         self._scopes = []
+        self._layers = []
 
     @property
     def frame(self) -> _Frame:
         return self._frames[-1]
+
+    @property
+    def layer_index(self):
+        """Current layer index: a python int (unroll), a traced scalar
+        (scan body), or None outside any layer frame (lm-head/root)."""
+        return self._layers[-1] if self._layers else None
 
     @property
     def scope_path(self) -> str:
@@ -167,20 +180,26 @@ def module_scope(name: str):
 
 
 @contextlib.contextmanager
-def layer_frame():
+def layer_frame(index=None):
     """Open a per-layer collection frame.  Yields the frame (or None when
     telemetry is off); the caller drains ``frame.stats`` *within the same
-    trace scope* and ships them out as layer outputs."""
+    trace scope* and ships them out as layer outputs.
+
+    ``index`` is the absolute layer index — a python int in unroll mode, a
+    traced scalar inside a scan body — consumed by :func:`grad_tap` to
+    route backward-side stats into the layer's probe row."""
     col = active()
     if col is None:
         yield None
         return
     fr = _Frame()
     col._frames.append(fr)
+    col._layers.append(index)
     try:
         yield fr
     finally:
         col._frames.pop()
+        col._layers.pop()
 
 
 # ---------------------------------------------------------------------------
@@ -311,10 +330,13 @@ def tap_matmul_batched(x3: jnp.ndarray, w3: jnp.ndarray,
 # Gradient-side taps (probe-gradient transport)
 # ---------------------------------------------------------------------------
 
-def make_probes() -> Dict[str, jnp.ndarray]:
-    """Zero-valued probe vector per module class; differentiate the loss
-    w.r.t. these to receive the backward-side stats."""
-    return {c: jnp.zeros((PROBE_SIZE,), jnp.float32) for c in PROBE_CLASSES}
+def make_probes(n_layers: int) -> Dict[str, jnp.ndarray]:
+    """Zero-valued ``(n_layers + 1, PROBE_SIZE)`` probe array per module
+    class; differentiate the loss w.r.t. these to receive layer-resolved
+    backward-side stats.  Row ``n_layers`` collects taps fired outside any
+    layer frame (the lm-head linear)."""
+    return {c: jnp.zeros((n_layers + 1, PROBE_SIZE), jnp.float32)
+            for c in PROBE_CLASSES}
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -346,30 +368,59 @@ _grad_tap.defvjp(_grad_tap_fwd, _grad_tap_bwd)
 
 def grad_tap(y: jnp.ndarray, recipe: MatmulRecipe) -> jnp.ndarray:
     """Identity wrapper whose VJP emits cotangent quant stats into the
-    module-class probe.  Forward value (and the cotangent passed upstream)
-    are untouched, so training math is unchanged."""
+    current layer's row of the module-class probe.  Forward value (and the
+    cotangent passed upstream) are untouched, so training math is
+    unchanged.  With a traced layer index (scan body) the row gather's
+    transpose scatter-adds each iteration's stats into its own row."""
     col = active()
     if col is None or col.probes is None:
         return y
     if not (_statable(recipe.dgrad_g) or _statable(recipe.wgrad_g)):
         return y
-    cls = SCOPE_CLASS.get(col.scope_root, "other")
-    return _grad_tap(y, col.probes[cls], recipe)
+    probe = col.probes[SCOPE_CLASS.get(col.scope_root, "other")]
+    idx = col.layer_index
+    if idx is None:
+        row = probe[probe.shape[0] - 1]
+    elif isinstance(idx, int):
+        row = probe[min(idx, probe.shape[0] - 1)]
+    else:
+        idx = jnp.minimum(idx, probe.shape[0] - 1)
+        row = jax.lax.dynamic_index_in_dim(probe, idx, keepdims=False)
+    return _grad_tap(y, row, recipe)
+
+
+def _vec_metrics(vec: jnp.ndarray, prefix: str,
+                 out: Dict[str, jnp.ndarray]) -> None:
+    cnt = vec[-1]
+    denom = jnp.maximum(cnt, 1.0)
+    for i, name in enumerate(GRAD_STATS):
+        if name == "gnorm_sq":
+            out[f"{prefix}/gout_norm"] = jnp.sqrt(vec[i] / denom)
+        else:
+            out[f"{prefix}/{name}"] = vec[i] / denom
+    out[f"{prefix}/taps"] = cnt
 
 
 def probe_metrics(probe_grads: Dict[str, jnp.ndarray]
                   ) -> Dict[str, jnp.ndarray]:
-    """Normalize accumulated probe cotangents into per-class metrics."""
-    out = {}
-    for cls, vec in probe_grads.items():
-        cnt = vec[-1]
-        denom = jnp.maximum(cnt, 1.0)
-        for i, name in enumerate(GRAD_STATS):
-            if name == "gnorm_sq":
-                out[f"tel/bwd/{cls}/gout_norm"] = jnp.sqrt(vec[i] / denom)
-            else:
-                out[f"tel/bwd/{cls}/{name}"] = vec[i] / denom
-        out[f"tel/bwd/{cls}/taps"] = cnt
+    """Normalize accumulated probe cotangents into metrics.
+
+    Emits per-class aggregates (``tel/bwd/<cls>/<stat>``, the rows summed
+    — identical semantics to the pre-indexed probes) plus layer-resolved
+    ``tel/bwd/lNN/<cls>/<stat>`` rows for the in-stack classes, the keys
+    the per-(layer, class) controller demotion and the telemetry-report
+    heatmap consume.  The head/root row only feeds the aggregates (the
+    lm-head has no layer index)."""
+    out: Dict[str, jnp.ndarray] = {}
+    for cls, arr in probe_grads.items():
+        if arr.ndim == 1:  # defensive: legacy flat probe
+            _vec_metrics(arr, f"tel/bwd/{cls}", out)
+            continue
+        _vec_metrics(arr.sum(axis=0), f"tel/bwd/{cls}", out)
+        if cls == "head":
+            continue  # head taps land in the trailing row; aggregate only
+        for l in range(arr.shape[0] - 1):
+            _vec_metrics(arr[l], f"tel/bwd/l{l:02d}/{cls}", out)
     return out
 
 

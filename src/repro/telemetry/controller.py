@@ -1,29 +1,39 @@
 """Adaptive precision controller driven by live quantization telemetry.
 
-Generalizes the static §3.3 two-stage schedule with three decision rules
-(each opt-in via ``ControllerSettings``, see ``configs.base``):
+Generalizes the static §3.3 two-stage schedule with decision rules (each
+opt-in via ``ControllerSettings``, see ``configs.base``):
 
   * **Dynamic target-precision switch** — switch to the stage-2 (target)
-    recipe when the EMA of the forward quant relative error crosses a
+    plan when the EMA of the forward quant relative error crosses a
     threshold, OR at the schedule's fixed fraction, whichever comes first
     (cf. "FP4 All the Way", arXiv:2505.19115, which switches on measured
     quantization noise).
-  * **Per-module-class demotion** — sustained wgrad overflow (clip rate)
-    for a module class promotes that class FP4 -> FP8, i.e. moves along the
-    Table-2 ablation axis (cf. outlier clamping in arXiv:2501.17116).
+  * **Per-(layer, class) demotion** — sustained wgrad overflow (clip rate)
+    for one layer's module class promotes that single cell FP4 -> FP8 via
+    a ``PrecisionPlan`` transform.  Since the layer-resolved refactor one
+    noisy layer no longer punishes the whole depth: the per-layer stats
+    that ride the scan outputs (and the indexed backward probes) drive a
+    plan edit of just that (layer, class) cell.  The lm-head (outside the
+    stack) demotes as the ``head`` cell.
   * **Loss-spike rollback** — a loss spike against its EMA restores the
     last checkpoint and replays ``replay_steps`` steps at the target (high)
-    precision before FP4 resumes.
+    precision before FP4 resumes.  With ``lr_backoff`` enabled the
+    controller also shrinks the learning rate multiplicatively on each
+    rollback and recovers it geometrically over ``lr_recovery_steps``
+    steps — the LR scale rides the step graph as a traced scalar, so
+    backoff never recompiles.
 
 The controller is pure Python consuming per-step history rows (the metrics
 emitted by the in-graph taps, ``telemetry.collect``); precision changes stay
-Python-level recipe swaps, so every step graph remains static — exactly the
-mechanism the trainer already uses for the fixed schedule.
+Python-level plan swaps, so every step graph remains static — exactly the
+mechanism the trainer already uses for the fixed schedule.  All decision
+state (demoted cells, LR scale, replay window) persists in the checkpoint
+extra, so resume across any decision boundary is bit-exact.
 """
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ControllerSettings
 from repro.core import recipe as recipe_lib
@@ -33,7 +43,7 @@ from repro.telemetry.collect import SCOPE_CLASS
 __all__ = ["PrecisionController"]
 
 _CLASSES = ("attn", "ffn", "head")
-_LAYER_SEG = re.compile(r"^l\d+$")
+_LAYER_SEG = re.compile(r"^l(\d+)$")
 
 
 def _fwd_error_signal(row: Dict) -> Optional[float]:
@@ -44,28 +54,60 @@ def _fwd_error_signal(row: Dict) -> Optional[float]:
     return sum(vals) / len(vals) if vals else None
 
 
-def _wgrad_overflow_by_class(row: Dict) -> Dict[str, float]:
-    """Mean wgrad-operand clip rate per module class (fwd-side wgrad_x taps
-    + backward wgrad_g probe stats)."""
+def _demote_target(key: str) -> Optional[str]:
+    """Map a wgrad-clip metric key to its demotion cell.
+
+    Cells are ``"lNN/<cls>"`` for in-stack layers and ``"head"`` for the
+    lm-head.  Key shapes:
+
+      tel/lNN/<scope>/mmJ/wgrad_x/clip   fwd-side per-layer tap
+      tel/bwd/lNN/<cls>/wgrad_g/clip     indexed backward probe row
+      tel/head/mmJ/wgrad_x/clip          root frame (lm-head)
+      tel/bwd/head/wgrad_g/clip          head probe aggregate
+
+    Per-class backward aggregates (``tel/bwd/<cls>/...``) are skipped for
+    in-stack classes — their layer-resolved rows carry the signal.
+    """
+    if not (key.startswith("tel/") and "wgrad" in key
+            and key.endswith("/clip")):
+        return None
+    parts = key.split("/")
+    if parts[1] == "bwd":
+        m = _LAYER_SEG.match(parts[2])
+        if m:
+            cls = parts[3] if parts[3] in _CLASSES else None
+            return f"l{int(m.group(1)):02d}/{cls}" if cls else None
+        return "head" if parts[2] == "head" else None
+    m = _LAYER_SEG.match(parts[1])
+    if m:
+        cls = SCOPE_CLASS.get(parts[2], parts[2] if parts[2] in _CLASSES
+                              else None)
+        return f"l{int(m.group(1)):02d}/{cls}" if cls else None
+    scope = parts[1]
+    cls = scope if scope in _CLASSES else SCOPE_CLASS.get(scope)
+    return "head" if cls == "head" else None
+
+
+def _wgrad_overflow_by_cell(row: Dict) -> Dict[str, float]:
+    """Mean wgrad-operand clip rate per (layer, class) cell."""
     acc: Dict[str, List[float]] = {}
     for k, v in row.items():
-        if not (k.startswith("tel/") and "wgrad" in k
-                and k.endswith("/clip")):
-            continue
-        # Key shapes: tel/lNN/<scope>/mmJ/... (layer frames),
-        # tel/bwd/<cls>/... (probes), tel/<scope>/mmJ/... (root frame —
-        # e.g. the lm-head linear, which has no layer segment).
-        parts = k.split("/")
-        scope = (parts[2] if parts[1] == "bwd" or _LAYER_SEG.match(parts[1])
-                 else parts[1])
-        cls = scope if scope in _CLASSES else SCOPE_CLASS.get(scope)
-        if cls is not None and isinstance(v, (int, float)):
-            acc.setdefault(cls, []).append(float(v))
+        cell = _demote_target(k)
+        if cell is not None and isinstance(v, (int, float)):
+            acc.setdefault(cell, []).append(float(v))
     return {c: sum(vs) / len(vs) for c, vs in acc.items()}
 
 
+def _parse_cell(cell: str) -> Tuple[Optional[int], str]:
+    """``"l03/ffn"`` -> (3, "ffn");  ``"head"`` -> (None, "head")."""
+    if cell == "head":
+        return None, "head"
+    lseg, cls = cell.split("/")
+    return int(lseg[1:]), cls
+
+
 class PrecisionController:
-    """Consumes per-step telemetry rows; owns the active-recipe decision."""
+    """Consumes per-step telemetry rows; owns the active-plan decision."""
 
     def __init__(self, schedule: TargetPrecisionSchedule,
                  settings: Optional[ControllerSettings] = None):
@@ -75,34 +117,36 @@ class PrecisionController:
         self.loss_ema: Optional[float] = None
         self._loss_n = 0
         self.switched_at: Optional[int] = None
-        self.demoted: List[str] = []
+        self.demoted: List[str] = []          # "lNN/<cls>" | "head" cells
         self._streak: Dict[str, int] = {}
         self.replay_until: int = -1
         self.rollbacks = 0
+        self.lr_scale: float = 1.0
         self.events: List[Dict] = []
-        self._recipe_cache: Dict[str, recipe_lib.PrecisionRecipe] = {}
+        self._plan_cache: Dict[str, recipe_lib.PrecisionPlan] = {}
 
-    # -- recipe selection --------------------------------------------------
+    # -- plan selection ----------------------------------------------------
 
-    def active_recipe(self, step: int) -> recipe_lib.PrecisionRecipe:
+    def active_plan(self, step: int) -> recipe_lib.PrecisionPlan:
         if step < self.replay_until:
-            return self.schedule.target_recipe   # post-rollback replay
+            return self.schedule.target_plan  # post-rollback replay
         if self.switched_at is not None and step >= self.switched_at:
-            return self.schedule.target_recipe   # dynamic early switch
-        base = self.schedule.recipe_at(step)     # fixed-fraction switch
-        if base is not self.schedule.recipe or not self.demoted:
+            return self.schedule.target_plan  # dynamic early switch
+        base = self.schedule.plan_at(step)    # fixed-fraction switch
+        if base is not self.schedule.plan or not self.demoted:
             return base
-        return self._demoted_recipe(base)
+        return self._demoted_plan(base)
 
-    def _demoted_recipe(self, base: recipe_lib.PrecisionRecipe
-                        ) -> recipe_lib.PrecisionRecipe:
+    def _demoted_plan(self, base: recipe_lib.PrecisionPlan
+                      ) -> recipe_lib.PrecisionPlan:
         key = ",".join(sorted(self.demoted))
-        if key not in self._recipe_cache:
-            r = base
-            for cls in sorted(self.demoted):
-                r = recipe_lib.promote_module_class(r, cls)
-            self._recipe_cache[key] = r
-        return self._recipe_cache[key]
+        if key not in self._plan_cache:
+            p = base
+            for cell in sorted(self.demoted):
+                layer, cls = _parse_cell(cell)
+                p = p.promote(cls, layer=layer)
+            self._plan_cache[key] = p
+        return self._plan_cache[key]
 
     # -- observation -------------------------------------------------------
 
@@ -115,6 +159,7 @@ class PrecisionController:
         events += self._observe_overflow(step, row)
         if not in_replay:
             events += self._observe_loss(step, row)
+        self._observe_lr(events)
         self.events += events
         return events
 
@@ -131,7 +176,7 @@ class PrecisionController:
             self.switched_at = step + 1
             return [{"event": "switch", "step": step,
                      "error_ema": self.error_ema,
-                     "to": self.schedule.target_recipe.name}]
+                     "to": self.schedule.target_plan.name}]
         return []
 
     def _observe_overflow(self, step: int, row: Dict) -> List[Dict]:
@@ -139,15 +184,17 @@ class PrecisionController:
         if thr <= 0:
             return []
         events = []
-        for cls, rate in _wgrad_overflow_by_class(row).items():
+        for cell, rate in _wgrad_overflow_by_cell(row).items():
             if rate > thr:
-                self._streak[cls] = self._streak.get(cls, 0) + 1
+                self._streak[cell] = self._streak.get(cell, 0) + 1
             else:
-                self._streak[cls] = 0
-            if (self._streak[cls] >= self.cfg.demote_patience
-                    and cls not in self.demoted):
-                self.demoted.append(cls)
+                self._streak[cell] = 0
+            if (self._streak[cell] >= self.cfg.demote_patience
+                    and cell not in self.demoted):
+                self.demoted.append(cell)
+                layer, cls = _parse_cell(cell)
                 events.append({"event": "demote", "step": step,
+                               "cell": cell, "layer": layer,
                                "module_class": cls, "overflow": rate})
         return events
 
@@ -169,6 +216,24 @@ class PrecisionController:
         self.loss_ema = d * self.loss_ema + (1 - d) * loss
         return []
 
+    # -- LR backoff (satellite: controller-driven LR backoff) --------------
+
+    def _observe_lr(self, events: List[Dict]) -> None:
+        """Shrink the LR scale on each rollback; otherwise recover it
+        geometrically so it reaches 1.0 after ~``lr_recovery_steps`` clean
+        steps per backoff applied."""
+        if self.cfg.lr_backoff <= 0:
+            return
+        if any(e["event"] == "rollback" for e in events):
+            self.lr_scale *= self.cfg.lr_backoff
+            for e in events:
+                if e["event"] == "rollback":
+                    e["lr_scale"] = self.lr_scale
+        elif self.lr_scale < 1.0:
+            rate = (1.0 / self.cfg.lr_backoff) ** (
+                1.0 / max(self.cfg.lr_recovery_steps, 1))
+            self.lr_scale = min(1.0, self.lr_scale * rate)
+
     # -- rollback handshake (trainer-owned checkpoint restore) -------------
 
     def begin_replay(self, restored_step: int) -> None:
@@ -183,10 +248,12 @@ class PrecisionController:
         return {"switched_at": self.switched_at,
                 "demoted": list(self.demoted),
                 "replay_until": self.replay_until,
-                "rollbacks": self.rollbacks}
+                "rollbacks": self.rollbacks,
+                "lr_scale": self.lr_scale}
 
     def load_state(self, state: Dict) -> None:
         self.switched_at = state.get("switched_at")
         self.demoted = list(state.get("demoted", []))
         self.replay_until = int(state.get("replay_until", -1))
         self.rollbacks = int(state.get("rollbacks", 0))
+        self.lr_scale = float(state.get("lr_scale", 1.0))

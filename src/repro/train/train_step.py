@@ -1,9 +1,11 @@
 """jit-able train/eval steps: loss, grad-accum, clip, compression, update.
 
-The precision recipe is baked into the compiled graph (it changes the math),
-so the trainer holds one compiled step per active recipe — switching at the
-§3.3 schedule boundary is a Python-level swap, not a recompile of anything
-else.  ``step`` is a traced scalar so the LR schedule lives inside the graph.
+The precision plan is baked into the compiled graph (it changes the math),
+so the trainer holds one compiled step per active plan — switching at the
+§3.3 schedule boundary or after a controller demotion is a Python-level
+swap, not a recompile of anything else.  ``step`` is a traced scalar so the
+LR schedule lives inside the graph; ``lr_scale`` is a traced scalar so the
+controller's LR backoff does not recompile either.
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
 from repro.core.qlinear import matmul_impl
-from repro.core.recipe import PrecisionRecipe
+from repro.core.recipe import as_plan
 from repro.models.model import Model
 from repro.optim import (clip_by_global_norm, fp8_compress_grads,
                          get_optimizer, warmup_cosine)
@@ -39,19 +41,23 @@ def _split_microbatches(batch: Dict[str, jnp.ndarray], k: int):
 
 
 def make_train_step(model: Model, tcfg: TrainConfig,
-                    recipe: PrecisionRecipe, *,
+                    plan, *,
                     jit: bool = True,
                     donate: bool = True,
                     in_shardings=None, out_shardings=None):
-    """Returns train_step(params, opt_state, comp_state, batch, step)
-    -> (params, opt_state, comp_state, metrics).
+    """Returns train_step(params, opt_state, comp_state, batch, step,
+    lr_scale=1.0) -> (params, opt_state, comp_state, metrics).
 
-    The model's linear layers run through ``cfg.linear_impl`` ('qdq'
-    unfused simulation | 'pallas' fused quantize+matmul kernel for
-    fwd/dgrad/wgrad); validated here so a typo'd config fails at step-build
-    time, not deep inside a jit trace.
+    ``plan`` is a ``PrecisionPlan`` or a ``PrecisionRecipe`` template
+    (coerced to the uniform plan).  The model's linear layers run through
+    ``cfg.linear_impl`` ('qdq' unfused simulation | 'pallas' fused
+    quantize+matmul kernel for fwd/dgrad/wgrad); validated here so a
+    typo'd config fails at step-build time, not deep inside a jit trace.
+    ``lr_scale`` multiplies the scheduled LR (the controller's rollback
+    backoff); callers that never back off can omit it.
     """
     matmul_impl(model.cfg.linear_impl)
+    plan = as_plan(plan, model.cfg.n_layers)
     opt = make_optimizer(model, tcfg)
     lr_fn = warmup_cosine(tcfg.learning_rate, tcfg.total_steps,
                           tcfg.warmup_frac, tcfg.min_lr_frac)
@@ -64,17 +70,20 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     collector = telemetry.TelemetryCollector() if tcfg.telemetry else None
 
     def loss_fn(params, batch):
-        return model.loss(params, batch, recipe)
+        return model.loss(params, batch, plan)
 
     def loss_fn_tel(params, batch, probes):
         with telemetry.collecting(collector, probes):
-            loss, metrics = model.loss(params, batch, recipe)
+            loss, metrics = model.loss(params, batch, plan)
             metrics = dict(metrics)
             metrics.update(collector.drain_root())
         return loss, metrics
 
+    n_layers = model.cfg.n_layers
+
     def compute_grads(params, batch):
-        probes = telemetry.make_probes() if collector is not None else None
+        probes = (telemetry.make_probes(n_layers)
+                  if collector is not None else None)
         if collector is not None:
             vg = jax.value_and_grad(loss_fn_tel, argnums=(0, 2),
                                     has_aux=True)
@@ -104,7 +113,7 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                     acc, (g0, jnp.zeros((), jnp.float32)), mbs)
             else:
                 ((g, pg), loss_sum), metrics = jax.lax.scan(
-                    acc_tel, ((g0, telemetry.make_probes()),
+                    acc_tel, ((g0, telemetry.make_probes(n_layers)),
                               jnp.zeros((), jnp.float32)), mbs)
             k = tcfg.microbatch
             grads = jax.tree.map(lambda x: x / k, g)
@@ -121,14 +130,15 @@ def make_train_step(model: Model, tcfg: TrainConfig,
             loss_fn, has_aux=True)(params, batch)
         return grads, metrics
 
-    def train_step(params, opt_state, comp_state, batch, step):
+    def train_step(params, opt_state, comp_state, batch, step,
+                   lr_scale=1.0):
         grads, metrics = compute_grads(params, batch)
         if collector is not None:
             metrics.update(telemetry.grad_norm_metrics(grads))
         grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
         if use_compression:
             grads, comp_state = fp8_compress_grads(grads, comp_state)
-        lr = lr_fn(step)
+        lr = lr_fn(step) * lr_scale
         params, opt_state = opt.update(grads, opt_state, params, lr)
         metrics = dict(metrics)
         metrics["grad_norm"] = gnorm
@@ -146,8 +156,10 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                    donate_argnums=(0, 1, 2) if donate else (), **kw)
 
 
-def make_eval_step(model: Model, recipe: PrecisionRecipe, *, jit=True):
+def make_eval_step(model: Model, plan, *, jit=True):
+    plan = as_plan(plan, model.cfg.n_layers)
+
     def eval_step(params, batch):
-        loss, metrics = model.loss(params, batch, recipe)
+        loss, metrics = model.loss(params, batch, plan)
         return metrics
     return jax.jit(eval_step) if jit else eval_step

@@ -1,17 +1,24 @@
 """Fault-tolerant training loop with the paper's two-stage schedule.
 
 Responsibilities:
+  * precision plans: the trainer resolves ``TrainConfig.recipe`` into a
+    layer-resolved ``PrecisionPlan`` (``TrainConfig.plan_preset`` selects a
+    depth-graded constructor: uniform | first_last_k | ramp) and holds one
+    jitted step graph per active plan;
   * target-precision schedule (§3.3): low-precision step graph for stage 1,
     high-precision graph for the final 5-10% of steps (stage-2 recipe
-    configurable via ``TrainConfig.target_recipe``);
+    configurable via ``TrainConfig.target_recipe``; the switch is a plan
+    transform);
   * adaptive precision (``TrainConfig.controller``): the telemetry-driven
-    ``PrecisionController`` picks the active recipe per step (dynamic early
-    switch, module-class demotion) and can request a loss-spike rollback —
-    restore the last checkpoint and replay at the target precision;
+    ``PrecisionController`` picks the active plan per step (dynamic early
+    switch, per-(layer, class) demotion, LR backoff) and can request a
+    loss-spike rollback — restore the last checkpoint and replay at the
+    target precision;
   * checkpoint/restart: atomic step-indexed checkpoints of params + optimizer
-    + compression residuals + step (+ controller state); index-addressed data
-    needs no iterator state — ``resume()`` continues bit-exact (tested,
-    including across the precision-switch boundary);
+    + compression residuals + step (+ controller state + active plan); the
+    plan is re-derived from the restored step and controller state, so
+    ``resume()`` continues bit-exact across the switch boundary AND across
+    a per-layer demotion boundary (both tested);
   * straggler monitoring: per-step wall-time EMA outlier detection with a
     pluggable action; flags are folded into the history rows;
   * eval + metrics history; optional JSONL telemetry log
@@ -29,7 +36,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import TrainConfig
-from repro.core.recipe import PrecisionRecipe, RECIPES
+from repro.core.recipe import RECIPES, PrecisionPlan
 from repro.core.schedule import TargetPrecisionSchedule
 from repro.models.model import Model
 from repro.optim import init_compression_state
@@ -84,10 +91,13 @@ class Trainer:
         self.tcfg = tcfg
         self.pipeline = pipeline
         self.eval_pipeline = eval_pipeline
-        self.recipe: PrecisionRecipe = RECIPES[tcfg.recipe]
+        self.recipe = RECIPES[tcfg.recipe]   # class template (for reports)
+        n_layers = model.cfg.n_layers
+        self.plan: PrecisionPlan = self._build_plan(n_layers)
         self.schedule = TargetPrecisionSchedule(
-            self.recipe, tcfg.total_steps,
-            target=RECIPES[tcfg.target_recipe])
+            self.plan, tcfg.total_steps,
+            target=PrecisionPlan.uniform(RECIPES[tcfg.target_recipe],
+                                         n_layers))
         self._steps: Dict[tuple, Callable] = {}
         self._jit = jit
         self.monitor = StepTimeMonitor()
@@ -107,6 +117,21 @@ class Trainer:
 
     # ------------------------------------------------------------------
 
+    def _build_plan(self, n_layers: int) -> PrecisionPlan:
+        """Resolve TrainConfig.recipe/plan_preset into a PrecisionPlan."""
+        preset = self.tcfg.plan_preset
+        if preset == "uniform":
+            return PrecisionPlan.uniform(self.recipe, n_layers)
+        if preset == "first_last_k":
+            return PrecisionPlan.first_last_k(self.recipe, n_layers,
+                                              k=self.tcfg.plan_k)
+        if preset == "ramp":
+            return PrecisionPlan.ramp(self.recipe, n_layers,
+                                      frac=self.tcfg.plan_frac)
+        raise ValueError(f"unknown plan_preset {preset!r}")
+
+    # ------------------------------------------------------------------
+
     def init_state(self, seed: Optional[int] = None) -> TrainState:
         key = jax.random.PRNGKey(self.tcfg.seed if seed is None else seed)
         params = self.model.init(key, jnp.float32)
@@ -117,15 +142,15 @@ class Trainer:
                       jnp.zeros((), jnp.float32))
         return TrainState(params, opt_state, comp_state, 0)
 
-    def _step_fn(self, recipe: PrecisionRecipe,
+    def _step_fn(self, plan: PrecisionPlan,
                  telemetry: Optional[bool] = None) -> Callable:
         tel = self.tcfg.telemetry if telemetry is None else telemetry
-        key = (recipe.name, tel)
+        key = (plan, tel)   # plans are frozen/hashable; content-addressed
         if key not in self._steps:
             tcfg = (self.tcfg if tel == self.tcfg.telemetry
                     else dataclasses.replace(self.tcfg, telemetry=tel))
             self._steps[key] = make_train_step(
-                self.model, tcfg, recipe, jit=self._jit, donate=False)
+                self.model, tcfg, plan, jit=self._jit, donate=False)
         return self._steps[key]
 
     # ------------------------------------------------------------------
@@ -133,9 +158,10 @@ class Trainer:
     def resume(self) -> Optional[TrainState]:
         """Restore latest intact checkpoint, or None if there is none.
 
-        The active recipe is *re-derived* from the restored step (schedule
-        fraction + persisted controller state), so resuming across the
-        precision-switch boundary continues with the correct graph.
+        The active plan is *re-derived* from the restored step (schedule
+        fraction + persisted controller state, including per-layer
+        demotions), so resuming across the precision-switch boundary or a
+        demotion boundary continues with the correct graph.
         """
         if self.ckpt is None or self.ckpt.latest_step() is None:
             return None
@@ -153,7 +179,11 @@ class Trainer:
             return
         tree = {"params": state.params, "opt_state": state.opt_state,
                 "comp_state": state.comp_state}
-        extra = {"recipe": self.recipe.name}
+        # The active plan's full table is persisted for forensics /
+        # external tooling; resume() re-derives it from step + controller
+        # state (the authoritative source), so the two can never diverge.
+        extra = {"recipe": self.recipe.name,
+                 "plan": self._active_plan(state.step).to_dict()}
         if self.controller is not None:
             extra["controller"] = self.controller.state_dict()
         self.ckpt.save(state.step, tree, extra=extra)
@@ -169,23 +199,26 @@ class Trainer:
         log = log or (lambda s: None)
         while state.step < end:
             step = state.step
-            recipe = self._active_recipe(step)
+            plan = self._active_plan(step)
             if self.controller is None and self.schedule.is_switch_boundary(
                     step):
                 log(f"[schedule] step {step}: switching to target precision "
-                    f"({self.schedule.target_recipe.name})")
+                    f"({self.schedule.target_plan.name})")
             # telemetry sampling: every N-th step runs the instrumented
             # graph, the rest run the stat-free one (both static graphs)
             tel_on = self.tcfg.telemetry and (
                 self.tcfg.telemetry_every <= 1
                 or step % self.tcfg.telemetry_every == 0)
-            fn = self._step_fn(recipe, telemetry=tel_on)
+            fn = self._step_fn(plan, telemetry=tel_on)
             batch = {k: jnp.asarray(v)
                      for k, v in self.pipeline.batch(step).items()}
+            lr_scale = (self.controller.lr_scale
+                        if self.controller is not None else 1.0)
             t0 = time.time()
             params, opt_state, comp_state, metrics = fn(
                 state.params, state.opt_state, state.comp_state, batch,
-                jnp.asarray(step, jnp.int32))
+                jnp.asarray(step, jnp.int32),
+                jnp.asarray(lr_scale, jnp.float32))
             jax.block_until_ready(metrics["loss"])
             dt = time.time() - t0
             straggler = self.monitor.record(step, dt)
@@ -195,7 +228,7 @@ class Trainer:
             state = TrainState(params, opt_state, comp_state, step + 1)
             row = {k: float(np.asarray(v)) for k, v in metrics.items()}
             row["step"] = step
-            row["recipe"] = recipe.name
+            row["recipe"] = plan.name
             row["dt"] = dt
             row["straggler"] = straggler
             self.history.append(row)
@@ -204,7 +237,7 @@ class Trainer:
             if self.tcfg.log_every and step % self.tcfg.log_every == 0:
                 log(f"step {step:5d} loss {row['loss']:.4f} "
                     f"gnorm {row['grad_norm']:.3f} lr {row['lr']:.2e} "
-                    f"[{recipe.name}] {dt*1000:.0f}ms")
+                    f"[{plan.name}] {dt*1000:.0f}ms")
             # controller first: a loss-spike rollback must restore a
             # checkpoint from BEFORE the spiked update, so the boundary
             # save below happens only after the row was judged healthy
@@ -221,16 +254,18 @@ class Trainer:
 
     # ------------------------------------------------------------------
 
-    def _active_recipe(self, step: int) -> PrecisionRecipe:
+    def _active_plan(self, step: int) -> PrecisionPlan:
         if self.controller is not None:
-            return self.controller.active_recipe(step)
-        return self.schedule.recipe_at(step)
+            return self.controller.active_plan(step)
+        return self.schedule.plan_at(step)
 
     def _apply_controller_events(self, state: TrainState, events,
                                  log: Callable[[str], None]) -> TrainState:
         """Apply controller decisions.  switch/demote only alter which
-        recipe ``_active_recipe`` selects next step; rollback restores the
-        last checkpoint and arms the high-precision replay window."""
+        plan ``_active_plan`` selects next step; rollback restores the
+        last checkpoint and arms the high-precision replay window (plus
+        the LR backoff, which the controller already folded into its
+        ``lr_scale``)."""
         ctrl = self.controller
         for ev in events:
             if self.writer is not None:
@@ -242,11 +277,13 @@ class Trainer:
             elif ev["event"] == "demote":
                 log(f"[controller] step {ev['step']}: sustained overflow "
                     f"({ev['overflow']:.4f}) -> demoting "
-                    f"{ev['module_class']} to FP8")
+                    f"{ev['cell']} to FP8")
             elif ev["event"] == "rollback":
-                # keep the attempt counter across the checkpointed
-                # controller state resume() reloads (guards infinite loops)
+                # keep the attempt counter (guards infinite loops) and the
+                # just-applied LR backoff across the checkpointed
+                # controller state resume() reloads
                 attempts = ctrl.rollbacks
+                backed_off = ctrl.lr_scale
                 restored = self.resume()
                 if restored is None:
                     log(f"[controller] step {ev['step']}: loss spike "
@@ -254,19 +291,24 @@ class Trainer:
                         "but no checkpoint to roll back to")
                     continue
                 ctrl.rollbacks = max(ctrl.rollbacks, attempts)
+                ctrl.lr_scale = min(ctrl.lr_scale, backed_off)
                 ctrl.begin_replay(restored.step)
                 log(f"[controller] step {ev['step']}: loss spike "
                     f"({ev['loss']:.3f} vs ema {ev['loss_ema']:.3f}) -> "
                     f"rollback to step {restored.step}, replaying "
                     f"{ctrl.cfg.replay_steps} steps at "
-                    f"{self.schedule.target_recipe.name}")
+                    f"{self.schedule.target_plan.name}"
+                    + (f", lr_scale {ctrl.lr_scale:.3f}"
+                       if ctrl.cfg.lr_backoff > 0 else ""))
                 state = restored
         return state
 
     # ------------------------------------------------------------------
 
     def evaluate(self, state: TrainState, n_batches: int = 8,
-                 recipe: Optional[PrecisionRecipe] = None) -> Dict[str, float]:
+                 recipe=None) -> Dict[str, float]:
+        """``recipe`` may be a PrecisionRecipe template or a PrecisionPlan
+        (default: the BF16 baseline)."""
         from repro.train.train_step import make_eval_step
         recipe = recipe or RECIPES["bf16"]
         pipeline = self.eval_pipeline or self.pipeline

@@ -80,11 +80,11 @@ def test_bf16eq_collective_metric():
 
 
 def test_all_fp4_sched_recipe_registered():
-    from repro.core.recipe import RECIPES
+    from repro.core.recipe import RECIPES, PrecisionPlan
     r = RECIPES["all_fp4_sched"]
     assert r.target_precision_frac == 0.1
     from repro.core.schedule import TargetPrecisionSchedule
-    s = TargetPrecisionSchedule(r, 100)
+    s = TargetPrecisionSchedule(PrecisionPlan.uniform(r, 4), 100)
     assert s.switch_step == 90
 
 

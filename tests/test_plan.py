@@ -1,0 +1,380 @@
+"""Layer-resolved precision plans: resolution goldens + end-to-end.
+
+Covers the PR-4 acceptance criteria:
+  * a uniform plan reproduces the recipe-threaded graph bit-identically
+    (jaxpr AND lowered StableHLO, scan and unroll modes), with a single
+    stack scan;
+  * scan-run partitioning groups correctly for first/last-K presets
+    (period 1 and period > 1);
+  * a depth-graded plan trains end-to-end under scan_layers=True with
+    per-layer controller demotion of a single layer, and checkpoint resume
+    across the demotion boundary is bit-exact;
+  * string/dict serialization round-trips.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ControllerSettings, TrainConfig, get_config
+from repro.core.quantize import QuantSpec
+from repro.core.recipe import (MM_BF16, MM_FP8, RECIPES, LayerRecipe,
+                               PrecisionPlan, as_plan)
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train.train_step import make_optimizer, make_train_step
+from repro.train.trainer import Trainer
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("tiny")
+
+
+def _batch(cfg, seq=64, batch=4, seed=0):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (batch, seq), 0,
+                              cfg.vocab_size)
+    return {"tokens": toks, "targets": toks}
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+
+def test_quantspec_str_roundtrip_all_registry_specs():
+    """Every spec reachable from the recipe registry survives the compact
+    string syntax."""
+    seen = set()
+    for r in RECIPES.values():
+        for mm in (r.attn_linear, r.ffn_linear, r.head_linear):
+            for role in ("fwd_x", "fwd_w", "dgrad_g", "dgrad_w",
+                         "wgrad_x", "wgrad_g"):
+                seen.add(getattr(mm, role))
+    assert len(seen) > 5
+    for spec in seen:
+        s = spec.to_str()
+        back = QuantSpec.from_str(s)
+        assert back == spec or (back.is_passthrough and spec.is_passthrough
+                                and back.fmt == spec.fmt), (spec, s, back)
+
+
+def test_quantspec_str_examples():
+    assert QuantSpec.from_str("fp4_e2m1@block128") == QuantSpec(
+        "fp4_e2m1", "block", 128)
+    assert QuantSpec.from_str("fp8_e5m2@token") == QuantSpec(
+        "fp8_e5m2", "token")
+    assert QuantSpec.from_str("fp4_e2m1@block128:sr") == QuantSpec(
+        "fp4_e2m1", "block", 128, stochastic=True)
+    assert QuantSpec.from_str("bf16").is_passthrough
+    with pytest.raises(ValueError):
+        QuantSpec.from_str("fp3_x@block128")
+    with pytest.raises(ValueError):
+        QuantSpec.from_str("fp4_e2m1@widget")
+    with pytest.raises(ValueError):
+        QuantSpec.from_str("bf16:maybe")
+
+
+def test_plan_dict_roundtrip_json():
+    plan = PrecisionPlan.first_last_k(RECIPES["paper_fp4"], 6, k=2)
+    plan = plan.promote("ffn", layer=3)
+    d = json.loads(json.dumps(plan.to_dict()))
+    back = PrecisionPlan.from_dict(d)
+    assert back == plan
+    # row table is deduplicated: the promoted l03 row coincides with the
+    # FP8-protected boundary row, so only 2 distinct rows for 6 layers
+    assert len(d["rows"]) == 2 and len(d["layers"]) == 6
+
+
+# ---------------------------------------------------------------------------
+# Resolution / partitioning
+# ---------------------------------------------------------------------------
+
+def test_scan_runs_uniform_single_run():
+    plan = PrecisionPlan.uniform(RECIPES["paper_fp4"], 12)
+    assert plan.scan_runs(1) == [(0, 12)]
+    assert plan.scan_runs(3) == [(0, 4)]
+    assert plan.is_uniform
+
+
+def test_scan_runs_first_last_k():
+    plan = PrecisionPlan.first_last_k(RECIPES["paper_fp4"], 12, k=2)
+    assert plan.scan_runs(1) == [(0, 2), (2, 10), (10, 12)]
+    # period 2: groups of 2 layers; boundary groups differ from the middle
+    assert plan.scan_runs(2) == [(0, 1), (1, 5), (5, 6)]
+    # period 3: k=2 splits the first/last group off (mixed signature)
+    assert plan.scan_runs(3) == [(0, 1), (1, 3), (3, 4)]
+    # protected rows: quantized roles raised to FP8, but the paper's BF16
+    # dgrad path stays UNquantized (protection must never lower precision)
+    prot = plan.layers[0].ffn_linear
+    assert prot.fwd_x == MM_FP8.fwd_x and prot.wgrad_g == MM_FP8.wgrad_g
+    assert prot.dgrad_g.is_passthrough and prot.dgrad_w.is_passthrough
+    assert plan.layers[5].ffn_linear == RECIPES["paper_fp4"].ffn_linear
+    assert plan.layers[11].attn_linear == RECIPES["paper_fp4"].attn_linear
+
+
+def test_first_last_k_never_demotes_bf16():
+    plan = PrecisionPlan.first_last_k(RECIPES["bf16"], 4, k=1)
+    assert all(r.ffn_linear == MM_BF16 for r in plan.layers)
+
+
+def test_ramp_preset():
+    plan = PrecisionPlan.ramp(RECIPES["paper_fp4"], 8, frac=0.5)
+    base = RECIPES["paper_fp4"]
+    # rung 0: protected FP8 (quantized roles only; BF16 dgrad stays)
+    assert plan.layers[0].ffn_linear.fwd_x == MM_FP8.fwd_x
+    assert plan.layers[0].ffn_linear.dgrad_g.is_passthrough
+    # last rung: the recipe itself; tail beyond the ramp too
+    assert plan.layers[3] == LayerRecipe(base.attn_linear, base.ffn_linear)
+    assert plan.layers[7] == plan.layers[3]
+    # middle rung: FP4 forward, FP8 backward
+    mid = plan.layers[2].ffn_linear
+    assert mid.fwd_x == base.ffn_linear.fwd_x
+    assert mid.wgrad_x == MM_FP8.wgrad_x
+    # monotone: runs are contiguous
+    assert plan.scan_runs(1) == [(0, 2), (2, 3), (3, 8)]
+
+
+def test_plan_resize():
+    plan = PrecisionPlan.first_last_k(RECIPES["paper_fp4"], 8, k=2)
+    small = plan.resize(4)
+    assert small.n_layers == 4
+    assert small.layers[0] == plan.layers[0]       # protected ends survive
+    assert small.layers[3] == plan.layers[7]
+    assert plan.resize(8) is plan
+    uni = PrecisionPlan.uniform(RECIPES["fp8"], 6).resize(3)
+    assert uni.is_uniform and uni.n_layers == 3
+
+
+def test_as_plan_coercion_and_depth_check():
+    p = as_plan(RECIPES["paper_fp4"], 5)
+    assert isinstance(p, PrecisionPlan) and p.n_layers == 5
+    assert as_plan(p, 5) is p
+    with pytest.raises(ValueError):
+        as_plan(p, 6)
+
+
+# ---------------------------------------------------------------------------
+# Golden: uniform plan == recipe graph, bit-identically
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scan_layers", [True, False],
+                         ids=["scan", "unroll"])
+def test_uniform_plan_graph_bit_identical(tiny_cfg, scan_layers):
+    """The recipe-threaded entry (pre-plan API) and an explicit uniform
+    plan must trace to the identical jaxpr AND lower to identical
+    StableHLO — the plan refactor cannot perturb the uniform graph."""
+    cfg = tiny_cfg.replace(scan_layers=scan_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    recipe = RECIPES["paper_fp4"]
+    plan = PrecisionPlan.uniform(recipe, cfg.n_layers)
+
+    def mk_loss(spec):
+        def loss(p, b):
+            return model.loss(p, b, spec)[0]
+        return loss
+
+    loss_recipe, loss_plan = mk_loss(recipe), mk_loss(plan)
+
+    import re
+
+    def jaxpr_str(fn):
+        # strip memory addresses from embedded function reprs (trace-run
+        # artifacts, not graph structure)
+        return re.sub(r"0x[0-9a-f]+", "0x", str(jax.make_jaxpr(fn)(
+            params, batch)))
+
+    assert jaxpr_str(loss_recipe) == jaxpr_str(loss_plan)
+    hlo_r = jax.jit(loss_recipe).lower(params, batch).as_text()
+    hlo_p = jax.jit(loss_plan).lower(params, batch).as_text()
+    assert hlo_r == hlo_p
+
+
+def test_graded_plan_splits_scan_uniform_does_not(tiny_cfg):
+    """Under scan mode a uniform plan keeps the single stack scan; a
+    first/last-K plan adds exactly the partition's extra scans."""
+    cfg = tiny_cfg.replace(n_layers=4, scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    def n_scans(plan):
+        jx = jax.make_jaxpr(
+            lambda p, b: model.loss(p, b, plan)[0])(params, batch)
+        return str(jx).count("scan[")
+
+    uni = PrecisionPlan.uniform(RECIPES["paper_fp4"], 4)
+    graded = PrecisionPlan.first_last_k(RECIPES["paper_fp4"], 4, k=1)
+    assert graded.scan_runs(1) == [(0, 1), (1, 3), (3, 4)]
+    assert n_scans(graded) > n_scans(uni)  # partition adds stack scans
+
+
+def test_uniform_plan_train_step_bit_identical(tiny_cfg):
+    """make_train_step(recipe) and make_train_step(uniform plan) evolve
+    params bit-identically."""
+    cfg = tiny_cfg
+    model = build_model(cfg)
+    pipe = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    params = model.init(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(recipe="paper_fp4", total_steps=10, global_batch=8,
+                       seq_len=64)
+    outs = {}
+    for tag, spec in (("recipe", RECIPES["paper_fp4"]),
+                      ("plan", PrecisionPlan.uniform(RECIPES["paper_fp4"],
+                                                     cfg.n_layers))):
+        step = make_train_step(model, tcfg, spec, jit=True, donate=False)
+        opt_state = make_optimizer(model, tcfg).init(params)
+        p, o, c, m = step(params, opt_state, jnp.zeros((), jnp.float32),
+                          batch, jnp.asarray(0, jnp.int32))
+        p, o, c, m = step(p, o, c, batch, jnp.asarray(1, jnp.int32))
+        outs[tag] = p
+    for a, b in zip(jax.tree.leaves(outs["recipe"]),
+                    jax.tree.leaves(outs["plan"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_graded_plan_scan_matches_unroll(tiny_cfg):
+    """Per-layer plan resolution agrees between the two stacking modes:
+    the scan-run partition must place exactly the same row on exactly the
+    same layer as the direct unroll indexing."""
+    cfg_s = tiny_cfg.replace(n_layers=4, scan_layers=True, dtype="float32")
+    cfg_u = cfg_s.replace(scan_layers=False)
+    model_s, model_u = build_model(cfg_s), build_model(cfg_u)
+    plan = PrecisionPlan.first_last_k(RECIPES["paper_fp4"], 4, k=1)
+    params_s = model_s.init(jax.random.PRNGKey(0))
+    # re-index scan params (groups stacked on a leading dim) as unroll
+    # params (list of per-layer trees); period is 1 for the dense config
+    group = params_s["stack"]["groups"]["l00"]
+    layers = [jax.tree.map(lambda a, i=i: a[i], group) for i in range(4)]
+    params_u = dict(params_s, stack={"layers": layers})
+    batch = _batch(cfg_s)
+    # rtol 1e-4: scan and unroll lower to differently-fused XLA graphs, and
+    # FP4 QDQ amplifies the resulting f32 reassociation noise (~2e-5 rel
+    # observed); plan-row misalignment would show up ~100x larger (below)
+    loss_s, _ = model_s.loss(params_s, batch, plan)
+    loss_u, _ = model_u.loss(params_u, batch, plan)
+    np.testing.assert_allclose(np.asarray(loss_s), np.asarray(loss_u),
+                               rtol=1e-4)
+    # swapping the plan row of one middle layer changes the loss by the
+    # SAME amount in both stacking modes — the row lands on that specific
+    # layer (an off-by-one between modes would give disagreeing deltas)
+    plan2 = plan.promote("ffn", layer=2)
+    loss_s2, _ = model_s.loss(params_s, batch, plan2)
+    loss_u2, _ = model_u.loss(params_u, batch, plan2)
+    np.testing.assert_allclose(np.asarray(loss_s2), np.asarray(loss_u2),
+                               rtol=1e-4)
+    d_s = float(loss_s2) - float(loss_s)
+    d_u = float(loss_u2) - float(loss_u)
+    assert abs(d_s) > 1e-3                     # the cell edit is visible
+    np.testing.assert_allclose(d_s, d_u, rtol=0.1)
+    # a different layer's cell produces a distinguishably different delta
+    plan3 = plan.promote("ffn", layer=1)
+    d_s3 = float(model_s.loss(params_s, batch, plan3)[0]) - float(loss_s)
+    d_u3 = float(model_u.loss(params_u, batch, plan3)[0]) - float(loss_u)
+    np.testing.assert_allclose(d_s3, d_u3, rtol=0.1)
+    assert abs(d_s3 - d_s) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: depth-graded training + per-layer demotion + bit-exact resume
+# ---------------------------------------------------------------------------
+
+def _mk_trainer(cfg, ckdir, total=30):
+    tcfg = TrainConfig(recipe="paper_fp4", plan_preset="first_last_k",
+                       plan_k=1, total_steps=total, global_batch=8,
+                       seq_len=64, learning_rate=3e-3, log_every=0,
+                       checkpoint_every=5, checkpoint_dir=str(ckdir),
+                       telemetry=True,
+                       controller=ControllerSettings(
+                           demote_overflow_threshold=0.2,
+                           demote_patience=2))
+    model = build_model(cfg)
+    return Trainer(model, tcfg, SyntheticLM(cfg.vocab_size, 64, 8, seed=0))
+
+
+def _force_demotion(tr, step):
+    """Drive the controller's per-layer rule with a synthetic overflow
+    storm on layer 1's ffn (patience 2 -> latches on the second row)."""
+    storm = {"loss": 1.0, "tel/l01/ffn/mm0/wgrad_x/clip": 0.9,
+             "tel/bwd/l01/ffn/wgrad_g/clip": 0.9}
+    events = tr.controller.observe(step, storm)
+    events += tr.controller.observe(step, storm)
+    assert [e["event"] for e in events] == ["demote"]
+    assert events[0]["cell"] == "l01/ffn"
+
+
+def test_depth_graded_demotion_resume_bit_exact(tiny_cfg, tmp_path):
+    """Acceptance: first/last-1 FP8 plan on a 4-layer scan-mode model,
+    controller demotes one middle layer's ffn cell mid-run, a checkpoint
+    straddles the demotion boundary, and a fresh-process resume continues
+    bit-exactly vs. the uninterrupted run."""
+    cfg = tiny_cfg.replace(n_layers=4, scan_layers=True)
+
+    # uninterrupted reference: 30 steps, demotion latched after step 9
+    ref = _mk_trainer(cfg, tmp_path / "ref")
+    state = ref.train(num_steps=10)
+    _force_demotion(ref, 9)
+    ref_final = ref.train(state)
+    assert ref.history[9]["recipe"] == "paper_fp4+fl1"
+    assert ref.history[10]["recipe"] == "paper_fp4+fl1+l01.ffn=fp8"
+    demoted_plan = ref._active_plan(10)
+    dem = demoted_plan.layers[1].ffn_linear
+    assert dem.fwd_x == MM_FP8.fwd_x             # quantized roles -> FP8
+    assert dem.dgrad_g.is_passthrough            # BF16 dgrad stays BF16
+    assert demoted_plan.layers[2].ffn_linear == \
+        RECIPES["paper_fp4"].ffn_linear          # only l01 demoted
+    # the demoted row equals the FP8-protected boundary row (paper_fp4's
+    # attn cell is already FP8), so it merges into the leading run
+    assert demoted_plan.scan_runs(1) == [(0, 2), (2, 3), (3, 4)]
+
+    # interrupted run: same prefix, stop at 20 (checkpoints at 15, 20
+    # carry the demoted controller state), resume in a fresh Trainer
+    trb = _mk_trainer(cfg, tmp_path / "b")
+    state = trb.train(num_steps=10)
+    _force_demotion(trb, 9)
+    trb.train(state, num_steps=10)               # stops at step 20
+
+    trc = _mk_trainer(cfg, tmp_path / "b")       # fresh process stand-in
+    resumed = trc.resume()
+    assert resumed is not None and resumed.step == 20
+    assert trc.controller.demoted == ["l01/ffn"]
+    assert trc._active_plan(20).name == "paper_fp4+fl1+l01.ffn=fp8"
+    final = trc.train(resumed)
+
+    for a, b in zip(jax.tree.leaves(ref_final.params),
+                    jax.tree.leaves(final.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # the checkpoint extra records the active plan table: the step-20
+    # checkpoint (stage 1) carries the demoted plan, while the final one
+    # (past the §3.3 switch at step 28) records the bf16 stage-2 plan
+    from repro.checkpoint.manager import load_manifest
+    import os
+    steps = sorted(os.listdir(tmp_path / "b"))
+    stage1 = PrecisionPlan.from_dict(
+        load_manifest(str(tmp_path / "b" / steps[0]))["extra"]["plan"])
+    assert stage1.layers[1].ffn_linear.fwd_x == MM_FP8.fwd_x
+    assert stage1.name == "paper_fp4+fl1+l01.ffn=fp8"
+    stage2 = PrecisionPlan.from_dict(
+        load_manifest(str(tmp_path / "b" / steps[-1]))["extra"]["plan"])
+    assert stage2.name == "bf16" and stage2.is_passthrough
+
+
+def test_trainer_builds_depth_graded_plan_from_config(tiny_cfg):
+    cfg = tiny_cfg.replace(n_layers=4)
+    model = build_model(cfg)
+    tcfg = TrainConfig(recipe="paper_fp4", plan_preset="first_last_k",
+                       plan_k=1, total_steps=10)
+    tr = Trainer(model, tcfg, SyntheticLM(cfg.vocab_size, 64, 8, seed=0))
+    assert tr.plan.name == "paper_fp4+fl1"
+    assert tr.plan.scan_runs(1) == [(0, 1), (1, 3), (3, 4)]
+    tcfg2 = TrainConfig(recipe="paper_fp4", plan_preset="ramp",
+                        plan_frac=0.5, total_steps=10)
+    tr2 = Trainer(model, tcfg2, SyntheticLM(cfg.vocab_size, 64, 8, seed=0))
+    assert tr2.plan.name == "paper_fp4+ramp0.5"
+    with pytest.raises(ValueError):
+        Trainer(model, TrainConfig(plan_preset="nope"), None)

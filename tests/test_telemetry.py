@@ -1,5 +1,6 @@
-"""Telemetry subsystem: in-graph stats, controller decision rules,
-schedule target-recipe knob, resume across the switch boundary, JSONL."""
+"""Telemetry subsystem: in-graph stats (incl. layer-indexed backward
+probes), controller decision rules (per-(layer, class) demotion, LR
+backoff), plan-based schedule, resume across the switch boundary, JSONL."""
 import json
 import os
 import sys
@@ -10,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ControllerSettings, TrainConfig, get_config
-from repro.core.recipe import MM_FP8, RECIPES, promote_module_class
+from repro.core.recipe import MM_FP8, RECIPES, PrecisionPlan
 from repro.core.schedule import TargetPrecisionSchedule
 from repro.data import SyntheticLM
 from repro.models import build_model
@@ -29,10 +30,17 @@ def tiny_setup():
     return cfg, model, pipe
 
 
+N_LAYERS = 2  # tiny config depth; controller tests use matching plans
+
+
+def _plan(recipe="paper_fp4", n=N_LAYERS):
+    return PrecisionPlan.uniform(RECIPES[recipe], n)
+
+
 def _schedule(total=100, recipe="paper_fp4", target=None):
     return TargetPrecisionSchedule(
-        RECIPES[recipe], total,
-        target=RECIPES[target] if target else None)
+        _plan(recipe), total,
+        target=_plan(target) if target else None)
 
 
 # ---------------------------------------------------------------------------
@@ -56,11 +64,19 @@ def test_telemetry_metrics_present(tiny_setup, tmp_path):
             assert 0.0 <= row[key] <= 1.0
         assert row[f"tel/{layer}/ffn/mm0/fwd_x/rel_err"] > 0  # FP4 is noisy
         assert f"tel/gnorm/{layer}" in row and row[f"tel/gnorm/{layer}"] > 0
-    # backward-side (probe-transported) per-class stats
+    # backward-side (probe-transported) stats: per-class aggregates plus
+    # layer-resolved rows from the indexed probes
     assert row["tel/bwd/attn/taps"] > 0
     assert row["tel/bwd/ffn/wgrad_g/rel_err"] > 0        # FP8 wgrad
     assert row["tel/bwd/ffn/dgrad_g/rel_err"] == 0.0      # BF16 dgrad
     assert 0.0 <= row["tel/bwd/attn/dgrad_g/underflow"] <= 1.0
+    for layer in ("l00", "l01"):
+        assert row[f"tel/bwd/{layer}/ffn/taps"] > 0
+        assert row[f"tel/bwd/{layer}/ffn/wgrad_g/rel_err"] > 0
+        assert row[f"tel/bwd/{layer}/attn/taps"] > 0
+    # head taps only land in the class aggregate (no layer index)
+    assert row["tel/bwd/attn/taps"] == (row["tel/bwd/l00/attn/taps"]
+                                        + row["tel/bwd/l01/attn/taps"])
     # JSONL log mirrors history
     logged = read_jsonl(jsonl)
     assert len(logged) == 3
@@ -109,24 +125,55 @@ def test_telemetry_every_samples_alternate_steps(tiny_setup):
 
 
 def test_grad_tap_identity_gradients():
-    """grad_tap must not perturb cotangents; probe grads carry the stats."""
+    """grad_tap must not perturb cotangents; probe grads carry the stats,
+    routed into the current layer's probe row."""
     recipe = RECIPES["paper_fp4"].ffn_linear
     x = jax.random.normal(jax.random.PRNGKey(0), (32, 64), jnp.float32)
-    probes = tel_collect.make_probes()
+    probes = tel_collect.make_probes(3)
     col = tel_collect.TelemetryCollector()
 
     def f(x, probes):
         with tel_collect.collecting(col, probes):
-            with tel_collect.module_scope("ffn"):
-                y = tel_collect.grad_tap(x * 2.0, recipe)
+            with tel_collect.layer_frame(1):
+                with tel_collect.module_scope("ffn"):
+                    y = tel_collect.grad_tap(x * 2.0, recipe)
+            with tel_collect.module_scope("head"):
+                y = y + 0.0 * tel_collect.grad_tap(x * 1.0, recipe)
         return jnp.sum(y ** 2)
 
     g, pg = jax.grad(f, argnums=(0, 1))(x, probes)
     np.testing.assert_allclose(np.asarray(g), np.asarray(8.0 * x), rtol=1e-6)
-    assert float(pg["ffn"][-1]) == 1.0          # one tap counted
-    assert float(pg["attn"][-1]) == 0.0
+    assert float(pg["ffn"][1, -1]) == 1.0        # tap in layer 1's row
+    assert float(pg["ffn"][0, -1]) == 0.0        # not in layer 0's
+    assert float(pg["head"][-1, -1]) == 1.0      # root tap -> trailing row
+    assert float(pg["attn"].sum()) == 0.0
     m = tel_collect.probe_metrics(pg)
     assert m["tel/bwd/ffn/wgrad_g/rel_err"] > 0  # FP8 wgrad_g quant error
+    assert m["tel/bwd/l01/ffn/wgrad_g/rel_err"] > 0   # layer-resolved row
+    assert float(m["tel/bwd/l00/ffn/taps"]) == 0.0
+
+
+def test_grad_tap_traced_layer_index():
+    """A traced layer index (the scan-body case) scatter-adds each tap
+    into its own probe row."""
+    recipe = RECIPES["paper_fp4"].ffn_linear
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 32), jnp.float32)
+    col = tel_collect.TelemetryCollector()
+
+    def f(x, probes):
+        with tel_collect.collecting(col, probes):
+            def body(h, idx):
+                with tel_collect.layer_frame(idx):
+                    with tel_collect.module_scope("ffn"):
+                        h = tel_collect.grad_tap(h * 2.0, recipe)
+                return h, ()
+            y, _ = jax.lax.scan(body, x, jnp.arange(2))
+        return jnp.sum(y ** 2)
+
+    pg = jax.grad(f, argnums=1)(x, tel_collect.make_probes(2))
+    assert float(pg["ffn"][0, -1]) == 1.0
+    assert float(pg["ffn"][1, -1]) == 1.0
+    assert float(pg["ffn"][2, -1]) == 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -136,26 +183,49 @@ def test_grad_tap_identity_gradients():
 def test_schedule_target_recipe_configurable(tiny_setup):
     cfg, model, pipe = tiny_setup
     sched = _schedule(total=100, target="fp8")
-    assert sched.target_recipe.name == "fp8"
-    assert sched.recipe_at(99).name == "fp8"
-    assert sched.recipe_at(0).name == "paper_fp4"
+    assert sched.target_plan.name == "fp8"
+    assert sched.plan_at(99).name == "fp8"
+    assert sched.plan_at(0).name == "paper_fp4"
     # default stays the BF16 baseline
-    assert _schedule(total=100).target_recipe.name == "bf16"
+    assert _schedule(total=100).target_plan.name == "bf16"
     # threaded from TrainConfig
     tcfg = TrainConfig(recipe="paper_fp4", total_steps=10,
                        target_recipe="fp8")
     tr = Trainer(model, tcfg, pipe)
-    assert tr.schedule.target_recipe.name == "fp8"
+    assert tr.schedule.target_plan.name == "fp8"
 
 
-def test_promote_module_class():
-    base = RECIPES["paper_fp4"]
-    r = promote_module_class(base, "ffn")
-    assert r.ffn_linear == MM_FP8
-    assert r.attn_linear == base.attn_linear
-    assert r.name != base.name
-    # no-op when the class already runs FP8
-    assert promote_module_class(r, "ffn") is r
+def test_schedule_stage2_is_plan_transform():
+    """A depth-graded stage-1 plan collapses to the uniform target at the
+    §3.3 boundary — the switch edits every row, not just a name."""
+    plan = PrecisionPlan.first_last_k(RECIPES["paper_fp4"], 8, k=2)
+    sched = TargetPrecisionSchedule(plan, 100)
+    assert sched.plan_at(0) is plan
+    tgt = sched.plan_at(99)
+    assert tgt.name == "bf16" and tgt.is_uniform and tgt.is_passthrough
+
+
+def test_plan_promote_cell():
+    base = PrecisionPlan.uniform(RECIPES["paper_fp4"], 4)
+    p = base.promote("ffn", layer=2)
+    # role-wise protection: quantized roles -> FP8, the paper's BF16 dgrad
+    # path stays unquantized (promotion never lowers a role's precision)
+    assert p.layers[2].ffn_linear.fwd_x == MM_FP8.fwd_x
+    assert p.layers[2].ffn_linear.wgrad_g == MM_FP8.wgrad_g
+    assert p.layers[2].ffn_linear.dgrad_g.is_passthrough
+    assert p.layers[1].ffn_linear == base.layers[1].ffn_linear
+    assert p.layers[2].attn_linear == base.layers[2].attn_linear
+    assert p.name != base.name
+    # no-op when the cell is already protected
+    assert p.promote("ffn", layer=2) is p
+    # whole-class promotion still expressible as a plan transform
+    allp = base.promote("ffn")
+    assert all(r.ffn_linear.fwd_x == MM_FP8.fwd_x for r in allp.layers)
+    # the (unquantized) head cell cannot be "protected" any further...
+    assert base.promote("head") is base
+    # ...but an explicit target still applies
+    h = base.promote("head", to=MM_FP8)
+    assert h.head_linear == MM_FP8 and h.promote("head", to=MM_FP8) is h
 
 
 # ---------------------------------------------------------------------------
@@ -173,8 +243,8 @@ def test_controller_dynamic_switch_on_error_ema():
     assert [e["event"] for e in events] == ["switch"]
     s = events[0]["step"]
     assert s < 92
-    assert ctrl.active_recipe(s + 1).name == "bf16"
-    assert ctrl.active_recipe(s).name == "paper_fp4"  # switch is next-step
+    assert ctrl.active_plan(s + 1).name == "bf16"
+    assert ctrl.active_plan(s).name == "paper_fp4"  # switch is next-step
 
 
 def test_controller_fixed_fraction_still_applies():
@@ -185,28 +255,40 @@ def test_controller_fixed_fraction_still_applies():
         ctrl.observe(step, {"loss": 1.0,
                             "tel/l00/ffn/mm0/fwd_x/rel_err": 0.9})
     assert ctrl.switched_at is None
-    assert ctrl.active_recipe(91).name == "paper_fp4"
-    assert ctrl.active_recipe(92).name == "bf16"       # fraction boundary
+    assert ctrl.active_plan(91).name == "paper_fp4"
+    assert ctrl.active_plan(92).name == "bf16"       # fraction boundary
 
 
-def test_controller_demotes_on_overflow_storm():
+def test_controller_demotes_single_layer_cell():
+    """One noisy layer demotes ONLY its own (layer, class) cell — the
+    other layers keep running FP4 (the per-layer upgrade of the old
+    class-global rule)."""
     ctrl = PrecisionController(
         _schedule(total=100),
         ControllerSettings(demote_overflow_threshold=0.2,
                            demote_patience=3))
     storm = {"loss": 1.0, "tel/l00/ffn/mm0/wgrad_x/clip": 0.5,
-             "tel/bwd/ffn/wgrad_g/clip": 0.6,
+             "tel/bwd/l00/ffn/wgrad_g/clip": 0.6,
+             "tel/l01/ffn/mm0/wgrad_x/clip": 0.0,
              "tel/l00/attn/mm0/wgrad_x/clip": 0.0}
     events = []
     for step in range(5):
         events += ctrl.observe(step, storm)
     demotes = [e for e in events if e["event"] == "demote"]
-    assert len(demotes) == 1 and demotes[0]["module_class"] == "ffn"
-    active = ctrl.active_recipe(10)
-    assert active.ffn_linear == MM_FP8                     # demoted
-    assert active.attn_linear == RECIPES["paper_fp4"].attn_linear
-    # a calm class never demotes
-    assert "attn" not in ctrl.demoted
+    assert len(demotes) == 1 and demotes[0]["cell"] == "l00/ffn"
+    assert demotes[0]["layer"] == 0
+    assert demotes[0]["module_class"] == "ffn"
+    base = RECIPES["paper_fp4"]
+    active = ctrl.active_plan(10)
+    dem = active.layers[0].ffn_linear                      # demoted cell
+    assert dem.fwd_x == MM_FP8.fwd_x and dem.wgrad_g == MM_FP8.wgrad_g
+    assert dem.dgrad_g.is_passthrough                      # BF16 dgrad kept
+    assert active.layers[1].ffn_linear == base.ffn_linear  # untouched
+    assert active.layers[0].attn_linear == base.attn_linear
+    # calm cells never demote
+    assert ctrl.demoted == ["l00/ffn"]
+    # the scan partition now isolates the demoted layer
+    assert active.scan_runs(1) == [(0, 1), (1, 2)]
 
 
 def test_controller_classifies_rootframe_head_keys():
@@ -220,8 +302,11 @@ def test_controller_classifies_rootframe_head_keys():
     events = []
     for step in range(3):
         events += ctrl.observe(step, storm)
-    assert [e["module_class"] for e in events
-            if e["event"] == "demote"] == ["head"]
+    assert [e["cell"] for e in events if e["event"] == "demote"] == ["head"]
+    # paper_fp4's head is already unquantized BF16 — the demotion latches
+    # in controller state but the plan transform is a no-op (there is no
+    # higher precision to protect it at)
+    assert ctrl.active_plan(10).head_linear.is_passthrough
 
 
 def test_controller_demotion_needs_sustained_signal():
@@ -248,8 +333,8 @@ def test_controller_spike_triggers_rollback_and_replay():
     events = ctrl.observe(6, {"loss": 5.0})                # spike
     assert [e["event"] for e in events] == ["rollback"]
     ctrl.begin_replay(4)                                   # trainer restored
-    assert ctrl.active_recipe(5).name == "bf16"            # replay window
-    assert ctrl.active_recipe(8).name == "paper_fp4"       # window over
+    assert ctrl.active_plan(5).name == "bf16"              # replay window
+    assert ctrl.active_plan(8).name == "paper_fp4"         # window over
     # replay steps don't re-trigger; max_rollbacks caps further ones
     assert ctrl.observe(5, {"loss": 5.0}) == []
     assert ctrl.observe(9, {"loss": 50.0}) == []           # capped
@@ -259,6 +344,63 @@ def test_controller_spike_triggers_rollback_and_replay():
     ctrl2.load_state(state)
     assert ctrl2.replay_until == ctrl.replay_until
     assert ctrl2.rollbacks == 1
+
+
+def test_controller_lr_backoff_and_recovery():
+    """Satellite: each rollback shrinks the LR scale multiplicatively;
+    clean steps recover it geometrically back to 1.0; the scale persists
+    through controller checkpoint state."""
+    ctrl = PrecisionController(
+        _schedule(total=1000),
+        ControllerSettings(spike_factor=2.0, spike_warmup=3,
+                           replay_steps=0, max_rollbacks=4,
+                           lr_backoff=0.5, lr_recovery_steps=10))
+    for step in range(6):
+        ctrl.observe(step, {"loss": 1.0})
+    assert ctrl.lr_scale == 1.0                  # no rollback yet
+    events = ctrl.observe(6, {"loss": 5.0})      # spike -> rollback
+    assert [e["event"] for e in events] == ["rollback"]
+    assert events[0]["lr_scale"] == pytest.approx(0.5)
+    assert ctrl.lr_scale == pytest.approx(0.5)
+    # geometric recovery: back to 1.0 after ~lr_recovery_steps clean steps
+    for step in range(7, 17):
+        ctrl.observe(step, {"loss": 1.0})
+    assert ctrl.lr_scale == pytest.approx(1.0)
+    for step in range(17, 20):
+        ctrl.observe(step, {"loss": 1.0})
+    assert ctrl.lr_scale == 1.0                  # capped at 1.0
+    # a second rollback compounds on whatever scale is current
+    ctrl.observe(20, {"loss": 50.0})
+    assert ctrl.lr_scale == pytest.approx(0.5)
+    # round-trips through checkpoint state
+    state = json.loads(json.dumps(ctrl.state_dict()))
+    ctrl2 = PrecisionController(_schedule(total=1000), ControllerSettings())
+    ctrl2.load_state(state)
+    assert ctrl2.lr_scale == pytest.approx(0.5)
+
+
+def test_trainer_lr_backoff_scales_step_lr(tiny_setup, tmp_path):
+    """Trainer-level: after a rollback the executed step's lr metric is
+    scaled down, and it recovers over subsequent steps."""
+    cfg, model, pipe = tiny_setup
+    tcfg = TrainConfig(recipe="paper_fp4", total_steps=100, global_batch=8,
+                       seq_len=64, learning_rate=3e-3, log_every=0,
+                       checkpoint_every=2, checkpoint_dir=str(tmp_path),
+                       controller=ControllerSettings(
+                           spike_factor=2.0, replay_steps=1,
+                           lr_backoff=0.5, lr_recovery_steps=4))
+    tr = Trainer(model, tcfg, pipe)
+    state = tr.train(num_steps=4)
+    lr_before = tr.history[-1]["lr"]
+    ev = {"event": "rollback", "step": 3, "loss": 9.0, "loss_ema": 1.0}
+    tr.controller.rollbacks = 1
+    tr.controller._observe_lr([ev])              # as if observe() fired it
+    state = tr._apply_controller_events(state, [ev], lambda s: None)
+    assert tr.controller.lr_scale == pytest.approx(0.5)
+    tr.train(state, num_steps=1)
+    # the very next executed step ran at half the scheduled LR
+    assert tr.history[-1]["lr"] == pytest.approx(
+        0.5 * lr_before, rel=0.15)  # rel slack: cosine schedule drift
 
 
 def test_trainer_rollback_restores_checkpoint(tiny_setup, tmp_path):
@@ -278,8 +420,8 @@ def test_trainer_rollback_restores_checkpoint(tiny_setup, tmp_path):
     state2 = tr._apply_controller_events(state, [ev], lambda s: None)
     assert state2.step == 8                # latest intact checkpoint
     assert tr.controller.replay_until == 8 + 3
-    assert tr._active_recipe(9).name == "bf16"    # replaying at target
-    assert tr._active_recipe(11).name == "paper_fp4"
+    assert tr._active_plan(9).name == "bf16"    # replaying at target
+    assert tr._active_plan(11).name == "paper_fp4"
 
 
 # ---------------------------------------------------------------------------
@@ -306,7 +448,7 @@ def test_resume_across_switch_boundary(tiny_setup, tmp_path):
     trc = mk(tmp_path / "b")                       # fresh process stand-in
     resumed = trc.resume()
     assert resumed is not None and resumed.step == 30
-    assert trc._active_recipe(resumed.step).name == "paper_fp4"
+    assert trc._active_plan(resumed.step).name == "paper_fp4"
     final = trc.train(resumed)
     recipes = [r["recipe"] for r in trc.history]
     assert recipes[0] == "paper_fp4" and recipes[-1] == "bf16"
