@@ -1,5 +1,6 @@
 """Compare a fresh ``kernel_bench --json`` run against the committed
-baseline (``BENCH_kernels.json``) and fail on step-time regressions.
+baseline (``BENCH_kernels.json``) and fail on step-time regressions;
+with ``--frontier`` instead guard a ``plan_frontier`` BENCH JSON.
 
 CPU/interpret-mode wall-times are trend-only: absolute numbers vary with
 the host, so every timing is normalized twice before comparison — first by
@@ -16,11 +17,13 @@ Exit code 1 if any timing ratio regresses by more than ``--threshold``
 
 Usage:
     python -m benchmarks.check_bench BENCH_kernels.json fresh.json
+    python -m benchmarks.check_bench --frontier BENCH_plan_frontier.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 
 NORM_KEY = "kernel/matmul_plain_512"
@@ -36,19 +39,73 @@ REQUIRED = (
 )
 
 
+# Entries a plan_frontier BENCH JSON must contain (mirrors the kernel
+# REQUIRED guard): losing one would silently drop the searcher's frontier
+# from CI.  point00 is the uniform start plan; the acceptance row encodes
+# the cheaper-than-fine_grained / better-than-uniform-FP4 contract.
+REQUIRED_FRONTIER = ("plan_frontier/points", "plan_frontier/point00",
+                     "plan_frontier/acceptance")
+_POINT_RE = re.compile(r"^plan_frontier/point\d+$")
+
+
 def _load(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
     return {r["name"]: r for r in payload["benchmarks"]}
 
 
+def _derived_float(rec: dict, key: str) -> float:
+    m = re.search(rf"{key}=([-+0-9.eE]+)", rec.get("derived", ""))
+    return float(m.group(1)) if m else float("nan")
+
+
+def check_frontier(path: str) -> int:
+    """Required-entry + monotonicity guard for a plan_frontier JSON."""
+    data = _load(path)
+    failures = [f"required entry missing: {n}" for n in REQUIRED_FRONTIER
+                if n not in data]
+    # numeric point order (lexicographic would shuffle point100 before
+    # point99 on long frontiers)
+    names = sorted((n for n in data if _POINT_RE.match(n)),
+                   key=lambda n: int(n.rsplit("point", 1)[1]))
+    pts = [data[n] for n in names]
+    costs = [_derived_float(r, "cost") for r in pts]
+    errs = [_derived_float(r, "error") for r in pts]
+    for i in range(1, len(pts)):
+        if not (costs[i] > costs[i - 1] and errs[i] < errs[i - 1]):
+            failures.append(
+                f"frontier not monotone at point{i:02d}: "
+                f"cost {costs[i - 1]:.6f} -> {costs[i]:.6f}, "
+                f"error {errs[i - 1]:.6f} -> {errs[i]:.6f}")
+    if "plan_frontier/acceptance" in data and \
+            data["plan_frontier/acceptance"]["us_per_call"] < 1.0:
+        failures.append("acceptance contract not met: "
+                        + data["plan_frontier/acceptance"]["derived"])
+    print(f"[check_bench] frontier: {len(pts)} points in {path}")
+    if failures:
+        print("[check_bench] FAILURES:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print("[check_bench] frontier guard passed")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline")
-    ap.add_argument("current")
+    ap.add_argument("baseline", nargs="?")
+    ap.add_argument("current", nargs="?")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="allowed relative regression of normalized time")
+    ap.add_argument("--frontier", default=None, metavar="JSON",
+                    help="guard a plan_frontier BENCH JSON (required "
+                    "entries + frontier monotonicity) and exit")
     args = ap.parse_args(argv)
+
+    if args.frontier:
+        return check_frontier(args.frontier)
+    if not args.baseline or not args.current:
+        ap.error("baseline and current are required unless --frontier")
 
     base, cur = _load(args.baseline), _load(args.current)
     if NORM_KEY not in base or NORM_KEY not in cur:

@@ -1,0 +1,107 @@
+"""Cost-vs-quant-error frontier from the telemetry-driven plan searcher.
+
+Trains the tiny config starting from the uniform FP4 plan (``all_fp4``,
+the Table-2 failure mode) with in-graph telemetry and the controller's
+``PlanSearcher`` enabled.  Every ``--every`` steps the searcher finalizes
+a measured frontier point for the running plan — theoretical cost from
+``core.cost_model.plan_cost`` x the window's mean forward quant rel-err —
+and greedily promotes the worst-error (layer, class) cell to FP8.  The
+resulting Pareto frontier is emitted as BENCH rows and (with ``--json``)
+a machine-readable BENCH JSON that ``benchmarks/check_bench.py
+--frontier`` guards in CI.
+
+The acceptance contract of the searcher is checked here too: the frontier
+must be monotone (cost up, error down) and contain at least one plan
+strictly cheaper than ``fine_grained_fp4``'s stage-1 cost with lower
+measured quant error than uniform FP4.
+
+Usage:
+    python -m benchmarks.plan_frontier [--steps 96] [--every 8]
+        [--smoke] [--json artifacts/BENCH_plan_frontier.json]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import emit, write_json
+from repro.configs.base import ControllerSettings, TrainConfig, get_config
+from repro.core.cost_model import plan_cost
+from repro.core.recipe import RECIPES, PrecisionPlan
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train.trainer import Trainer
+
+SEQ, BATCH = 64, 8
+
+
+def run(steps: int = 96, every: int = 8, start: str = "all_fp4",
+        json_out: str = "") -> dict:
+    cfg = get_config("tiny")
+    model = build_model(cfg)
+    pipe = SyntheticLM(cfg.vocab_size, SEQ, BATCH, seed=0)
+    tcfg = TrainConfig(
+        recipe=start, total_steps=steps, global_batch=BATCH, seq_len=SEQ,
+        learning_rate=3e-3, log_every=0, telemetry=True,
+        controller=ControllerSettings(plan_search=True,
+                                      plan_search_every=every))
+    tr = Trainer(model, tcfg, pipe)
+    tr.train(log=print)
+
+    searcher = tr.controller.searcher
+    frontier = searcher.frontier
+    for i, p in enumerate(frontier):
+        # cost in basis points of the FP16 baseline (the JSON value field
+        # is rounded to 0.1, too coarse for cost ratios); cost/error ride
+        # in `derived` at full float precision (repr round-trips exactly —
+        # the check_bench monotonicity guard compares the same strict
+        # ordering the searcher's Pareto pruning enforced)
+        emit(f"plan_frontier/point{i:02d}", p["cost"] * 1e4,
+             f"cost={p['cost']!r};error={p['error']!r};"
+             f"step={p['step']};plan={p['plan']}", unit="cost_bp")
+    emit("plan_frontier/points", float(len(frontier)),
+         f"edits={len(searcher.edits)};done={searcher.done}", unit="count")
+
+    # Acceptance: a plan strictly cheaper than fine_grained_fp4's stage-1
+    # cost with lower measured quant error than the uniform-FP4 start
+    # (frontier[0] — the cheapest point — IS the start plan).
+    fg_cost = plan_cost(
+        PrecisionPlan.uniform(RECIPES["fine_grained_fp4"], cfg.n_layers),
+        searcher.dims)
+    uniform_err = frontier[0]["error"] if frontier else float("nan")
+    hit = [p for p in frontier[1:]
+           if p["cost"] < fg_cost and p["error"] < uniform_err]
+    monotone = all(frontier[i]["cost"] > frontier[i - 1]["cost"]
+                   and frontier[i]["error"] < frontier[i - 1]["error"]
+                   for i in range(1, len(frontier)))
+    ok = bool(hit) and monotone and len(frontier) >= 2
+    emit("plan_frontier/acceptance", 1.0 if ok else 0.0,
+         f"monotone={monotone};beats_fine_grained={len(hit)};"
+         f"fine_grained_cost={fg_cost:.6f};uniform_fp4_error="
+         f"{uniform_err:.6f}", unit="bool")
+    if json_out:
+        write_json(json_out)
+    return {"frontier": frontier, "ok": ok}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=96)
+    ap.add_argument("--every", type=int, default=8)
+    ap.add_argument("--start", default="all_fp4")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short CI run (fewer steps, tighter windows)")
+    ap.add_argument("--json", default="", help="write BENCH JSON here")
+    args = ap.parse_args()
+    steps, every = (42, 6) if args.smoke else (args.steps, args.every)
+    out = run(steps=steps, every=every, start=args.start,
+              json_out=args.json)
+    if not out["ok"]:
+        print("[plan_frontier] FAIL: frontier acceptance not met",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,8 +5,9 @@ markdown report: loss/quant-error trajectories (ASCII sparklines), a
 layer x role quant-health heatmap (forward-side slots from the per-layer
 scan-output stats AND backward-side dgrad_g/wgrad_g from the layer-indexed
 probes — full per-layer resolution on both sides since the indexed-probe
-transport), backward-side per-class aggregates, and the controller's
-decision log.  With matplotlib available (optional — not a dependency),
+transport), backward-side per-class aggregates, the plan searcher's
+cost-vs-quant-error frontier (``frontier_point`` events), and the
+controller's decision log.  With matplotlib available (optional — not a dependency),
 ``--plots DIR`` also writes PNG curves and a layer x role heatmap image.
 
 Usage:
@@ -160,9 +161,31 @@ def build_report(rows: List[Dict]) -> str:
             "layer-indexed probes)", ""] + per_layer_table(layer_row) + [""]
     out += [f"## Backward-side stats (step {bwd_row['step']}, per module "
             "class)", ""] + bwd_table(bwd_row) + [""]
-    if events:
+    points = [e for e in events if e.get("event") == "frontier_point"]
+    if points:
+        # every measured point, in search order; dominated points (the
+        # searcher prunes these from its Pareto frontier) are marked so
+        # the table never contradicts the check_bench --frontier guard
+        def dominated(p):
+            return any(q is not p and float(q["cost"]) <= float(p["cost"])
+                       and float(q["error"]) <= float(p["error"])
+                       and (float(q["cost"]) < float(p["cost"])
+                            or float(q["error"]) < float(p["error"]))
+                       for q in points)
+        out += ["## Plan search (theoretical cost vs measured fwd quant "
+                "rel_err; ✓ = on the Pareto frontier)", "",
+                "| step | cost | quant rel_err | frontier | plan |",
+                "|---|---|---|---|---|"]
+        for p in sorted(points, key=lambda e: e["step"]):
+            mark = "" if dominated(p) else "✓"
+            out.append(f"| {p['step']} | {float(p['cost']):.4f} | "
+                       f"{float(p['error']):.5f} | {mark} | "
+                       f"{p.get('plan', '?')} |")
+        out.append("")
+    decisions = [e for e in events if e.get("event") != "frontier_point"]
+    if decisions:
         out += ["## Controller decisions", ""]
-        for ev in events:
+        for ev in decisions:
             kv = ", ".join(f"{k}={v}" for k, v in ev.items()
                            if k != "event")
             out.append(f"- **{ev['event']}** ({kv})")

@@ -153,6 +153,23 @@ class ControllerSettings:
     # controller's checkpoint state.  0 = disabled.
     lr_backoff: float = 0.0
     lr_recovery_steps: int = 50
+    # Telemetry-driven plan search (telemetry.controller.PlanSearcher):
+    # every ``plan_search_every`` steps the searcher finalizes a measured
+    # (cost, quant-error) frontier point for the running plan and applies
+    # one greedy edit — promote the worst-error (layer, class) cell to FP8,
+    # or, when the cost budget is exhausted, demote the healthiest cell's
+    # wgrad roles to FP4 (``PrecisionPlan.demote``, the asymmetric
+    # role-subset transform; dgrad is never demoted).  Search runs in
+    # stage 1 only and its state (per-cell error EMAs, applied edits,
+    # frontier) persists in the controller checkpoint state, so resume is
+    # bit-exact.  Requires ``TrainConfig.telemetry``.
+    plan_search: bool = False
+    plan_search_every: int = 10       # steps between search moves
+    plan_search_cost_budget: float = 0.0   # max plan_cost (1.0 = BF16
+    #                                        baseline); 0 = unbounded
+    plan_search_max_edits: int = 8    # total edits before the search stops
+    plan_search_demote_threshold: float = 0.0  # demote cells whose error
+    #                                    EMA is below this; 0 = never demote
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,7 +8,8 @@ Public API:
                    layer-resolved PrecisionPlans (depth-graded presets,
                    per-(layer, class) transforms)
   schedule         two-stage target-precision schedule (plan transform)
-  cost_model       the paper's theoretical compute-cost accounting
+  cost_model       the paper's theoretical compute-cost accounting,
+                   plan-aware (ModelDims / plan_cost / schedule_cost)
 """
 from repro.core.formats import (FORMATS, FP4_E2M1, FP8_E4M3, FP8_E5M2,
                                 FloatFormat, round_to_format)

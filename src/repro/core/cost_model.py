@@ -1,10 +1,31 @@
-"""The paper's theoretical compute-cost model (App. B / Tables 2-3).
+"""The paper's theoretical compute-cost model (App. B / Tables 2-3),
+plan-aware since the layer-resolved refactor.
 
-Counts matmul FLOPs of a transformer block per role (fwd / dgrad / wgrad) and
-weights them by the assumed low-precision speedups: FP8 = 2x FP16 throughput,
-FP4 = 4x.  The "computation cost" reported in Tables 2/3 is
+Counts matmul FLOPs per role (fwd / dgrad / wgrad) and weights them by the
+assumed low-precision speedups: FP8 = 2x FP16 throughput, FP4 = 4x.  The
+"computation cost" reported in Tables 2/3 is
 
-    cost(recipe) / cost(fp16-everything)   (matmul time only).
+    cost(plan) / cost(fp16-everything)   (matmul time only).
+
+Two levels of dims:
+
+  * :class:`BlockDims` — one transformer block's shape (the pre-plan
+    entry point; Tables 2/3 price a single representative block).
+  * :class:`ModelDims` — per-layer resolved flops (one :class:`LayerDims`
+    per layer + the lm-head), derived from a ``ModelConfig`` via
+    :meth:`ModelDims.from_config`: MoE layers scale FFN flops by the
+    router top-k, SSM/hybrid layers price the mamba projections as their
+    FFN-class linears, VLM cross-attention sublayers add a second
+    attention block, and the lm-head matmul gets its own term.
+
+:func:`plan_cost` prices a whole ``PrecisionPlan`` against ``ModelDims`` —
+per-(layer, class, role) — with an exact-parity guarantee: a uniform plan
+over uniform per-layer dims degenerates to the *identical* floating-point
+arithmetic as the single-block recipe pricing, so
+``plan_cost(PrecisionPlan.uniform(r, n), ModelDims.from_block(d, n))``
+equals ``theoretical_cost(r, d)`` bit-for-bit (tested for every paper
+recipe).  :func:`schedule_cost` integrates the §3.3 stage-2 switch over
+the step budget.
 
 Also reproduces Fig. 1(a): the share of block compute held by attention
 linears (QKV+O), the attention scores/context matmuls, and the FFN.
@@ -12,12 +33,16 @@ linears (QKV+O), the attention scores/context matmuls, and the FFN.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional, Tuple, Union
 
 from repro.core.quantize import QuantSpec
-from repro.core.recipe import MatmulRecipe, PrecisionRecipe
+from repro.core.recipe import (RECIPES, LayerRecipe, MatmulRecipe,
+                               PrecisionPlan, PrecisionRecipe, stage2_plan)
 
-__all__ = ["block_flops", "theoretical_cost", "compute_share", "speed_factor"]
+__all__ = ["block_flops", "theoretical_cost", "compute_share",
+           "speed_factor", "BlockDims", "LayerDims", "ModelDims",
+           "plan_cost", "schedule_cost", "schedule_adjusted_cost",
+           "paper_calibrated_cost"]
 
 _SPEED = {"fp32": 0.5, "fp16": 1.0, "bf16": 1.0,
           "fp8_e4m3": 2.0, "fp8_e5m2": 2.0,
@@ -67,6 +92,101 @@ def compute_share(d: BlockDims) -> Dict[str, float]:
     return {k: v / tot for k, v in f.items()}
 
 
+# ---------------------------------------------------------------------------
+# Layer-resolved dims (plan-aware pricing)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerDims:
+    """Forward matmul FLOPs/token of one layer, split by plan class.
+
+    ``attn_linear`` prices this layer's attention-class linears, ``ffn``
+    its FFN-class ones (dense MLP, MoE experts x top-k, or the mamba
+    in/out projections — the same classing ``models`` uses to pick plan
+    cells), and ``attn_sdpa`` the scores/context matmuls, which always
+    run at FP16 speed (FlashAttention, App. B).
+    """
+
+    attn_linear: float
+    attn_sdpa: float
+    ffn: float
+
+    @classmethod
+    def from_block(cls, d: BlockDims) -> "LayerDims":
+        f = block_flops(d)
+        return cls(f["attn_linear"], f["attn_sdpa"], f["ffn"])
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDims:
+    """Per-layer flops of a whole model: one :class:`LayerDims` row per
+    layer (aligned with ``PrecisionPlan.layers``) plus the lm-head matmul
+    (``head_flops`` = 0 excludes the head — the single-block Tables-2/3
+    accounting)."""
+
+    layers: Tuple[LayerDims, ...]
+    head_flops: float = 0.0
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @classmethod
+    def from_block(cls, d: BlockDims, n_layers: int) -> "ModelDims":
+        """Uniform depth from a single block's dims, head excluded (the
+        pre-plan pricing semantics)."""
+        return cls((LayerDims.from_block(d),) * n_layers)
+
+    @classmethod
+    def from_config(cls, cfg, seq_len: Optional[int] = None,
+                    include_head: bool = True) -> "ModelDims":
+        """Resolve a ``configs.base.ModelConfig`` into per-layer dims.
+
+        Walks ``cfg.layer_specs()``: attention mixers price QKV+O and the
+        SDPA matmuls (a VLM cross sublayer adds a second set), mamba
+        mixers price the in_z/in_x/out_proj projections as FFN-class
+        flops (``SCOPE_CLASS`` maps ssm -> ffn, so they run the plan's
+        ffn cell), MoE FFNs scale by the router top-k, and the lm-head
+        matmul lands in ``head_flops``.
+        """
+        dm = cfg.d_model
+        block = BlockDims(
+            d_model=dm, d_ff=cfg.d_ff, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+            seq_len=seq_len or cfg.max_seq_len,
+            n_ff_matmuls=3 if cfg.activation == "swiglu" else 2)
+        f = block_flops(block)  # the single source of the App.-B formulas
+        fm = (block_flops(dataclasses.replace(block,
+                                              moe_top_k=cfg.moe.top_k))
+              if cfg.moe is not None else None)
+        ssm_proj = 0.0
+        if cfg.mamba is not None:
+            d_inner = cfg.mamba.expand * dm
+            # in_z + in_x (dm -> d_inner each) + out_proj (d_inner -> dm)
+            ssm_proj = 3 * 2 * dm * d_inner
+        rows = []
+        for spec in cfg.layer_specs():
+            attn = sdpa = ffn = 0.0
+            if spec.mixer == "attn":
+                attn, sdpa = f["attn_linear"], f["attn_sdpa"]
+            else:
+                ffn += ssm_proj
+            if spec.cross:
+                attn += f["attn_linear"]
+                sdpa += f["attn_sdpa"]
+            if spec.ffn == "dense":
+                ffn += f["ffn"]
+            elif spec.ffn == "moe":
+                ffn += fm["ffn"]
+            rows.append(LayerDims(attn, sdpa, ffn))
+        head = 2.0 * dm * cfg.vocab_size if include_head else 0.0
+        return cls(tuple(rows), head)
+
+
+# ---------------------------------------------------------------------------
+# Pricing
+# ---------------------------------------------------------------------------
+
 def _mm_time(flops: float, spec_a: QuantSpec, spec_b: QuantSpec) -> float:
     return flops / speed_factor(spec_a, spec_b)
 
@@ -79,24 +199,104 @@ def _linear_time(flops_fwd: float, mm: MatmulRecipe) -> float:
     return t
 
 
-def theoretical_cost(recipe: PrecisionRecipe, d: BlockDims) -> float:
-    """Tables 2/3 "Computation cost": matmul time vs the FP16 baseline.
+def _layer_terms(ld: LayerDims, row: LayerRecipe) -> Tuple[float, float]:
+    """(time, fp16-baseline time) of one layer under one plan row."""
+    t = _linear_time(ld.attn_linear, row.attn_linear)
+    t += _linear_time(ld.ffn, row.ffn_linear)
+    t += 3.0 * ld.attn_sdpa  # fwd + bwd at FP16 speed
+    baseline = 3.0 * (ld.attn_linear + ld.ffn + ld.attn_sdpa)
+    return t, baseline
 
-    Attention SDPA always runs at FP16 speed (FlashAttention, §App. B), and
-    its backward costs ~2x its forward.
+
+def _coerce_plan(p: Union[PrecisionPlan, PrecisionRecipe],
+                 n_layers: Optional[int] = None) -> PrecisionPlan:
+    """Cost entry points accept a plan or a recipe template (uniform plan
+    of ``n_layers``, default 1 — the depth cancels for uniform pricing)."""
+    if isinstance(p, PrecisionPlan):
+        return p
+    if isinstance(p, PrecisionRecipe):
+        return PrecisionPlan.uniform(p, n_layers or 1)
+    raise TypeError(
+        f"cost model prices PrecisionPlan / PrecisionRecipe, got "
+        f"{type(p).__name__}; the recipe-only entry points are deprecated "
+        "— coerce via core.recipe.as_plan")
+
+
+def plan_cost(plan: Union[PrecisionPlan, PrecisionRecipe],
+              dims: ModelDims) -> float:
+    """Matmul time of a whole plan vs the FP16 baseline (Tables 2/3
+    "Computation cost", resolved per (layer, class, role)).
+
+    Layers are grouped by (dims row, plan row) and each unique cell is
+    priced once.  Exact-parity guarantee: when everything collapses to a
+    single group and the head is excluded, the result is ``t / baseline``
+    of that one group — the *identical* float arithmetic as the old
+    single-block recipe path, so a uniform plan prices bit-identically to
+    ``theoretical_cost`` of its template at any depth.
     """
-    f = block_flops(d)
-    t = _linear_time(f["attn_linear"], recipe.attn_linear)
-    t += _linear_time(f["ffn"], recipe.ffn_linear)
-    t += 3.0 * f["attn_sdpa"]  # fwd + bwd at FP16 speed
-    baseline = 3.0 * (f["attn_linear"] + f["ffn"] + f["attn_sdpa"])
-    return t / baseline
+    plan = _coerce_plan(plan, dims.n_layers)
+    if plan.n_layers != dims.n_layers:
+        raise ValueError(f"plan {plan.name!r} has {plan.n_layers} layers, "
+                         f"dims has {dims.n_layers}")
+    groups: Dict[Tuple[LayerDims, LayerRecipe], int] = {}
+    for ld, row in zip(dims.layers, plan.layers):
+        groups[(ld, row)] = groups.get((ld, row), 0) + 1
+    terms = [(cnt, *_layer_terms(ld, row))
+             for (ld, row), cnt in groups.items()]
+    if dims.head_flops:
+        terms.append((1, _linear_time(dims.head_flops, plan.head_linear),
+                      3.0 * dims.head_flops))
+    if len(terms) == 1:  # uniform: depth cancels exactly (parity path)
+        _, t, baseline = terms[0]
+        return t / baseline
+    return (sum(c * t for c, t, _ in terms)
+            / sum(c * b for c, _, b in terms))
 
 
-def schedule_adjusted_cost(recipe: PrecisionRecipe, d: BlockDims) -> float:
-    """Cost including the stage-2 high-precision tail (Table 3 rows)."""
-    frac = recipe.target_precision_frac
-    lo = theoretical_cost(recipe, d)
+def theoretical_cost(recipe: Union[PrecisionRecipe, PrecisionPlan],
+                     d: BlockDims) -> float:
+    """Tables 2/3 "Computation cost": matmul time vs the FP16 baseline for
+    one representative block.  Accepts the class-template recipe (the
+    historical signature) or a full ``PrecisionPlan`` (priced against
+    uniform per-layer dims built from ``d``)."""
+    plan = _coerce_plan(recipe)
+    return plan_cost(plan, ModelDims.from_block(d, plan.n_layers))
+
+
+def schedule_cost(plan: Union[PrecisionPlan, PrecisionRecipe],
+                  dims: ModelDims, *,
+                  target: Optional[PrecisionPlan] = None,
+                  total_steps: Optional[int] = None) -> float:
+    """Cost with the §3.3 stage-2 switch integrated over the step budget.
+
+    Stage 2 runs ``stage2_plan(plan, target)`` (default: the uniform BF16
+    baseline, matching ``TargetPrecisionSchedule``).  With ``total_steps``
+    the switch step is quantized exactly as the schedule quantizes it
+    (``round(total * (1 - frac))``); without, the continuous fraction is
+    used.  ``target_precision_frac <= 0`` disables stage 2."""
+    plan = _coerce_plan(plan, dims.n_layers)
+    lo = plan_cost(plan, dims)
+    frac = plan.target_precision_frac
+    if frac <= 0.0:
+        return lo
+    tgt = target if target is not None else PrecisionPlan.uniform(
+        RECIPES["bf16"], plan.n_layers)
+    hi = plan_cost(stage2_plan(plan, tgt), dims)
+    if total_steps:
+        switch = int(round(total_steps * (1.0 - frac)))
+        return (switch * lo + (total_steps - switch) * hi) / total_steps
+    return (1.0 - frac) * lo + frac * hi
+
+
+def schedule_adjusted_cost(recipe: Union[PrecisionRecipe, PrecisionPlan],
+                           d: BlockDims) -> float:
+    """Cost including the stage-2 high-precision tail (Table 3 rows).
+
+    Historical single-block form: the stage-2 tail is priced at exactly
+    1.0 (the FP16 baseline), as the paper tabulates it."""
+    plan = _coerce_plan(recipe)
+    frac = plan.target_precision_frac
+    lo = theoretical_cost(plan, d)
     return (1.0 - frac) * lo + frac * 1.0
 
 
@@ -118,7 +318,9 @@ def schedule_adjusted_cost(recipe: PrecisionRecipe, d: BlockDims) -> float:
 _CAL = {"a": 0.14, "f": 0.43, "w": 1.0}
 
 
-def paper_calibrated_cost(recipe: PrecisionRecipe) -> float:
+def paper_calibrated_cost(
+        recipe: Union[PrecisionRecipe, PrecisionPlan]) -> float:
+    plan = _coerce_plan(recipe)
     a, f, w = _CAL["a"], _CAL["f"], _CAL["w"]
     s = 1.0 - a - f
     fwd, bwd = 1.0 / (1.0 + w), w / (1.0 + w)
@@ -130,4 +332,16 @@ def paper_calibrated_cost(recipe: PrecisionRecipe) -> float:
                  speed_factor(mm.wgrad_x, mm.wgrad_g))
         return fwd / sf + bwd / sb
 
-    return a * lin(recipe.attn_linear) + f * lin(recipe.ffn_linear) + s
+    def class_mean(field: str) -> float:
+        """Depth-mean of lin() over the plan's rows; a single unique row
+        returns its value directly (recipe-path parity)."""
+        groups: Dict[MatmulRecipe, int] = {}
+        for row in plan.layers:
+            mm = getattr(row, field)
+            groups[mm] = groups.get(mm, 0) + 1
+        if len(groups) == 1:
+            return lin(next(iter(groups)))
+        return (sum(cnt * lin(mm) for mm, cnt in groups.items())
+                / plan.n_layers)
+
+    return a * class_mean("attn_linear") + f * class_mean("ffn_linear") + s

@@ -129,6 +129,19 @@ class QuantSpec:
             s += ":sr"
         return s
 
+    def with_fmt(self, fmt: str,
+                 stochastic: Optional[bool] = None) -> "QuantSpec":
+        """Same scaling spec (granularity/block/pow2), different storage
+        format — the role-subset plan edits (``PrecisionPlan.demote``)
+        lower e.g. an ``fp8_e5m2@token`` gradient operand to its
+        ``fp4_e2m1@token`` counterpart without touching how it is scaled.
+        ``stochastic`` overrides the rounding mode (None keeps it)."""
+        if fmt not in F.FORMATS:
+            raise ValueError(f"unknown format {fmt!r}")
+        sr = self.stochastic if stochastic is None else stochastic
+        out = dataclasses.replace(self, fmt=fmt, stochastic=sr)
+        return self if out == self else out
+
     @classmethod
     def from_str(cls, s: str) -> "QuantSpec":
         head, *flags = s.split(":")

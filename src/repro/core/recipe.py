@@ -37,10 +37,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple, Union
 
+from repro.core import formats as F
 from repro.core.quantize import QuantSpec
 
 __all__ = ["MatmulRecipe", "PrecisionRecipe", "named_recipe", "RECIPES",
            "LayerRecipe", "PrecisionPlan", "as_plan", "stage2_plan",
+           "ROLE_SUBSETS",
            "MM_BF16", "MM_FP8", "MM_FP4_ALL", "MM_FFN_PAPER"]
 
 _ROLES = ("fwd_x", "fwd_w", "dgrad_g", "dgrad_w", "wgrad_x", "wgrad_g")
@@ -153,6 +155,12 @@ class PrecisionRecipe:
 _CLASS_FIELD = {"attn": "attn_linear", "ffn": "ffn_linear",
                 "head": "head_linear"}
 
+# Role subsets addressable by the plan transforms: each of the three
+# matmuls of a linear owns two operand slots.
+ROLE_SUBSETS = {"fwd": ("fwd_x", "fwd_w"),
+                "dgrad": ("dgrad_g", "dgrad_w"),
+                "wgrad": ("wgrad_x", "wgrad_g")}
+
 
 def _protect(mm: MatmulRecipe) -> MatmulRecipe:
     """Higher-precision stand-in for a class recipe, role-wise: every
@@ -163,6 +171,32 @@ def _protect(mm: MatmulRecipe) -> MatmulRecipe:
     path INTO a quantized FP8 one."""
     repl = {r: getattr(MM_FP8, r) for r in _ROLES
             if not getattr(mm, r).is_passthrough}
+    return dataclasses.replace(mm, **repl) if repl else mm
+
+
+def _demote_mm(mm: MatmulRecipe, roles: Tuple[str, ...],
+               fmt: str = "fp4_e2m1") -> MatmulRecipe:
+    """Lower the given role subsets of a cell recipe to their low-precision
+    (default FP4) counterparts, keeping each operand's scaling spec
+    (granularity/block/pow2) intact.  Asymmetric by design: passthrough
+    roles are never quantized (the §3.2 BF16 dgrad path stays BF16 —
+    demotion only pushes *already-quantized* operands further down), and
+    gradient operands (``*_g``) pick up stochastic rounding at FP4 (the
+    unbiased-gradient requirement of Quartet / "Optimizing LLM Training
+    Using FP4 Quantization")."""
+    repl = {}
+    for subset in roles:
+        for r in ROLE_SUBSETS[subset]:
+            spec = getattr(mm, r)
+            if spec.is_passthrough:
+                continue
+            if F.FORMATS[fmt].bits >= spec.format.bits:
+                continue  # demotion strictly lowers; fp4 stays fp4
+            sr = True if (r.endswith("_g") and fmt.startswith("fp4")) \
+                else None
+            tgt = spec.with_fmt(fmt, stochastic=sr)
+            if tgt != spec:
+                repl[r] = tgt
     return dataclasses.replace(mm, **repl) if repl else mm
 
 
@@ -352,6 +386,47 @@ class PrecisionPlan:
         where = f"l{layer:02d}." if layer is not None else ""
         return dataclasses.replace(
             self, name=f"{self.name}+{where}{cls}=fp8", layers=tuple(rows))
+
+    def demote(self, cls: str, layer: Optional[int] = None,
+               roles: Tuple[str, ...] = ("wgrad",),
+               fmt: str = "fp4_e2m1") -> "PrecisionPlan":
+        """Plan with a role *subset* of one (layer, class) cell — or a
+        whole class when ``layer`` is None, or the head — lowered to its
+        ``fmt`` (default FP4) counterpart.  The asymmetric counterpart of
+        :meth:`promote`: only the named role subsets move (default
+        ``("wgrad",)`` — the §3.2 observation that the wgrad path
+        tolerates FP4 long before dgrad does), only already-quantized
+        operands are lowered (a BF16 dgrad never becomes quantized), each
+        operand keeps its scaling spec, and FP4 gradient operands gain
+        stochastic rounding.  The plan searcher's cost-freeing move;
+        no-op (same object) if nothing changes."""
+        bad = set(roles) - set(ROLE_SUBSETS)
+        if bad:
+            raise ValueError(f"unknown role subsets {sorted(bad)}; "
+                             f"have {sorted(ROLE_SUBSETS)}")
+        tag = f"{'+'.join(roles)}={fmt.split('_')[0]}"
+        if cls == "head":
+            tgt = _demote_mm(self.head_linear, roles, fmt)
+            if self.head_linear == tgt:
+                return self
+            return dataclasses.replace(
+                self, name=f"{self.name}+head.{tag}", head_linear=tgt)
+        field = _CLASS_FIELD[cls]
+        idxs = range(self.n_layers) if layer is None else (layer,)
+        rows = list(self.layers)
+        changed = False
+        for i in idxs:
+            cur = getattr(rows[i], field)
+            tgt = _demote_mm(cur, roles, fmt)
+            if cur != tgt:
+                rows[i] = dataclasses.replace(rows[i], **{field: tgt})
+                changed = True
+        if not changed:
+            return self
+        where = f"l{layer:02d}." if layer is not None else ""
+        return dataclasses.replace(
+            self, name=f"{self.name}+{where}{cls}.{tag}",
+            layers=tuple(rows))
 
     def resize(self, n_layers: int) -> "PrecisionPlan":
         """Plan for a different depth by proportional row mapping (exact

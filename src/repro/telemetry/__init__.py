@@ -16,7 +16,8 @@ Two halves (see ISSUE 2 / ROADMAP):
 analysis (``benchmarks/telemetry_report.py``).
 """
 from repro.telemetry import collect  # noqa: F401
-from repro.telemetry.controller import PrecisionController  # noqa: F401
+from repro.telemetry.controller import (PlanSearcher,  # noqa: F401
+                                        PrecisionController)
 from repro.telemetry.writer import JsonlWriter  # noqa: F401
 
-__all__ = ["collect", "PrecisionController", "JsonlWriter"]
+__all__ = ["collect", "PrecisionController", "PlanSearcher", "JsonlWriter"]

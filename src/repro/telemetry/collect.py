@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import re
 import threading
 from typing import Dict, Optional
 
@@ -55,7 +56,8 @@ from repro.core.recipe import MatmulRecipe
 __all__ = ["TelemetryCollector", "collecting", "active", "suppressed",
            "module_scope", "layer_frame", "tap_matmul", "tap_matmul_batched",
            "grad_tap", "make_probes", "probe_metrics", "grad_norm_metrics",
-           "operand_stats", "PROBE_CLASSES", "GRAD_STATS"]
+           "operand_stats", "cell_error_signals", "PROBE_CLASSES",
+           "GRAD_STATS"]
 
 _TLS = threading.local()
 
@@ -422,6 +424,57 @@ def probe_metrics(probe_grads: Dict[str, jnp.ndarray]
         for l in range(arr.shape[0] - 1):
             _vec_metrics(arr[l], f"tel/bwd/l{l:02d}/{cls}", out)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Per-cell error signals (pure-Python aggregation over a history row)
+# ---------------------------------------------------------------------------
+
+_FWD_CELL_RE = re.compile(r"^tel/l(\d+)/([^/]+)/mm\d+/[^/]+/rel_err$")
+_BWD_CELL_RE = re.compile(
+    r"^tel/bwd/l(\d+)/([^/]+)/(?:dgrad_g|wgrad_g)/rel_err$")
+_HEAD_FWD_RE = re.compile(r"^tel/head/mm\d+/[^/]+/rel_err$")
+_HEAD_BWD_RE = re.compile(r"^tel/bwd/head/(?:dgrad_g|wgrad_g)/rel_err$")
+
+
+def cell_error_signals(row: Dict) -> Dict[str, float]:
+    """Mean quant relative error per plan cell from one history row.
+
+    Cells use the controller/plan addressing — ``"lNN/<cls>"`` for
+    in-stack layers, ``"head"`` for the lm-head — joining the forward-side
+    per-layer taps (all slots, all mm call sites) with the backward-side
+    layer-indexed probe rows.  Probe rows with a zero tap count are
+    skipped (an untapped row reads 0.0, which is absence of signal, not a
+    perfect quantizer).  This is the plan searcher's per-cell health
+    signal; the classing is ``SCOPE_CLASS``, the same map the controller
+    uses for demotion keys.
+    """
+    acc: Dict[str, list] = {}
+    for k, v in row.items():
+        if not isinstance(v, (int, float)):
+            continue
+        m = _FWD_CELL_RE.match(k)
+        if m:
+            cls = SCOPE_CLASS.get(m.group(2))
+            if cls in ("attn", "ffn"):
+                acc.setdefault(f"l{int(m.group(1)):02d}/{cls}",
+                               []).append(float(v))
+            continue
+        m = _BWD_CELL_RE.match(k)
+        if m:
+            layer, cls = int(m.group(1)), m.group(2)
+            if cls not in ("attn", "ffn"):
+                continue
+            if float(row.get(f"tel/bwd/l{layer:02d}/{cls}/taps", 0.0)) <= 0:
+                continue
+            acc.setdefault(f"l{layer:02d}/{cls}", []).append(float(v))
+            continue
+        if _HEAD_FWD_RE.match(k):
+            acc.setdefault("head", []).append(float(v))
+        elif (_HEAD_BWD_RE.match(k)
+              and float(row.get("tel/bwd/head/taps", 0.0)) > 0):
+            acc.setdefault("head", []).append(float(v))
+    return {c: sum(vs) / len(vs) for c, vs in acc.items()}
 
 
 # ---------------------------------------------------------------------------

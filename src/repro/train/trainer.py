@@ -11,9 +11,11 @@ Responsibilities:
     transform);
   * adaptive precision (``TrainConfig.controller``): the telemetry-driven
     ``PrecisionController`` picks the active plan per step (dynamic early
-    switch, per-(layer, class) demotion, LR backoff) and can request a
-    loss-spike rollback — restore the last checkpoint and replay at the
-    target precision;
+    switch, per-(layer, class) demotion, LR backoff, and — with
+    ``plan_search`` — the greedy cost-vs-quant-error plan searcher, whose
+    ``ModelDims`` pricing the trainer derives from the model config) and
+    can request a loss-spike rollback — restore the last checkpoint and
+    replay at the target precision;
   * checkpoint/restart: atomic step-indexed checkpoints of params + optimizer
     + compression residuals + step (+ controller state + active plan); the
     plan is re-derived from the restored step and controller state, so
@@ -36,6 +38,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import TrainConfig
+from repro.core.cost_model import ModelDims
 from repro.core.recipe import RECIPES, PrecisionPlan
 from repro.core.schedule import TargetPrecisionSchedule
 from repro.models.model import Model
@@ -109,8 +112,11 @@ class Trainer:
                                           async_save=tcfg.async_checkpoint)
         self.controller: Optional[PrecisionController] = None
         if tcfg.controller is not None:
+            # layer-resolved flops for the plan searcher's cost pricing
+            dims = ModelDims.from_config(model.cfg, seq_len=tcfg.seq_len)
             self.controller = PrecisionController(self.schedule,
-                                                  tcfg.controller)
+                                                  tcfg.controller,
+                                                  dims=dims)
         self.writer: Optional[JsonlWriter] = None
         if tcfg.telemetry_jsonl:
             self.writer = JsonlWriter(tcfg.telemetry_jsonl)
@@ -278,6 +284,17 @@ class Trainer:
                 log(f"[controller] step {ev['step']}: sustained overflow "
                     f"({ev['overflow']:.4f}) -> demoting "
                     f"{ev['cell']} to FP8")
+            elif ev["event"] == "frontier_point":
+                log(f"[controller] step {ev['step']}: frontier point "
+                    f"cost {ev['cost']:.3f} / quant-err {ev['error']:.4f} "
+                    f"({ev['plan']})")
+            elif ev["event"] == "plan_search":
+                log(f"[controller] step {ev['step']}: plan search "
+                    f"{ev['op']} {ev['cell']} -> cost {ev['cost']:.3f}")
+            elif ev["event"] == "plan_search_done":
+                log(f"[controller] step {ev['step']}: plan search done "
+                    f"({ev['edits']} edits, "
+                    f"{ev['frontier_size']}-point frontier)")
             elif ev["event"] == "rollback":
                 # keep the attempt counter (guards infinite loops) and the
                 # just-applied LR backoff across the checkpointed

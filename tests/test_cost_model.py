@@ -1,9 +1,17 @@
-"""The paper's theoretical cost model: Fig 1(a) and Tables 2/3 numbers."""
+"""The paper's theoretical cost model: Fig 1(a) and Tables 2/3 numbers,
+the plan-aware v2 (ModelDims / plan_cost / schedule_cost, exact uniform
+parity), and the telemetry-driven plan searcher's frontier contract."""
+import json
+
 import pytest
 
-from repro.core.cost_model import (BlockDims, compute_share,
-                                   schedule_adjusted_cost, theoretical_cost)
-from repro.core.recipe import RECIPES
+from repro.configs.base import ControllerSettings, get_config
+from repro.core.cost_model import (BlockDims, ModelDims, compute_share,
+                                   paper_calibrated_cost, plan_cost,
+                                   schedule_adjusted_cost, schedule_cost,
+                                   theoretical_cost)
+from repro.core.recipe import RECIPES, PrecisionPlan
+from repro.telemetry.controller import PlanSearcher
 
 # LLaMA-7B block at 4k ctx (Fig. 1a setting)
 LLAMA7B_4K = BlockDims(d_model=4096, d_ff=11008, n_heads=32, n_kv_heads=32,
@@ -58,3 +66,218 @@ def test_paper_recipe_cheaper_than_bf16_costlier_than_allfp4():
     assert (paper_calibrated_cost(RECIPES["all_fp4"])
             < paper_calibrated_cost(RECIPES["paper_fp4"])
             < paper_calibrated_cost(RECIPES["bf16"]))
+
+
+# ---------------------------------------------------------------------------
+# Plan-aware cost model v2 (tentpole)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(RECIPES))
+@pytest.mark.parametrize("n_layers", [1, 2, 5, 12])
+def test_plan_cost_uniform_parity_bit_exact(name, n_layers):
+    """The exact-parity guarantee: a uniform plan prices bit-identically
+    to the old single-block recipe path at ANY depth — `==`, not approx."""
+    r = RECIPES[name]
+    got = plan_cost(PrecisionPlan.uniform(r, n_layers),
+                    ModelDims.from_block(LLAMA125M, n_layers))
+    assert got == theoretical_cost(r, LLAMA125M)
+
+
+@pytest.mark.parametrize("name", sorted(RECIPES))
+def test_paper_calibrated_cost_plan_parity(name):
+    r = RECIPES[name]
+    for n in (1, 4):
+        assert (paper_calibrated_cost(PrecisionPlan.uniform(r, n))
+                == paper_calibrated_cost(r))
+
+
+def test_cost_entry_points_reject_non_recipes():
+    with pytest.raises(TypeError, match="as_plan"):
+        theoretical_cost("paper_fp4", LLAMA125M)
+    with pytest.raises(TypeError, match="deprecated"):
+        paper_calibrated_cost(RECIPES["paper_fp4"].ffn_linear)
+
+
+def test_plan_cost_depth_graded_between_uniform_bounds():
+    """A first/last-k protected plan costs more than the uniform recipe
+    (it runs FP8 rows at the edges) but less than all-FP8."""
+    dims = ModelDims.from_block(LLAMA125M, 8)
+    lo = plan_cost(PrecisionPlan.uniform(RECIPES["all_fp4"], 8), dims)
+    fl = plan_cost(PrecisionPlan.first_last_k(RECIPES["all_fp4"], 8, k=2),
+                   dims)
+    hi = plan_cost(PrecisionPlan.uniform(RECIPES["fp8"], 8), dims)
+    assert lo < fl < hi < 1.0
+    # demoting one cell's wgrad strictly cuts cost, promote strictly adds
+    plan = PrecisionPlan.uniform(RECIPES["fp8"], 8)
+    assert plan_cost(plan.demote("ffn", layer=3), dims) < plan_cost(
+        plan, dims)
+    p4 = PrecisionPlan.uniform(RECIPES["all_fp4"], 8)
+    assert plan_cost(p4.promote("attn", layer=0), dims) > plan_cost(
+        p4, dims)
+
+
+def test_model_dims_from_config_families():
+    # dense tiny: per-layer dims uniform, lm-head priced separately
+    tiny = get_config("tiny")
+    dims = ModelDims.from_config(tiny, seq_len=64)
+    assert dims.n_layers == tiny.n_layers
+    assert all(ld == dims.layers[0] for ld in dims.layers)
+    assert dims.head_flops == 2 * tiny.d_model * tiny.vocab_size
+    ld = dims.layers[0]
+    assert ld.attn_linear > 0 and ld.attn_sdpa > 0 and ld.ffn > 0
+    no_head = ModelDims.from_config(tiny, seq_len=64, include_head=False)
+    assert no_head.head_flops == 0.0
+    # BF16-head pricing pulls the ratio toward 1 vs the head-free dims
+    p = PrecisionPlan.uniform(RECIPES["all_fp4"], tiny.n_layers)
+    assert plan_cost(p, dims) > plan_cost(p, no_head)
+    # MoE: expert flops scale with router top-k
+    moe = get_config("olmoe-1b-7b")
+    md = ModelDims.from_config(moe, seq_len=128)
+    dense_like = moe.replace(moe=None)
+    dd = ModelDims.from_config(dense_like, seq_len=128)
+    assert md.layers[-1].ffn == moe.moe.top_k * dd.layers[-1].ffn
+    # SSM: mamba projections priced as the FFN class, no attention flops
+    ssm = get_config("mamba2-780m")
+    sd = ModelDims.from_config(ssm, seq_len=128)
+    assert sd.layers[0].attn_linear == 0 and sd.layers[0].attn_sdpa == 0
+    assert sd.layers[0].ffn == 3 * 2 * ssm.d_model * (
+        ssm.mamba.expand * ssm.d_model)
+
+
+def test_plan_cost_depth_mismatch_raises():
+    dims = ModelDims.from_block(LLAMA125M, 4)
+    with pytest.raises(ValueError, match="layers"):
+        plan_cost(PrecisionPlan.uniform(RECIPES["all_fp4"], 6), dims)
+
+
+def test_schedule_cost_integrates_stage2():
+    dims = ModelDims.from_block(LLAMA125M, 2)
+    plan = PrecisionPlan.uniform(RECIPES["paper_fp4"], 2)
+    lo = plan_cost(plan, dims)
+    hi = plan_cost(PrecisionPlan.uniform(RECIPES["bf16"], 2), dims)
+    cont = schedule_cost(plan, dims)
+    assert lo < cont < hi
+    frac = plan.target_precision_frac
+    assert cont == pytest.approx((1 - frac) * lo + frac * hi)
+    # step-budget form quantizes the switch exactly like the schedule
+    total = 100
+    switch = int(round(total * (1 - frac)))
+    stepped = schedule_cost(plan, dims, total_steps=total)
+    assert stepped == pytest.approx(
+        (switch * lo + (total - switch) * hi) / total)
+    # no stage 2 -> plain plan cost
+    nosched = PrecisionPlan.uniform(RECIPES["paper_fp4_nosched"], 2)
+    assert schedule_cost(nosched, dims) == plan_cost(nosched, dims)
+
+
+# ---------------------------------------------------------------------------
+# Plan searcher: frontier monotonicity + checkpoint-resume bit-exactness
+# (pure Python on synthetic telemetry rows; trainer wiring is covered in
+# tests/test_telemetry.py)
+# ---------------------------------------------------------------------------
+
+def _searcher(every=3, **kw):
+    dims = ModelDims.from_config(get_config("tiny"), seq_len=64)
+    return PlanSearcher(dims, ControllerSettings(
+        plan_search=True, plan_search_every=every, **kw))
+
+
+def _row(errs):
+    """Synthetic telemetry row with one fwd rel_err key per cell."""
+    return {f"tel/{c.split('/')[0]}/{c.split('/')[1]}/mm0/fwd_x/rel_err": v
+            for c, v in errs.items()}
+
+
+START_ERRS = {"l00/ffn": 0.20, "l01/ffn": 0.15,
+              "l00/attn": 0.10, "l01/attn": 0.05}
+
+
+def _drive(searcher, base, errs, steps, react=True, start=0):
+    """Feed rows; when the searcher promotes a cell, simulate the FP8
+    error drop (x1/8) so the measured signal reacts like a real run."""
+    events = []
+    for step in range(start, start + steps):
+        searcher.observe(step, _row(errs))
+        for ev in searcher.maybe_move(step, base):
+            events.append(ev)
+            if react and ev["event"] == "plan_search":
+                if ev["op"] == "promote":
+                    errs[ev["cell"]] /= 8.0
+                else:
+                    errs[ev["cell"]] *= 4.0
+    return events
+
+
+def test_searcher_frontier_monotone():
+    s = _searcher()
+    base = PrecisionPlan.uniform(RECIPES["all_fp4"], 2)
+    _drive(s, base, dict(START_ERRS), steps=40)
+    assert s.done
+    assert len(s.edits) == 4  # every promotable cell visited exactly once
+    assert len(s.frontier) == 5
+    costs = [p["cost"] for p in s.frontier]
+    errors = [p["error"] for p in s.frontier]
+    # monotone frontier: strictly increasing cost, strictly decreasing
+    # error — no search step added a point at higher cost with
+    # equal-or-worse error
+    assert costs == sorted(costs) and len(set(costs)) == len(costs)
+    assert errors == sorted(errors, reverse=True)
+    assert len(set(errors)) == len(errors)
+    # greedy order: worst cell first
+    assert s.edits[0] == ["promote", "l00/ffn"]
+
+
+def test_searcher_respects_cost_budget_and_demotes():
+    """With a cost budget below the next promotion, the searcher frees
+    budget by demoting the healthiest cell's wgrad roles instead."""
+    dims = ModelDims.from_config(get_config("tiny"), seq_len=64)
+    base = PrecisionPlan.uniform(RECIPES["fp8"], 2)
+    budget = plan_cost(base, dims)  # no promotion can fit
+    s = PlanSearcher(dims, ControllerSettings(
+        plan_search=True, plan_search_every=3,
+        plan_search_cost_budget=budget,
+        plan_search_demote_threshold=0.5))
+    errs = {"l00/ffn": 0.04, "l01/ffn": 0.03,
+            "l00/attn": 0.02, "l01/attn": 0.01}
+    events = _drive(s, base, errs, steps=30)
+    demotes = [e for e in events if e.get("event") == "plan_search"
+               and e["op"] == "demote"]
+    assert demotes and demotes[0]["cell"] == "l01/attn"  # healthiest first
+    edited = s.apply(base)
+    mm = edited.layers[1].attn_linear
+    assert mm.wgrad_g.fmt == "fp4_e2m1" and mm.wgrad_g.stochastic
+    assert mm.wgrad_x.fmt == "fp4_e2m1"
+    assert mm.dgrad_g.fmt == "fp8_e5m2"  # dgrad never demoted
+    assert plan_cost(edited, dims) < budget
+
+
+def test_searcher_max_edits_caps_search():
+    s = _searcher(plan_search_max_edits=2)
+    base = PrecisionPlan.uniform(RECIPES["all_fp4"], 2)
+    _drive(s, base, dict(START_ERRS), steps=40)
+    assert s.done and len(s.edits) == 2
+
+
+def test_searcher_resume_bit_exact():
+    """Snapshot the searcher state mid-search through a JSON round-trip
+    (the checkpoint-extra path); the resumed searcher must replay the
+    remainder bit-identically to the uninterrupted one."""
+    base = PrecisionPlan.uniform(RECIPES["all_fp4"], 2)
+    ref_errs, cut_errs = dict(START_ERRS), dict(START_ERRS)
+    ref = _searcher()
+    _drive(ref, base, ref_errs, steps=40)
+
+    a = _searcher()
+    _drive(a, base, cut_errs, steps=7)  # stop mid-window, 2 edits applied
+    assert len(a.edits) == 2 and not a.done
+    state = json.loads(json.dumps(a.state_dict()))  # ckpt extra round-trip
+    b = _searcher()
+    b.load_state(state)
+    assert b.state_dict() == a.state_dict()
+    _drive(b, base, cut_errs, steps=33, start=7)
+    assert b.state_dict() == ref.state_dict()      # bit-exact floats
+    assert b.apply(base) is not None
+    assert [p["cost"] for p in b.frontier] == [p["cost"]
+                                               for p in ref.frontier]
+    assert [p["error"] for p in b.frontier] == [p["error"]
+                                                for p in ref.frontier]

@@ -91,6 +91,35 @@ def test_plan_dict_roundtrip_json():
 # Resolution / partitioning
 # ---------------------------------------------------------------------------
 
+def test_plan_demote_wgrad_role_subset():
+    """The asymmetric role-subset demotion (ISSUE 5): only the named role
+    subsets move, only already-quantized operands are lowered, FP4
+    gradient operands gain SR, and dgrad is untouchable by default."""
+    base = PrecisionPlan.uniform(RECIPES["fp8"], 4)
+    p = base.demote("ffn", layer=1)
+    mm = p.layers[1].ffn_linear
+    assert mm.wgrad_x.fmt == "fp4_e2m1" and not mm.wgrad_x.stochastic
+    assert mm.wgrad_g.fmt == "fp4_e2m1" and mm.wgrad_g.stochastic
+    assert mm.wgrad_g.granularity == MM_FP8.wgrad_g.granularity
+    assert mm.fwd_x == MM_FP8.fwd_x and mm.dgrad_g == MM_FP8.dgrad_g
+    assert p.layers[0] == base.layers[0]
+    assert p.name.endswith("l01.ffn.wgrad=fp4")
+    # no-ops: an all-FP4 cell has nothing lower; a passthrough (BF16)
+    # dgrad subset never becomes quantized; explicit head demote works
+    all4 = PrecisionPlan.uniform(RECIPES["all_fp4"], 4)
+    assert all4.demote("ffn", layer=0) is all4
+    paper = PrecisionPlan.uniform(RECIPES["paper_fp4"], 4)
+    assert paper.demote("ffn", layer=0, roles=("dgrad",)) is paper
+    assert base.demote("head") is base  # BF16 head: nothing quantized
+    with pytest.raises(ValueError, match="role subsets"):
+        base.demote("ffn", roles=("bogus",))
+    # serialization of the demoted specs round-trips (checkpoint form)
+    assert PrecisionPlan.from_dict(json.loads(json.dumps(p.to_dict()))) == p
+    # whole-class demotion edits every row
+    allp = base.demote("ffn")
+    assert all(r.ffn_linear.wgrad_g.fmt == "fp4_e2m1" for r in allp.layers)
+
+
 def test_scan_runs_uniform_single_run():
     plan = PrecisionPlan.uniform(RECIPES["paper_fp4"], 12)
     assert plan.scan_runs(1) == [(0, 12)]

@@ -321,6 +321,55 @@ def test_controller_demotion_needs_sustained_signal():
     assert ctrl.demoted == []
 
 
+def test_demotions_survive_stage2_switch():
+    """Bugfix regression (ISSUE 5): a demoted cell must stay promoted
+    across the §3.3 switch whenever the stage-2 plan still quantizes it.
+    Pre-fix, ``active_plan`` dropped every demotion as soon as the target
+    plan was active."""
+    sched = TargetPrecisionSchedule(_plan("paper_fp4"), 100,
+                                    target=_plan("fine_grained_fp4"))
+    ctrl = PrecisionController(sched, ControllerSettings(
+        demote_overflow_threshold=0.2, demote_patience=2))
+    storm = {"loss": 1.0, "tel/l00/ffn/mm0/wgrad_x/clip": 0.9}
+    for step in range(3):
+        ctrl.observe(step, storm)
+    assert ctrl.demoted == ["l00/ffn"]
+    assert ctrl.active_plan(50).layers[0].ffn_linear.fwd_x == MM_FP8.fwd_x
+    # cross the fixed-fraction boundary (switch step 92): the stage-2 plan
+    # quantizes ffn at FP4, so the demoted cell must stay at FP8
+    tgt = sched.target_plan
+    p2 = ctrl.active_plan(95)
+    assert p2 != tgt
+    assert p2.layers[0].ffn_linear.fwd_x == MM_FP8.fwd_x
+    assert p2.layers[1] == tgt.layers[1]          # only the cell is edited
+    # a stage-2 plan that does NOT quantize the cell is untouched (the
+    # demotion has nothing to protect at BF16)
+    sched_bf16 = _schedule(total=100)
+    ctrl2 = PrecisionController(sched_bf16, ControllerSettings(
+        demote_overflow_threshold=0.2, demote_patience=2))
+    for step in range(3):
+        ctrl2.observe(step, storm)
+    assert ctrl2.active_plan(95) == sched_bf16.target_plan
+
+
+def test_demoted_plan_cache_keyed_by_base():
+    """Bugfix regression (ISSUE 5): the demoted-plan cache must key on
+    the base plan too — keyed by the cell set alone, a plan derived from
+    one base was served for another once ``plan_at(step)`` varied."""
+    sched = TargetPrecisionSchedule(_plan("paper_fp4"), 100,
+                                    target=_plan("fine_grained_fp4"))
+    ctrl = PrecisionController(sched, ControllerSettings())
+    ctrl.demoted = ["l00/ffn"]
+    a = ctrl._demoted_plan(_plan("paper_fp4"))
+    b = ctrl._demoted_plan(_plan("fine_grained_fp4"))
+    assert a != b
+    assert a.layers[1].ffn_linear == RECIPES["paper_fp4"].ffn_linear
+    assert b.layers[1].ffn_linear == RECIPES["fine_grained_fp4"].ffn_linear
+    # both demote the addressed cell
+    for p in (a, b):
+        assert p.layers[0].ffn_linear.fwd_x == MM_FP8.fwd_x
+
+
 def test_controller_spike_triggers_rollback_and_replay():
     ctrl = PrecisionController(
         _schedule(total=100),
@@ -422,6 +471,96 @@ def test_trainer_rollback_restores_checkpoint(tiny_setup, tmp_path):
     assert tr.controller.replay_until == 8 + 3
     assert tr._active_plan(9).name == "bf16"    # replaying at target
     assert tr._active_plan(11).name == "paper_fp4"
+
+
+def test_plan_search_composes_with_demotions():
+    """Search edits compose with safety demotions: frontier points price
+    the plan the steps actually ran, and a cell the controller already
+    protected is never re-proposed by the searcher."""
+    from repro.core.cost_model import ModelDims, plan_cost
+    dims = ModelDims.from_config(get_config("tiny"), seq_len=64)
+    ctrl = PrecisionController(
+        _schedule(total=1000, recipe="all_fp4"),
+        ControllerSettings(plan_search=True, plan_search_every=3,
+                           demote_overflow_threshold=0.2,
+                           demote_patience=2),
+        dims=dims)
+    row = {"loss": 1.0,
+           "tel/l00/ffn/mm0/fwd_x/rel_err": 0.3,   # worst cell ...
+           "tel/l01/ffn/mm0/fwd_x/rel_err": 0.1,
+           "tel/l00/ffn/mm0/wgrad_x/clip": 0.9}    # ... but overflowing
+    events = []
+    for step in range(12):
+        events += ctrl.observe(step, row)
+    demotes = [e for e in events if e["event"] == "demote"]
+    assert [e["cell"] for e in demotes] == ["l00/ffn"]
+    moves = [e for e in events if e["event"] == "plan_search"]
+    assert moves and all(m["cell"] != "l00/ffn" for m in moves)
+    assert moves[0]["cell"] == "l01/ffn"  # next-worst promotable cell
+    # the frontier prices the effective (demotion-composed) plan
+    points = [e for e in events if e["event"] == "frontier_point"]
+    assert points[0]["cost"] == plan_cost(
+        ctrl._demoted_plan(ctrl.schedule.plan), dims)
+    assert "l00.ffn=fp8" in points[0]["plan"]
+
+
+def test_searcher_window_reset_on_replay_demotion():
+    """A demotion that latches during rollback replay (when the search
+    itself is gated off) must still discard the searcher's partial
+    measurement window — its samples belong to the pre-demotion plan."""
+    from repro.core.cost_model import ModelDims
+    dims = ModelDims.from_config(get_config("tiny"), seq_len=64)
+    ctrl = PrecisionController(
+        _schedule(total=1000, recipe="all_fp4"),
+        ControllerSettings(plan_search=True, plan_search_every=5,
+                           demote_overflow_threshold=0.2,
+                           demote_patience=2),
+        dims=dims)
+    row = {"loss": 1.0, "tel/l00/ffn/mm0/fwd_x/rel_err": 0.3}
+    ctrl.observe(0, row)
+    ctrl.observe(1, row)
+    assert ctrl.searcher._err_n == 2        # partial window accumulated
+    ctrl.begin_replay(2)                    # replay window: steps 2..6
+    storm = dict(row, **{"tel/l00/ffn/mm0/wgrad_x/clip": 0.9})
+    ctrl.observe(2, storm)
+    ctrl.observe(3, storm)                  # demotion latches mid-replay
+    assert ctrl.demoted == ["l00/ffn"]
+    assert ctrl.searcher._err_n == 0        # stale window discarded
+
+
+def test_trainer_plan_search_wiring(tiny_setup, tmp_path):
+    """Tentpole wiring: with ``plan_search`` the searcher edits the live
+    plan (history shows the edited plan's name), measures a real frontier
+    from the in-graph telemetry, and its state persists in the checkpoint
+    extra so a fresh trainer resumes it."""
+    cfg, model, pipe = tiny_setup
+    tcfg = TrainConfig(recipe="all_fp4", total_steps=100, global_batch=8,
+                       seq_len=64, learning_rate=3e-3, log_every=0,
+                       telemetry=True,
+                       checkpoint_every=4, checkpoint_dir=str(tmp_path),
+                       controller=ControllerSettings(
+                           plan_search=True, plan_search_every=3,
+                           plan_search_max_edits=1))
+    tr = Trainer(model, tcfg, pipe)
+    tr.train(num_steps=8)
+    s = tr.controller.searcher
+    assert len(s.edits) == 1 and s.edits[0][0] == "promote"
+    moves = [e for e in tr.controller.events
+             if e["event"] == "plan_search"]
+    assert len(moves) == 1 and moves[0]["cell"] == s.edits[0][1]
+    names = [r["recipe"] for r in tr.history]
+    assert names[0] == "all_fp4" and "=fp8" in names[-1]
+    # frontier measured from live telemetry: uniform FP4 first, the
+    # promoted plan cheaper-error at higher cost (monotone)
+    assert s.done and len(s.frontier) == 2
+    assert s.frontier[0]["plan"] == "all_fp4"
+    assert s.frontier[1]["cost"] > s.frontier[0]["cost"]
+    assert s.frontier[1]["error"] < s.frontier[0]["error"]
+    # searcher state rides the controller checkpoint extra
+    tr2 = Trainer(model, tcfg, pipe)
+    assert tr2.resume() is not None
+    assert tr2.controller.searcher.state_dict() == s.state_dict()
+    assert tr2._active_plan(8).name == tr._active_plan(8).name
 
 
 # ---------------------------------------------------------------------------
