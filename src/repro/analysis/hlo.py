@@ -81,26 +81,46 @@ def parse_collectives(hlo_text: str) -> List[Tuple[str, str, int]]:
     return out
 
 
+# XLA:CPU legalizes payload dtypes the backend cannot reduce natively:
+# bf16 collectives run as f32 (4B for 2B) and float8 collectives run as
+# f16 (2B for 1B).  ``_WIRE_SCALE`` undoes both for the accelerator-
+# faithful figure: this framework communicates activations/gradients in
+# bf16 and compressed gradients in fp8 — it never moves genuine
+# f32/f16 tensors — so those payloads are legalization artifacts.
+_WIRE_SCALE = {"f32": 0.5, "f16": 0.5}
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
     """Per-op-kind raw and ring-model effective per-chip bytes.
 
-    ``effective_total_bf16eq`` additionally halves f32 payloads: this
-    framework computes activations/gradients in bf16, so f32 collective
-    payloads in XLA:CPU HLO are bf16-legalization artifacts that a TPU
-    build would move at half the bytes (scalar f32 metric reductions are
-    byte-negligible).  Report both; bf16eq is the TPU-faithful figure.
+    Raw figures count HLO payload bytes as written.  Two adjusted totals:
+      * ``effective_total_bf16eq`` halves f32 payloads only (the historic
+        metric: f32 is the bf16-legalization artifact of XLA:CPU);
+      * ``effective_total_wire`` applies the full ``_WIRE_SCALE``
+        legalization map (f32 -> bf16 AND f16 -> fp8), the figure to use
+        when quantized collectives are in play.
+    Per-(kind, dtype) raw bytes are reported as ``raw_<kind>_<dtype>`` so
+    callers can isolate e.g. the fp8 gradient reduction from the bf16
+    activation traffic.
     """
     ops = parse_collectives(hlo_text)
     raw = defaultdict(float)
+    by_dtype = defaultdict(float)
     eff_bf16 = 0.0
+    eff_wire = 0.0
     for kind, shape, b in ops:
         raw[kind] += b
-        scale = 0.5 if shape.startswith("f32") else 1.0
-        eff_bf16 += COLLECTIVE_FACTORS[kind] * b * scale
+        dtype = shape.split("[", 1)[0]
+        by_dtype[(kind, dtype)] += b
+        f = COLLECTIVE_FACTORS[kind] * b
+        eff_bf16 += f * (0.5 if dtype == "f32" else 1.0)
+        eff_wire += f * _WIRE_SCALE.get(dtype, 1.0)
     eff = sum(COLLECTIVE_FACTORS[k] * v for k, v in raw.items())
     out = {f"raw_{k}": v for k, v in raw.items()}
+    out.update({f"raw_{k}_{d}": v for (k, d), v in by_dtype.items()})
     out["raw_total"] = sum(raw.values())
     out["effective_total"] = eff
     out["effective_total_bf16eq"] = eff_bf16
+    out["effective_total_wire"] = eff_wire
     out["n_ops"] = len(ops)
     return out

@@ -195,6 +195,15 @@ class TrainConfig:
     async_checkpoint: bool = False
     # distributed extras
     grad_compression: str = "none"   # none | fp8 (error-feedback)
+    # Mesh-native training (Trainer builds the mesh + sharding rules when
+    # mesh_shape is set; None keeps the single-device step).  mesh_axes
+    # defaults to ('data', 'model') truncated/extended to len(mesh_shape)
+    # by Trainer.  fsdp shards the embed params over the data axes — turn
+    # it OFF when combining with grad_compression='fp8' (the manual-DP
+    # compressed reduction needs data-replicated params).
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    mesh_axes: Optional[Tuple[str, ...]] = None
+    fsdp: bool = True
     log_every: int = 10
     # quantization telemetry + adaptive precision (telemetry subsystem)
     telemetry: bool = False          # in-graph quant-health stats as step aux

@@ -62,43 +62,52 @@ def _maybe_key(key_data: Optional[jnp.ndarray], spec: QuantSpec,
 def dot_qdq(a: jnp.ndarray, b: jnp.ndarray,
             spec_a: QuantSpec, spec_b: QuantSpec,
             *, key_data: Optional[jnp.ndarray] = None,
-            salt: int = 0, precision=None) -> jnp.ndarray:
+            salt: int = 0, precision=None,
+            axes_a=None, axes_b=None) -> jnp.ndarray:
     """QDQ both operands of ``a @ b`` then run the dot in the input dtype.
 
     ``a``: (M, K), ``b``: (K, N).  Reduction axes: 1 for a, 0 for b.
+    ``axes_a``/``axes_b``: optional logical (row, col) names for SPMD scale
+    placement (see ``quantize.scale_logical_axes``).
     """
     aq = qdq(a, spec_a, reduction_axis=1,
-             stochastic_key=_maybe_key(key_data, spec_a, salt))
+             stochastic_key=_maybe_key(key_data, spec_a, salt), axes=axes_a)
     bq = qdq(b, spec_b, reduction_axis=0,
-             stochastic_key=_maybe_key(key_data, spec_b, salt + 1))
+             stochastic_key=_maybe_key(key_data, spec_b, salt + 1),
+             axes=axes_b)
     return jax.lax.dot(aq, bq, precision=precision)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def qmatmul(x: jnp.ndarray, w: jnp.ndarray, key_data: jnp.ndarray,
-            recipe: MatmulRecipe) -> jnp.ndarray:
+            recipe: MatmulRecipe, axes=None) -> jnp.ndarray:
     """y = Q(x) @ Q(w) with recipe-defined backward quantization.
 
     x: (M, K) activations, w: (K, N) weights, key_data: uint32[2] raw PRNG
     key material (only consumed by stochastic QuantSpecs), y: (M, N).
+    ``axes``: optional logical names ``(row, k, n)`` of the matmul dims —
+    static metadata steering operand/scale sharding in all three matmuls
+    (fwd here, dgrad/wgrad in the vjp, each in its own orientation).
     """
+    ax = axes or (None, None, None)
     return dot_qdq(x, w, recipe.fwd_x, recipe.fwd_w, key_data=key_data,
-                   salt=0)
+                   salt=0, axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]))
 
 
-def _qmatmul_fwd(x, w, key_data, recipe):
-    y = qmatmul(x, w, key_data, recipe)
+def _qmatmul_fwd(x, w, key_data, recipe, axes):
+    y = qmatmul(x, w, key_data, recipe, axes)
     return y, (x, w, key_data)
 
 
-def _qmatmul_bwd(recipe, res, g):
+def _qmatmul_bwd(recipe, axes, res, g):
     x, w, key_data = res
+    row, k, n = axes or (None, None, None)
     # dgrad: dx = Q(g) @ Q(w^T); reduction over N.
     dx = dot_qdq(g, w.T, recipe.dgrad_g, recipe.dgrad_w, key_data=key_data,
-                 salt=2)
+                 salt=2, axes_a=(row, n), axes_b=(n, k))
     # wgrad: dw = Q(x^T) @ Q(g); reduction over M (tokens).
     dw = dot_qdq(x.T, g, recipe.wgrad_x, recipe.wgrad_g, key_data=key_data,
-                 salt=4)
+                 salt=4, axes_a=(k, row), axes_b=(row, n))
     return (dx.astype(x.dtype), dw.astype(w.dtype),
             jnp.zeros_like(key_data))
 
@@ -143,7 +152,8 @@ def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
                spec_a: QuantSpec, spec_b: QuantSpec,
                *, trans_a: bool = False, trans_b: bool = False,
                key_data: Optional[jnp.ndarray] = None,
-               salt: int = 0, collect_stats: bool = False):
+               salt: int = 0, collect_stats: bool = False,
+               axes_a=None, axes_b=None):
     """One matmul role through the quantize-once Pallas pipeline when its
     specs are kernel-realizable, else through ``dot_qdq`` (transposes
     materialized).
@@ -167,33 +177,40 @@ def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
                           collect_stats=collect_stats)
     ae = a.T if trans_a else a
     be = b.T if trans_b else b
-    y = dot_qdq(ae, be, spec_a, spec_b, key_data=key_data, salt=salt)
+    y = dot_qdq(ae, be, spec_a, spec_b, key_data=key_data, salt=salt,
+                axes_a=axes_a, axes_b=axes_b)
     return (y, (None, None)) if collect_stats else y
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def pallas_qmatmul(x: jnp.ndarray, w: jnp.ndarray, key_data: jnp.ndarray,
-                   recipe: MatmulRecipe) -> jnp.ndarray:
+                   recipe: MatmulRecipe, axes=None) -> jnp.ndarray:
     """``qmatmul`` with all three matmuls (fwd/dgrad/wgrad) running through
-    the fused quantize+matmul Pallas kernel.  Same signature/semantics."""
+    the fused quantize+matmul Pallas kernel.  Same signature/semantics.
+    ``axes`` only steers the QDQ-fallback roles (kernel scales live in
+    kernel-private buffers and need no placement)."""
+    ax = axes or (None, None, None)
     return _dot_fused(x, w, recipe.fwd_x, recipe.fwd_w, key_data=key_data,
-                      salt=0)
+                      salt=0, axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]))
 
 
-def _pallas_qmatmul_fwd(x, w, key_data, recipe):
-    y = pallas_qmatmul(x, w, key_data, recipe)
+def _pallas_qmatmul_fwd(x, w, key_data, recipe, axes):
+    y = pallas_qmatmul(x, w, key_data, recipe, axes)
     return y, (x, w, key_data)
 
 
-def _pallas_qmatmul_bwd(recipe, res, g):
+def _pallas_qmatmul_bwd(recipe, axes, res, g):
     x, w, key_data = res
+    row, k, n = axes or (None, None, None)
     # dgrad: dx = Q(g) @ Q(w^T); reduction over N (w read transposed
     # in-kernel via the BlockSpec index map).
     dx = _dot_fused(g, w, recipe.dgrad_g, recipe.dgrad_w, trans_b=True,
-                    key_data=key_data, salt=2)
+                    key_data=key_data, salt=2,
+                    axes_a=(row, n), axes_b=(n, k))
     # wgrad: dw = Q(x^T) @ Q(g); reduction over M (tokens).
     dw = _dot_fused(x, g, recipe.wgrad_x, recipe.wgrad_g, trans_a=True,
-                    key_data=key_data, salt=4)
+                    key_data=key_data, salt=4,
+                    axes_a=(k, row), axes_b=(row, n))
     return (dx.astype(x.dtype), dw.astype(w.dtype),
             jnp.zeros_like(key_data))
 
@@ -223,7 +240,7 @@ def _pallas_qmatmul_stats_fwd(x, w, key_data, recipe):
 
 def _pallas_qmatmul_stats_bwd(recipe, res, ct):
     g = ct[0]
-    return _pallas_qmatmul_bwd(recipe, res, g)
+    return _pallas_qmatmul_bwd(recipe, None, res, g)
 
 
 pallas_qmatmul_stats.defvjp(_pallas_qmatmul_stats_fwd,
@@ -247,24 +264,40 @@ def _zero_key() -> jnp.ndarray:
     return jnp.zeros((2,), jnp.uint32)
 
 
+def _hint2d(arr: jnp.ndarray, axes) -> jnp.ndarray:
+    """Sharding hint by logical axis names (lazy import: nn.layers imports
+    this module at load time; no context or no names -> no-op)."""
+    if axes is None or all(a is None for a in axes):
+        return arr
+    from repro.nn.layers import shard_hint
+    return shard_hint(arr, axes)
+
+
 def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
             *, bias: Optional[jnp.ndarray] = None,
             key_data: Optional[jnp.ndarray] = None,
-            impl: str = "qdq") -> jnp.ndarray:
+            impl: str = "qdq",
+            axes: Optional[Tuple[Optional[str], Optional[str],
+                                 Optional[str]]] = None) -> jnp.ndarray:
     """Linear layer over the last axis of ``x`` with per-role quantization.
 
     ``x``: (..., K), ``w``: (K, N) -> (..., N).  ``impl`` selects the
     matmul implementation ('qdq' unfused simulation | 'pallas' fused
     kernel); passthrough recipes lower to a plain dot either way.
+    ``axes`` optionally names the logical matmul dims ``(tokens, K, N)``:
+    when a sharding context is installed the flattened activation view and
+    every per-granularity scale tensor (fwd, dgrad, wgrad — each in its own
+    orientation) get ``with_sharding_constraint`` hints so the quantize-once
+    K-panels partition cleanly under GSPMD.
     """
     lead: Tuple[int, ...] = x.shape[:-1]
     k = x.shape[-1]
     if recipe.is_passthrough:
-        y = x.reshape(-1, k) @ w
+        y = _hint2d(x.reshape(-1, k), axes and axes[:2]) @ w
     else:
         if key_data is None:
             key_data = _zero_key()
-        x2d = x.reshape(-1, k)
+        x2d = _hint2d(x.reshape(-1, k), axes and axes[:2])
         # Telemetry taps (no-ops unless a collector is installed).
         # fwd-computable operand stats go to the active collection frame;
         # grad_tap transports dgrad_g/wgrad_g cotangent stats out via the
@@ -291,8 +324,9 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
                 }
         telemetry.tap_matmul(x2d, w, recipe, fused_fwd=fused_fwd)
         if y is None:
-            y = matmul_impl(impl)(x2d, w, key_data, recipe)
+            y = matmul_impl(impl)(x2d, w, key_data, recipe, axes)
         y = telemetry.grad_tap(y, recipe)
+    y = _hint2d(y, axes and (axes[0], axes[2]))
     y = y.reshape(*lead, w.shape[-1])
     if bias is not None:
         y = y + bias

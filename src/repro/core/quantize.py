@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,8 @@ import numpy as np
 from repro.core import formats as F
 
 __all__ = ["QuantSpec", "qdq", "quantize_dequantize", "compute_scale",
-           "scale_from_amax", "pow2_floor", "underflow_rate", "BF16_SPEC"]
+           "scale_from_amax", "pow2_floor", "underflow_rate", "BF16_SPEC",
+           "scale_logical_axes"]
 
 _EPS = 1e-12
 
@@ -220,17 +221,67 @@ def compute_scale(x2d: jnp.ndarray, spec: QuantSpec,
     return scale_from_amax(amax, fmt, spec.pow2_scale)
 
 
+def scale_logical_axes(granularity: str, reduction_axis: int,
+                       axes: Tuple[Optional[str], Optional[str]]):
+    """Logical axis names for a blocked scale tensor (SPMD scale placement).
+
+    ``axes`` are the 2-D operand's logical (row, col) names.  The policy
+    (mesh-native FP4 training): block/tile scale grids are sharded WITH
+    their operand's reduction axis — the per-128-group scale count along a
+    dim inherits that dim's logical name, so it partitions wherever the
+    operand's K-panels do — while token/tensor scales collapse the
+    reduction axis entirely and are replicated along it.
+    """
+    row_l, col_l = axes
+    if granularity == "tensor":
+        return ()
+    if granularity == "token":
+        return (row_l, None) if reduction_axis == 1 else (None, col_l)
+    if granularity == "block":
+        return ((row_l, col_l, None) if reduction_axis == 1
+                else (row_l, None, col_l))
+    if granularity == "tile":
+        return (row_l, None, col_l, None)
+    raise ValueError(f"unknown granularity: {granularity!r}")
+
+
+def _hint_scale(scale: jnp.ndarray, spec: QuantSpec, reduction_axis: int,
+                axes) -> jnp.ndarray:
+    """Constrain the scale tensor's sharding when a context is installed.
+
+    The lazy import breaks the core -> nn -> core cycle; it only runs at
+    trace time (no context, no ``axes`` -> zero-cost no-op)."""
+    if axes is None:
+        return scale
+    from repro.nn.layers import get_sharding_context
+    ctx = get_sharding_context()
+    if ctx is None:
+        return scale
+    logical = scale_logical_axes(spec.granularity, reduction_axis,
+                                 tuple(axes))
+    if len(logical) != scale.ndim:
+        return scale
+    sharding = ctx.activation_sharding(logical, scale.shape)
+    if sharding is None:
+        return scale
+    return jax.lax.with_sharding_constraint(scale, sharding)
+
+
 def quantize_dequantize(
     x2d: jnp.ndarray,
     spec: QuantSpec,
     reduction_axis: int,
     *,
     stochastic_key: Optional[jax.Array] = None,
+    axes: Optional[Tuple[Optional[str], Optional[str]]] = None,
 ) -> jnp.ndarray:
     """Simulated low-precision representation of ``x2d`` (Eq. 1-7).
 
     All full-size intermediates stay in the input dtype (bf16 end-to-end in
-    training); only the small per-group scales are f32.
+    training); only the small per-group scales are f32.  ``axes`` optionally
+    names the operand's logical (row, col) axes for SPMD scale placement
+    (see ``scale_logical_axes``); unnamed or context-free calls are
+    unchanged.
     """
     if spec.is_passthrough:
         return x2d
@@ -240,7 +291,8 @@ def quantize_dequantize(
     rows, cols = x2d.shape
     xb, _, _, _ = _blocked_view(x2d, spec.granularity, spec.block,
                                 reduction_axis)
-    scale = compute_scale(x2d, spec, reduction_axis).astype(x2d.dtype)
+    scale = compute_scale(x2d, spec, reduction_axis)
+    scale = _hint_scale(scale, spec, reduction_axis, axes).astype(x2d.dtype)
     key = stochastic_key if spec.stochastic else None
     y = F.round_to_format(xb / scale, fmt, stochastic_key=key) * scale
     if spec.granularity in ("block", "tile"):

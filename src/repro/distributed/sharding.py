@@ -100,6 +100,43 @@ class ShardingRules:
     def replicated(self) -> NamedSharding:
         return NamedSharding(self.mesh, P())
 
+    # -- data-parallel structure --------------------------------------------
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        """Mesh axes the batch shards over (the gradient-reduction group)."""
+        want = self.act_rules.get("batch") or ()
+        want = (want,) if isinstance(want, str) else tuple(want)
+        return tuple(a for a in want if a in self.mesh.axis_names)
+
+    @property
+    def dp_size(self) -> int:
+        return self._axis_size(self.dp_axes) if self.dp_axes else 1
+
+    def manual_over(self, axes: Sequence[str]) -> "ShardingRules":
+        """Rules for code whose ``axes`` placement is handled elsewhere —
+        inside a shard_map manual region, or a vmapped per-data-shard body
+        whose stacked leading dim already carries the data axes.
+
+        Every rule assignment referencing those mesh axes is stripped (the
+        remaining axes — e.g. 'model' under a data-manual region — keep
+        working as GSPMD-auto ``with_sharding_constraint`` targets)."""
+        drop = set(axes)
+
+        def strip(rules: Dict[str, AxisAssignment]) -> Dict[str, Any]:
+            out: Dict[str, Any] = {}
+            for k, v in rules.items():
+                if v is None:
+                    out[k] = None
+                    continue
+                t = (v,) if isinstance(v, str) else tuple(v)
+                t = tuple(a for a in t if a not in drop)
+                out[k] = t or None
+            return out
+
+        return dataclasses.replace(self, param_rules=strip(self.param_rules),
+                                   act_rules=strip(self.act_rules))
+
     # -- caches ---------------------------------------------------------------
 
     def cache_shardings(self, cache_spec_tree) -> Any:
@@ -156,6 +193,9 @@ def default_rules(mesh: Mesh, cfg=None, *, fsdp: bool = True,
     }
     act_rules: Dict[str, AxisAssignment] = {
         "batch": dp or None,
+        # flattened (batch*seq) matmul rows — qlinear's x2d view and the
+        # per-granularity quantization-scale tensors riding it
+        "tokens": dp or None,
         "seq": tp if seq_parallel else None,
         "seq_q": None,  # context-parallel attention (hillclimb override)
         "embed": None,

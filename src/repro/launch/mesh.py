@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.mesh import make_mesh
+
 __all__ = ["make_production_mesh"]
 
 
@@ -11,5 +13,4 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=("auto",) * len(axes))

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeCell, TrainConfig
 from repro.distributed.sharding import ShardingRules, opt_state_shardings
 from repro.models.model import Model
-from repro.train.train_step import make_optimizer
+from repro.train.train_step import compression_state_sharding, make_optimizer
 
 __all__ = ["train_batch_specs", "train_inputs", "prefill_inputs",
            "decode_inputs"]
@@ -52,9 +52,15 @@ def train_inputs(model: Model, tcfg: TrainConfig, cell: ShapeCell,
     opt_state = jax.eval_shape(opt.init, params)
     o_shard = opt_state_shardings(opt_state, params, p_shard, rules.mesh)
     if tcfg.grad_compression == "fp8":
+        # Error-feedback residuals: with a >1 data axis the manual-DP
+        # compressed reduction keeps one residual per data shard (leading
+        # replica axis), matching init_compression_state(dp_size=...).
+        dp = rules.dp_size
+        lead = (dp,) if dp > 1 else ()
         comp = jax.tree.map(
-            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
-        c_shard = jax.tree.map(lambda s: s, p_shard)
+            lambda p: jax.ShapeDtypeStruct(lead + p.shape, jnp.float32),
+            params)
+        c_shard = compression_state_sharding(rules, p_shard)
     else:
         comp = jax.ShapeDtypeStruct((), jnp.float32)
         c_shard = rules.replicated()

@@ -32,6 +32,12 @@ def main() -> None:
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--mesh", default="",
+                    help="mesh shape, e.g. '4,2' (axes data,model); empty "
+                         "= single-device step")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="replicate embed params over the data axes "
+                         "(required with --grad-compression fp8)")
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
@@ -43,10 +49,15 @@ def main() -> None:
     else:
         cfg = get_config(args.arch)
     model = build_model(cfg)
+    mesh_shape = (tuple(int(d) for d in args.mesh.split(","))
+                  if args.mesh else None)
+    mesh_axes = (("data", "model")[:len(mesh_shape)]
+                 if mesh_shape else None)
     tcfg = TrainConfig(
         recipe=args.recipe, total_steps=args.steps,
         global_batch=args.batch, seq_len=args.seq, learning_rate=args.lr,
         microbatch=args.microbatch, grad_compression=args.grad_compression,
+        mesh_shape=mesh_shape, mesh_axes=mesh_axes, fsdp=not args.no_fsdp,
         checkpoint_every=args.ckpt_every, checkpoint_dir=args.ckpt,
         log_every=max(args.steps // 20, 1))
     pipe = make_pipeline(args.data, cfg.vocab_size, args.seq, args.batch)

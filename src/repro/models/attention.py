@@ -198,10 +198,14 @@ def attention(
     if positions is None:
         positions = jnp.arange(sq, dtype=jnp.int32)
 
-    q = linear(x, params["wq"], recipe, cfg).reshape(b, sq, cfg.n_heads, hd)
-    k = linear(x, params["wk"], recipe, cfg).reshape(
+    q = linear(x, params["wq"], recipe, cfg,
+               axes=("tokens", "embed", "heads")
+               ).reshape(b, sq, cfg.n_heads, hd)
+    k = linear(x, params["wk"], recipe, cfg,
+               axes=("tokens", "embed", "kv_heads")).reshape(
         b, sq, cfg.n_kv_heads, hd)
-    v = linear(x, params["wv"], recipe, cfg).reshape(
+    v = linear(x, params["wv"], recipe, cfg,
+               axes=("tokens", "embed", "kv_heads")).reshape(
         b, sq, cfg.n_kv_heads, hd)
     if cfg.pos_emb == "rope":
         q = rope(q, positions, cfg.rope_theta)
@@ -233,7 +237,8 @@ def attention(
             q, k_all, v_all, positions, k_pos, causal=causal, window=window,
             chunk=cfg.attention_chunk, unroll=cfg.unroll_attention)
     out = out.reshape(b, sq, cfg.n_heads * hd)
-    return linear(out, params["wo"], recipe, cfg), new_cache
+    return linear(out, params["wo"], recipe, cfg,
+                  axes=("tokens", "heads", "embed")), new_cache
 
 
 def cross_attention(
@@ -252,12 +257,16 @@ def cross_attention(
     """
     b, sq, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = linear(x, params["wq"], recipe, cfg).reshape(b, sq, cfg.n_heads, hd)
+    q = linear(x, params["wq"], recipe, cfg,
+               axes=("tokens", "embed", "heads")
+               ).reshape(b, sq, cfg.n_heads, hd)
     if cache is None:
         skv = kv_states.shape[1]
-        k = linear(kv_states, params["wk"], recipe, cfg).reshape(
+        k = linear(kv_states, params["wk"], recipe, cfg,
+                   axes=("tokens", None, "kv_heads")).reshape(
             b, skv, cfg.n_kv_heads, hd)
-        v = linear(kv_states, params["wv"], recipe, cfg).reshape(
+        v = linear(kv_states, params["wv"], recipe, cfg,
+                   axes=("tokens", None, "kv_heads")).reshape(
             b, skv, cfg.n_kv_heads, hd)
         new_cache = {"k": k, "v": v}
     else:
@@ -270,7 +279,8 @@ def cross_attention(
                             chunk=cfg.attention_chunk,
                             unroll=cfg.unroll_attention)
     out = out.reshape(b, sq, cfg.n_heads * hd)
-    return linear(out, params["wo"], recipe, cfg), new_cache
+    return linear(out, params["wo"], recipe, cfg,
+                  axes=("tokens", "heads", "embed")), new_cache
 
 
 # ---------------------------------------------------------------------------

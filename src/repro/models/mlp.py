@@ -35,12 +35,14 @@ def mlp(params: Dict[str, jnp.ndarray], cfg: ModelConfig, x: jnp.ndarray,
     this layer's ffn cell of the active ``PrecisionPlan``;
     the nonlinearity stays in the compute dtype (§3.2: there is always a
     nonlinear op between linear layers that needs precise representation)."""
+    up_axes = ("tokens", "embed", "mlp")
     if cfg.activation == "swiglu":
-        g = linear(x, params["w_gate"], recipe, cfg)
-        u = linear(x, params["w_up"], recipe, cfg)
+        g = linear(x, params["w_gate"], recipe, cfg, axes=up_axes)
+        u = linear(x, params["w_up"], recipe, cfg, axes=up_axes)
         h = ACTIVATIONS["silu"](g) * u
     else:
         h = ACTIVATIONS[cfg.activation](
-            linear(x, params["w_up"], recipe, cfg))
+            linear(x, params["w_up"], recipe, cfg, axes=up_axes))
     h = shard_hint(h, ("batch", "seq", "mlp"))
-    return linear(h, params["w_down"], recipe, cfg)
+    return linear(h, params["w_down"], recipe, cfg,
+                  axes=("tokens", "mlp", "embed"))

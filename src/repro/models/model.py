@@ -128,7 +128,8 @@ class Model:
         else:
             w = params["head"].astype(self._dt)
         with telemetry.module_scope("head"):
-            logits = linear(x, w, plan.head_linear, cfg)
+            logits = linear(x, w, plan.head_linear, cfg,
+                            axes=("tokens", "embed", "vocab"))
         return shard_hint(logits, ("batch", "seq", "vocab"))
 
     def _plan(self, p) -> PrecisionPlan:
@@ -242,7 +243,8 @@ class Model:
                 # telemetry stays off in here: stats pushed from inside the
                 # chunk scan could not legally escape its trace scope.
                 with telemetry.suppressed():
-                    logits = linear(h_c, w, plan.head_linear, cfg)
+                    logits = linear(h_c, w, plan.head_linear, cfg,
+                                    axes=("tokens", "embed", "vocab"))
                 return self._xent_terms(logits, t_c)
 
             def body(carry, xs):

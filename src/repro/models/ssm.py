@@ -234,11 +234,16 @@ def mamba_mixer(
     b, s, _ = x.shape
     gn = st.n_groups * st.d_state
 
-    z = linear(x, params["in_z"], recipe, cfg)
-    xr = linear(x, params["in_x"], recipe, cfg)
-    br = linear(x, params["in_b"], recipe, cfg)
-    cr = linear(x, params["in_c"], recipe, cfg)
-    dt_raw = linear(x, params["in_dt"], recipe, cfg)
+    z = linear(x, params["in_z"], recipe, cfg,
+               axes=("tokens", "embed", "mamba_inner"))
+    xr = linear(x, params["in_x"], recipe, cfg,
+                axes=("tokens", "embed", "mamba_inner"))
+    br = linear(x, params["in_b"], recipe, cfg,
+                axes=("tokens", "embed", "mamba_groups"))
+    cr = linear(x, params["in_c"], recipe, cfg,
+                axes=("tokens", "embed", "mamba_groups"))
+    dt_raw = linear(x, params["in_dt"], recipe, cfg,
+                    axes=("tokens", "embed", "mamba_heads"))
     a = -jnp.exp(params["a_log"].astype(jnp.float32))
 
     if decode:
@@ -316,4 +321,5 @@ def mamba_mixer(
                          "state": final_state}
 
     y = rms_norm(y * silu(z), params["norm_scale"])
-    return linear(y, params["out_proj"], recipe, cfg), new_cache
+    return linear(y, params["out_proj"], recipe, cfg,
+                  axes=("tokens", "mamba_inner", "embed")), new_cache

@@ -205,7 +205,11 @@ def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, row:
     """
     new_cache: Dict[str, Any] = {}
     with telemetry.layer_frame(layer_idx) as tel_frame:
-        h = apply_norm(params["mixer_norm"], x, cfg.norm)
+        # Pre-norm outputs re-enter TP matmuls replicated on embed; the
+        # hints pin each sublayer input so GSPMD gathers exactly once here
+        # instead of propagating a model-sharded layout into the norm.
+        h = shard_hint(apply_norm(params["mixer_norm"], x, cfg.norm),
+                       ("batch", "seq", "embed"))
         if spec.mixer == "attn":
             with telemetry.module_scope("attn"):
                 out, c = attn_lib.attention(
@@ -224,7 +228,8 @@ def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, row:
         x = x + out
 
         if spec.cross:
-            h = apply_norm(params["cross_norm"], x, cfg.norm)
+            h = shard_hint(apply_norm(params["cross_norm"], x, cfg.norm),
+                           ("batch", "seq", "embed"))
             cc = cache.get("cross") if (cache is not None and decode) \
                 else None
             with telemetry.module_scope("cross"):
@@ -237,11 +242,13 @@ def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, row:
                 new_cache["cross"] = ccache
 
         if spec.ffn == "dense":
-            h = apply_norm(params["ffn_norm"], x, cfg.norm)
+            h = shard_hint(apply_norm(params["ffn_norm"], x, cfg.norm),
+                           ("batch", "seq", "embed"))
             with telemetry.module_scope("ffn"):
                 x = x + mlp_lib.mlp(params["ffn"], cfg, h, row.ffn_linear)
         elif spec.ffn == "moe":
-            h = apply_norm(params["ffn_norm"], x, cfg.norm)
+            h = shard_hint(apply_norm(params["ffn_norm"], x, cfg.norm),
+                           ("batch", "seq", "embed"))
             with telemetry.module_scope("moe"):
                 out, aux = moe_lib.moe(params["ffn"], cfg, h,
                                        row.ffn_linear)

@@ -19,7 +19,9 @@ __all__ = ["linear", "gelu", "silu", "relu2", "layer_norm", "rms_norm",
 
 def linear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe, cfg,
            *, bias: Optional[jnp.ndarray] = None,
-           key_data: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+           key_data: Optional[jnp.ndarray] = None,
+           axes: Optional[Tuple[Optional[str], Optional[str],
+                                Optional[str]]] = None) -> jnp.ndarray:
     """Quantized linear over the last axis of ``x``, selecting the matmul
     implementation from ``cfg.linear_impl`` ('qdq' | 'pallas').
 
@@ -29,10 +31,11 @@ def linear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe, cfg,
     stack looked up for this layer and module class — so per-layer
     precision requires no plumbing below this point.  ``cfg`` is required:
     a call site that forgot it would otherwise silently ignore the user's
-    ``linear_impl`` setting.
+    ``linear_impl`` setting.  ``axes`` names the logical matmul dims
+    ``(tokens, K, N)`` for SPMD activation/scale placement (see qlinear).
     """
     return qlinear(x, w, recipe, bias=bias, key_data=key_data,
-                   impl=cfg.linear_impl)
+                   impl=cfg.linear_impl, axes=axes)
 
 
 def gelu(x):

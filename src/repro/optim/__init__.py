@@ -3,11 +3,15 @@ from repro.optim.adamw import adamw
 from repro.optim.adafactor import adafactor
 from repro.optim.schedule import warmup_cosine
 from repro.optim.clip import clip_by_global_norm, global_norm
-from repro.optim.compression import fp8_compress_grads, init_compression_state
+from repro.optim.compression import (compressed_psum, compressed_psum_grads,
+                                     compressed_reduce_dp,
+                                     fp8_compress_grads,
+                                     init_compression_state)
 
 __all__ = ["adamw", "adafactor", "warmup_cosine", "clip_by_global_norm",
            "global_norm", "fp8_compress_grads", "init_compression_state",
-           "get_optimizer"]
+           "compressed_psum", "compressed_psum_grads",
+           "compressed_reduce_dp", "get_optimizer"]
 
 
 def get_optimizer(name: str, **kw):

@@ -6,12 +6,23 @@ to FP8-E4M3 (per-tensor scale) before the cross-replica reduction, with the
 quantization error fed back into the next step (error feedback keeps the
 scheme unbiased in the long run; Seide et al. 2014, Karimireddy et al. 2019).
 
-Two entry points:
+Three entry points:
   * ``fp8_compress_grads`` — numerics-level hook used inside train_step
     (models the compressed all-reduce; works under GSPMD where the reduction
     itself is implicit in backward).
-  * ``compressed_psum`` — explicit shard_map collective for the manual-DP
-    path: quantize -> psum over the data axes -> dequantize.
+  * ``compressed_psum`` — explicit shard_map collective for manual-DP
+    regions: the all-reduce payload is REAL ``float8_e4m3fn`` on the wire.
+    Scales are shared across the replica group (a scalar pmax) so the sum
+    of codes is well-defined, with an N-device headroom factor so the ring
+    accumulation cannot overflow the format; each shard keeps a local
+    error-feedback residual exactly like ``fp8_compress_grads``.
+  * ``compressed_reduce_dp`` — the same scheme expressed in plain GSPMD
+    for the mesh-native train step: gradients arrive with a leading
+    replica axis sharded over the data axes (one slice per data shard,
+    via ``vmap`` over batch slices) and the fp8 sum over that axis lowers
+    to an fp8 all-reduce.  Used instead of ``compressed_psum`` because
+    ``lax.scan`` over model-sharded operands inside a partial-auto
+    shard_map crashes XLA (jax 0.4.x), and the layer stack scans.
 """
 from __future__ import annotations
 
@@ -20,16 +31,27 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import formats as F
 from repro.core.quantize import QuantSpec, qdq
 
-__all__ = ["init_compression_state", "fp8_compress_grads", "compressed_psum"]
+__all__ = ["init_compression_state", "fp8_compress_grads",
+           "compressed_psum", "compressed_psum_grads",
+           "compressed_reduce_dp"]
 
 _SPEC = QuantSpec("fp8_e4m3", "tensor")
+_EPS = 1e-12
 
 
-def init_compression_state(grads_like) -> Any:
-    """Error-feedback residual, same pytree/f32 as the gradients."""
-    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+def init_compression_state(grads_like, *, dp_size: int = 1) -> Any:
+    """Error-feedback residual, same pytree/f32 as the gradients.
+
+    ``dp_size > 1`` prepends a leading replica axis: under the manual-DP
+    sharded step each data shard keeps its OWN residual, so the state is
+    ``(dp, *shape)`` sharded over the data axes (shard i holds slice i).
+    """
+    lead = () if dp_size <= 1 else (dp_size,)
+    return jax.tree.map(
+        lambda g: jnp.zeros(lead + tuple(g.shape), jnp.float32), grads_like)
 
 
 def _compress_one(g: jnp.ndarray, r: jnp.ndarray):
@@ -48,8 +70,82 @@ def fp8_compress_grads(grads, residuals) -> Tuple[Any, Any]:
     return comp, res
 
 
-def compressed_psum(x: jnp.ndarray, axis_name) -> jnp.ndarray:
-    """FP8-quantize then psum (for shard_map manual-DP reductions)."""
-    x2d = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
-    q = qdq(x2d, _SPEC, reduction_axis=1).reshape(x.shape)
-    return jax.lax.psum(q, axis_name)
+def compressed_psum(x: jnp.ndarray, residual: jnp.ndarray, axis_name,
+                    *, mean: bool = True
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """FP8 all-reduce with error feedback (shard_map manual-DP reductions).
+
+    Per replica group (``axis_name``, a name or tuple of names):
+      1. fold the residual in:          gf = x + r
+      2. shared scale (scalar pmax):    s  = pmax(amax(gf)) * N / fp8_max
+         — the N-headroom guarantees |sum of codes| <= fp8_max, so the
+         ring accumulation cannot overflow the format;
+      3. quantize and psum IN FP8:      tot = psum(f8(gf / s)) * s
+      4. local error feedback:          r' = gf - dequant(f8(gf / s))
+
+    Returns ``(reduced, new_residual)`` with ``reduced`` the group mean
+    (``mean=False`` for sum semantics).  The residual captures each
+    shard's own quantization error (not the group's summation error), the
+    same contract as ``fp8_compress_grads`` — over steps the time-average
+    of the applied reduction converges to the true mean.
+    """
+    fp8_max = jnp.float32(F.FORMATS["fp8_e4m3"].max_value)
+    gf = x.astype(jnp.float32) + residual
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name)
+    s = jnp.maximum(amax, _EPS) * n / fp8_max
+    q = (gf / s).astype(jnp.float8_e4m3fn)
+    deq = q.astype(jnp.float32) * s
+    tot = jax.lax.psum(q, axis_name).astype(jnp.float32) * s
+    out = tot / n if mean else tot
+    return out.astype(x.dtype), gf - deq
+
+
+def compressed_psum_grads(grads, residuals, axis_name) -> Tuple[Any, Any]:
+    """Tree-map ``compressed_psum`` over a gradient pytree.
+
+    Returns (mean-reduced grads, new residuals)."""
+    out = jax.tree.map(
+        lambda g, r: compressed_psum(g, r, axis_name), grads, residuals)
+    is_t = lambda x: isinstance(x, tuple)
+    red = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+    res = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+    return red, res
+
+
+def _reduce_dp_one(g: jnp.ndarray, r: jnp.ndarray, mean: bool):
+    fp8_max = jnp.float32(F.FORMATS["fp8_e4m3"].max_value)
+    gf = g.astype(jnp.float32) + r
+    n = jnp.float32(gf.shape[0])
+    amax = jnp.max(jnp.abs(gf))       # cross-shard: a scalar all-reduce
+    s = jnp.maximum(amax, _EPS) * n / fp8_max
+    q = (gf / s).astype(jnp.float8_e4m3fn)
+    deq = q.astype(jnp.float32) * s
+    # fp8 sum over the (data-sharded) replica axis == fp8 all-reduce
+    tot = jnp.sum(q, axis=0).astype(jnp.float32) * s
+    out = tot / n if mean else tot
+    return out.astype(g.dtype), gf - deq
+
+
+def compressed_reduce_dp(grads_dp, residuals, *, mean: bool = True
+                         ) -> Tuple[Any, Any]:
+    """GSPMD fp8 error-feedback reduction over a leading replica axis.
+
+    Leaves of ``grads_dp``/``residuals`` are ``(dp, *shape)`` with dim 0
+    sharded over the data axes (each data shard holds its slice).  Same
+    scheme as ``compressed_psum``: shared scale from the global amax with
+    N-slice headroom, quantize to fp8, sum IN FP8 over the replica axis —
+    which XLA partitions into a local reduce + an fp8-payload all-reduce —
+    then dequantize.  Each slice keeps its own local quantization error
+    as the new residual, so the returned residual tree keeps the leading
+    replica axis.
+
+    Returns ``(reduced, new_residuals)`` with ``reduced`` shaped like one
+    slice (the group mean; ``mean=False`` for sum semantics).
+    """
+    out = jax.tree.map(lambda g, r: _reduce_dp_one(g, r, mean),
+                       grads_dp, residuals)
+    is_t = lambda x: isinstance(x, tuple)
+    red = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+    res = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+    return red, res

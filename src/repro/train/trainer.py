@@ -24,7 +24,15 @@ Responsibilities:
   * straggler monitoring: per-step wall-time EMA outlier detection with a
     pluggable action; flags are folded into the history rows;
   * eval + metrics history; optional JSONL telemetry log
-    (``TrainConfig.telemetry_jsonl``).
+    (``TrainConfig.telemetry_jsonl``);
+  * mesh-native SPMD: pass ``rules=ShardingRules(...)`` (or set
+    ``TrainConfig.mesh_shape`` and the trainer builds the mesh +
+    ``default_rules`` itself) and every step graph is jitted with
+    ``NamedSharding`` in/out specs; ``init_state`` places params, optimizer
+    state and compression residuals on the mesh.  With
+    ``grad_compression='fp8'`` and a data axis > 1, the step runs the
+    quantize-before-communicate gradient reduction (requires
+    ``fsdp=False``).
 """
 from __future__ import annotations
 
@@ -41,11 +49,13 @@ from repro.configs.base import TrainConfig
 from repro.core.cost_model import ModelDims
 from repro.core.recipe import RECIPES, PrecisionPlan
 from repro.core.schedule import TargetPrecisionSchedule
+from repro.distributed.sharding import ShardingRules, default_rules
 from repro.models.model import Model
 from repro.optim import init_compression_state
 from repro.telemetry.controller import PrecisionController
 from repro.telemetry.writer import JsonlWriter
-from repro.train.train_step import make_optimizer, make_train_step
+from repro.train.train_step import (make_optimizer, make_train_step,
+                                    train_step_shardings)
 
 __all__ = ["Trainer", "TrainState", "StepTimeMonitor"]
 
@@ -89,11 +99,13 @@ class StepTimeMonitor:
 class Trainer:
     def __init__(self, model: Model, tcfg: TrainConfig,
                  pipeline, *, jit: bool = True,
-                 eval_pipeline=None):
+                 eval_pipeline=None,
+                 rules: Optional[ShardingRules] = None):
         self.model = model
         self.tcfg = tcfg
         self.pipeline = pipeline
         self.eval_pipeline = eval_pipeline
+        self.rules = rules if rules is not None else self._build_rules()
         self.recipe = RECIPES[tcfg.recipe]   # class template (for reports)
         n_layers = model.cfg.n_layers
         self.plan: PrecisionPlan = self._build_plan(n_layers)
@@ -123,6 +135,19 @@ class Trainer:
 
     # ------------------------------------------------------------------
 
+    def _build_rules(self) -> Optional[ShardingRules]:
+        """Mesh + default sharding rules from TrainConfig.mesh_shape."""
+        shape = self.tcfg.mesh_shape
+        if shape is None:
+            return None
+        from repro.distributed.mesh import make_mesh
+        axes = self.tcfg.mesh_axes or ("data", "model")[:len(shape)]
+        if len(axes) != len(shape):
+            raise ValueError(f"mesh_axes {axes} does not match "
+                             f"mesh_shape {shape}")
+        mesh = make_mesh(tuple(shape), tuple(axes))
+        return default_rules(mesh, self.model.cfg, fsdp=self.tcfg.fsdp)
+
     def _build_plan(self, n_layers: int) -> PrecisionPlan:
         """Resolve TrainConfig.recipe/plan_preset into a PrecisionPlan."""
         preset = self.tcfg.plan_preset
@@ -143,9 +168,19 @@ class Trainer:
         params = self.model.init(key, jnp.float32)
         opt = make_optimizer(self.model, self.tcfg)
         opt_state = opt.init(params)
-        comp_state = (init_compression_state(params)
-                      if self.tcfg.grad_compression == "fp8" else
-                      jnp.zeros((), jnp.float32))
+        use_fp8 = self.tcfg.grad_compression == "fp8"
+        dp_size = self.rules.dp_size if self.rules is not None else 1
+        comp_state = (init_compression_state(params, dp_size=dp_size)
+                      if use_fp8 else jnp.zeros((), jnp.float32))
+        if self.rules is not None:
+            # Place the state on the mesh up front so the first step does
+            # not pay a resharding transfer (and so donation stays legal).
+            p_sh, o_sh, c_sh, _, _, _ = train_step_shardings(
+                self.model, self.tcfg, self.rules)[0]
+            params = jax.device_put(params, p_sh)
+            opt_state = jax.device_put(opt_state, o_sh)
+            if use_fp8:
+                comp_state = jax.device_put(comp_state, c_sh)
         return TrainState(params, opt_state, comp_state, 0)
 
     def _step_fn(self, plan: PrecisionPlan,
@@ -156,7 +191,8 @@ class Trainer:
             tcfg = (self.tcfg if tel == self.tcfg.telemetry
                     else dataclasses.replace(self.tcfg, telemetry=tel))
             self._steps[key] = make_train_step(
-                self.model, tcfg, plan, jit=self._jit, donate=False)
+                self.model, tcfg, plan, jit=self._jit, donate=False,
+                rules=self.rules)
         return self._steps[key]
 
     # ------------------------------------------------------------------
@@ -329,7 +365,8 @@ class Trainer:
         from repro.train.train_step import make_eval_step
         recipe = recipe or RECIPES["bf16"]
         pipeline = self.eval_pipeline or self.pipeline
-        fn = make_eval_step(self.model, recipe, jit=self._jit)
+        fn = make_eval_step(self.model, recipe, jit=self._jit,
+                            rules=self.rules)
         losses = []
         for i in range(n_batches):
             batch = {k: jnp.asarray(v)

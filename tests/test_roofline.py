@@ -43,6 +43,26 @@ def test_collective_bytes_ring_factors():
     assert out["effective_total"] == pytest.approx(expected_eff)
 
 
+def test_collective_bytes_per_dtype_and_wire():
+    hlo = """
+    %ar1 = f16[1000]{0} all-reduce(%p0), to_apply=%add
+    %ar2 = f32[500]{0} all-reduce(%p1), to_apply=%add
+    %ag = bf16[100]{0} all-gather(%p2)
+    """
+    out = collective_bytes(hlo)
+    assert out["raw_all-reduce_f16"] == 1000 * 2
+    assert out["raw_all-reduce_f32"] == 500 * 4
+    assert out["raw_all-gather_bf16"] == 100 * 2
+    # wire accounting undoes XLA:CPU legalization: f16 (fp8 payload) and
+    # f32 (bf16 payload) both halve; genuine bf16 stays as-is
+    expected_wire = (2.0 * 1000 * 2 * 0.5 + 2.0 * 500 * 4 * 0.5
+                     + 1.0 * 100 * 2)
+    assert out["effective_total_wire"] == pytest.approx(expected_wire)
+    # the historic bf16eq metric halves f32 only
+    expected_bf16eq = 2.0 * 1000 * 2 + 2.0 * 500 * 4 * 0.5 + 1.0 * 100 * 2
+    assert out["effective_total_bf16eq"] == pytest.approx(expected_bf16eq)
+
+
 def test_roofline_terms_bottleneck_selection():
     t = roofline_terms(hlo_flops=197e12, hlo_bytes=0.1, collective_bytes_eff=0.1,
                        chips=256)

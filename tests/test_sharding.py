@@ -157,8 +157,11 @@ DRYRUN_SNIPPET = textwrap.dedent("""
     txt = compiled.as_text()
     n_coll = sum(txt.count(k) for k in
                  ("all-reduce", "all-gather", "reduce-scatter"))
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # one entry per partition on some jax
+        ca = ca[0] if ca else {}
     print(json.dumps({"ok": True, "collectives": n_coll,
-                      "flops": compiled.cost_analysis().get("flops", 0)}))
+                      "flops": ca.get("flops", 0)}))
 """)
 
 
@@ -169,7 +172,9 @@ def test_spmd_train_step_compiles_on_8_fake_devices():
     env = dict(os.environ,
                PYTHONPATH=os.path.abspath(
                    os.path.join(os.path.dirname(__file__), "..", "src")))
-    env.pop("JAX_PLATFORMS", None)
+    # force CPU: --xla_force_host_platform_device_count only applies there,
+    # and auto-detecting backends can stall for minutes probing TPU metadata
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", DRYRUN_SNIPPET], env=env,
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
@@ -233,10 +238,80 @@ def test_elastic_rescale_across_device_counts():
     env = dict(os.environ,
                PYTHONPATH=os.path.abspath(
                    os.path.join(os.path.dirname(__file__), "..", "src")))
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", ELASTIC_SNIPPET], env=env,
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["ok"] and res["shape"] == [1, 4]
     assert np.isfinite(res["l0"]) and np.isfinite(res["l1"])
+
+
+# ---------------------------------------------------------------------------
+# data-parallel structure on the rules (mesh-native train path)
+# ---------------------------------------------------------------------------
+
+def test_dp_axes_and_size():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg = get_config("llama-1b")
+    rules = default_rules(mesh, cfg)
+    assert rules.dp_axes == ("data",)
+    assert rules.dp_size == 16
+
+
+def test_manual_over_strips_data_axes_only():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    cfg = get_config("llama-1b")
+    rules = default_rules(mesh, cfg)
+    inner = rules.manual_over(("data",))
+    assert inner.dp_axes == ()
+    assert inner.act_rules["batch"] is None
+    # model-axis assignments survive
+    assert inner.param_rules["mlp"] == rules.param_rules["mlp"]
+    assert "model" in (inner.param_rules["mlp"] or ())
+
+
+def test_scale_logical_axes_policy():
+    from repro.core.quantize import scale_logical_axes
+    axes = ("tokens", "embed")
+    assert scale_logical_axes("tensor", 1, axes) == ()
+    # token scales collapse the reduction dim, replicate along it
+    assert scale_logical_axes("token", 1, axes) == ("tokens", None)
+    assert scale_logical_axes("token", 0, axes) == (None, "embed")
+    # block/tile scale grids ride their operand's reduction axis
+    assert scale_logical_axes("block", 1, axes) == ("tokens", "embed", None)
+    assert scale_logical_axes("block", 0, axes) == ("tokens", None, "embed")
+    assert scale_logical_axes("tile", 1, axes) == ("tokens", None,
+                                                   "embed", None)
+    with pytest.raises(ValueError):
+        scale_logical_axes("bogus", 1, axes)
+
+
+def test_production_mesh_routes_through_make_mesh(monkeypatch):
+    from repro.distributed import mesh as mesh_mod
+    from repro.launch.mesh import make_production_mesh
+    calls = {}
+
+    def fake_make_mesh(shape, axes, devices=None, axis_types=None):
+        calls["shape"], calls["axes"] = shape, axes
+        calls["axis_types"] = axis_types
+        return "mesh"
+
+    monkeypatch.setattr("repro.launch.mesh.make_mesh", fake_make_mesh)
+    assert make_production_mesh() == "mesh"
+    assert calls["shape"] == (16, 16)
+    assert calls["axes"] == ("data", "model")
+    assert calls["axis_types"] == ("auto", "auto")
+    assert make_production_mesh(multi_pod=True) == "mesh"
+    assert calls["shape"] == (2, 16, 16)
+    assert calls["axes"] == ("pod", "data", "model")
+
+
+def test_make_mesh_axis_types_validation():
+    from repro.distributed.mesh import make_mesh
+    with pytest.raises(ValueError):
+        make_mesh((1,), ("data",), axis_types=("auto", "auto"))
+    with pytest.raises(ValueError):
+        make_mesh((1,), ("data",), axis_types=("bogus",))
+    m = make_mesh((1,), ("data",), axis_types=("auto",))
+    assert m.axis_names == ("data",)
