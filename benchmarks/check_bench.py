@@ -18,6 +18,7 @@ Exit code 1 if any timing ratio regresses by more than ``--threshold``
 Usage:
     python -m benchmarks.check_bench BENCH_kernels.json fresh.json
     python -m benchmarks.check_bench --frontier BENCH_plan_frontier.json
+    python -m benchmarks.check_bench --step BENCH_step.json fresh_step.json
 """
 from __future__ import annotations
 
@@ -46,6 +47,14 @@ REQUIRED = (
 REQUIRED_FRONTIER = ("plan_frontier/points", "plan_frontier/point00",
                      "plan_frontier/acceptance")
 _POINT_RE = re.compile(r"^plan_frontier/point\d+$")
+
+# BENCH_step.json (benchmarks.profile_report) guard: the two recipe smoke
+# runs gate the fp4/bf16 step-time ratio; phase entries are required-
+# presence only (jit-delta phases are too noisy for a ratio gate on CPU).
+REQUIRED_STEP = ("step/train_step_fp4", "step/train_step_bf16",
+                 "step/phase_fwd", "step/phase_bwd", "step/phase_optim",
+                 "step/phase_quantize", "step/telemetry_overhead")
+STEP_PCT_FIELDS = ("p50_us", "p95_us", "p99_us")
 
 
 def _load(path: str) -> dict:
@@ -91,6 +100,50 @@ def check_frontier(path: str) -> int:
     return 0
 
 
+def check_step(baseline: str, current: str, threshold: float) -> int:
+    """BENCH_step.json guard: required entries + percentile fields in
+    both files, then the fp4/bf16 median-step-time ratio compared across
+    runs.  Normalizing fp4 by the same run's bf16 step cancels raw host
+    speed (the same trick as the kernel gate's NORM_KEY), so the gate
+    trips only when FP4 training got slower *relative to the bf16
+    baseline measured on the same machine*."""
+    base, cur = _load(baseline), _load(current)
+    failures = [f"required entry missing from {tag}: {name}"
+                for name in REQUIRED_STEP
+                for tag, d in (("baseline", base), ("current", cur))
+                if name not in d]
+    for tag, d in (("baseline", base), ("current", cur)):
+        for name in ("step/train_step_fp4", "step/train_step_bf16"):
+            rec = d.get(name)
+            if rec is None:
+                continue
+            for field in STEP_PCT_FIELDS:
+                if field not in rec:
+                    failures.append(f"{tag} {name}: missing percentile "
+                                    f"field {field}")
+    if failures:
+        print("[check_bench] FAILURES:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+
+    def rel(d):
+        return (d["step/train_step_fp4"]["p50_us"]
+                / d["step/train_step_bf16"]["p50_us"])
+
+    ratio = rel(cur) / rel(base)
+    print(f"[check_bench] step: fp4/bf16 p50 ratio baseline "
+          f"{rel(base):.3f}, current {rel(cur):.3f} "
+          f"({ratio:.3f}x baseline)")
+    if ratio > 1.0 + threshold:
+        print(f"[check_bench] FAILURES:", file=sys.stderr)
+        print(f"  step/train_step_fp4: fp4/bf16 step-time ratio regressed "
+              f"{ratio:.3f}x (> {1 + threshold:.2f}x)", file=sys.stderr)
+        return 1
+    print("[check_bench] step guard passed")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", nargs="?")
@@ -100,12 +153,18 @@ def main(argv=None) -> int:
     ap.add_argument("--frontier", default=None, metavar="JSON",
                     help="guard a plan_frontier BENCH JSON (required "
                     "entries + frontier monotonicity) and exit")
+    ap.add_argument("--step", action="store_true",
+                    help="treat baseline/current as BENCH_step.json "
+                    "(profile_report) files: required entries + "
+                    "percentile fields + fp4/bf16 step-time ratio gate")
     args = ap.parse_args(argv)
 
     if args.frontier:
         return check_frontier(args.frontier)
     if not args.baseline or not args.current:
         ap.error("baseline and current are required unless --frontier")
+    if args.step:
+        return check_step(args.baseline, args.current, args.threshold)
 
     base, cur = _load(args.baseline), _load(args.current)
     if NORM_KEY not in base or NORM_KEY not in cur:

@@ -36,14 +36,21 @@ RECORDS: List[Dict[str, Any]] = []
 
 
 def emit(name: str, us_per_call: float, derived: str,
-         unit: str = "us") -> None:
+         unit: str = "us", extra: Optional[Dict[str, Any]] = None) -> None:
     """Record one benchmark row.  ``unit`` defaults to microseconds;
     analytic counters (e.g. tile-QDQ counts) pass their own unit so JSON
-    consumers can separate counts from timings without string-sniffing."""
+    consumers can separate counts from timings without string-sniffing.
+    ``extra`` keys (e.g. step-time percentiles ``p50_us``/``p95_us``/
+    ``p99_us``) merge into the JSON record — same bench.v1 schema, richer
+    entries."""
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
-    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                    "unit": unit, "derived": derived})
+    rec = {"name": name, "us_per_call": round(us_per_call, 1),
+           "unit": unit, "derived": derived}
+    if extra:
+        rec.update({k: (round(v, 3) if isinstance(v, float) else v)
+                    for k, v in extra.items()})
+    RECORDS.append(rec)
     print(row, flush=True)
 
 
@@ -79,14 +86,26 @@ def train_once(cfg: ModelConfig, recipe: str, steps: int = 300,
     wall = time.time() - t0
     ev = tr.evaluate(st, n_batches=4)
     train_tail = float(np.mean([r["loss"] for r in tr.history[-20:]]))
-    return {"train_loss": train_tail, "val_loss": ev["val_loss"],
-            "val_ppl": ev["val_ppl"],
-            "us_per_step": wall / steps * 1e6,
-            "state": st, "trainer": tr}
+    out = {"train_loss": train_tail, "val_loss": ev["val_loss"],
+           "val_ppl": ev["val_ppl"],
+           "us_per_step": wall / steps * 1e6,
+           "state": st, "trainer": tr}
+    # measured per-step percentiles from the trainer's StepTimer (warmup/
+    # compile steps excluded, unlike the crude wall/steps figure above)
+    summ = tr.step_time_summary()
+    for k in ("p50_ms", "p95_ms", "p99_ms"):
+        if k in summ:
+            out[k.replace("_ms", "_us")] = summ[k] * 1e3
+    return out
 
 
-def timeit(fn, *args, n: int = 20, warmup: int = 3) -> float:
-    """Median wall-time per call in microseconds (blocking on outputs)."""
+def timeit_stats(fn, *args, n: int = 20,
+                 warmup: int = 3) -> Dict[str, float]:
+    """Wall-time stats per call in microseconds (blocking on outputs):
+    ``{"median_us", "p50_us", "p95_us", "p99_us"}`` — median is numpy's
+    interpolated median (the historical ``timeit`` value), p* are the
+    profiler's nearest-rank percentiles."""
+    from repro.telemetry.profiler import percentiles
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -94,4 +113,11 @@ def timeit(fn, *args, n: int = 20, warmup: int = 3) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    pct = percentiles(ts)
+    return {"median_us": float(np.median(ts) * 1e6),
+            **{f"{k}_us": v * 1e6 for k, v in pct.items()}}
+
+
+def timeit(fn, *args, n: int = 20, warmup: int = 3) -> float:
+    """Median wall-time per call in microseconds (blocking on outputs)."""
+    return timeit_stats(fn, *args, n=n, warmup=warmup)["median_us"]

@@ -9,13 +9,14 @@ roofline analysis instead.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit, write_json
+from benchmarks.common import emit, timeit, timeit_stats, write_json
 from repro.core.qlinear import pallas_qmatmul, qlinear, qmatmul
-from repro.core.recipe import RECIPES
+from repro.core.recipe import RECIPES, MatmulRecipe
 from repro.kernels.ref import fp4_matmul_ref
 from repro.models.attention import chunked_attention
 from repro.kernels.ref import flash_attention_ref
@@ -134,19 +135,72 @@ def _bench_telemetry_step() -> None:
                                jit=True, donate=False)
         opt_state = make_optimizer(model, tcfg).init(params)
         comp = jnp.zeros((), jnp.float32)
-        times[tel] = timeit(step, params, opt_state, comp, batch, step0,
-                            n=10)
-    emit("kernel/train_step_tiny_telemetry_off", times[False],
-         "recipe=paper_fp4;telemetry=off")
-    emit("kernel/train_step_tiny_telemetry_on", times[True],
-         f"recipe=paper_fp4;telemetry=on;"
-         f"overhead_x={times[True] / times[False]:.3f}")
+        times[tel] = timeit_stats(step, params, opt_state, comp, batch,
+                                  step0, n=10)
+    emit("kernel/train_step_tiny_telemetry_off", times[False]["median_us"],
+         "recipe=paper_fp4;telemetry=off",
+         extra={k: times[False][k] for k in ("p50_us", "p95_us", "p99_us")})
+    emit("kernel/train_step_tiny_telemetry_on", times[True]["median_us"],
+         f"recipe=paper_fp4;telemetry=on;overhead_x="
+         f"{times[True]['median_us'] / times[False]['median_us']:.3f}",
+         extra={k: times[True][k] for k in ("p50_us", "p95_us", "p99_us")})
     # production setting: sample stats every N steps (telemetry_every)
+    t_on, t_off = times[True]["median_us"], times[False]["median_us"]
     for every in (5, 10):
-        amortized = (times[True] + (every - 1) * times[False]) / every
+        amortized = (t_on + (every - 1) * t_off) / every
         emit(f"kernel/train_step_tiny_telemetry_every{every}", amortized,
              f"recipe=paper_fp4;telemetry_every={every};"
-             f"overhead_x={amortized / times[False]:.3f}")
+             f"overhead_x={amortized / t_off:.3f}")
+
+
+def measure_speed_factors(size: int = 256, n: int = 10,
+                          recipes=("bf16", "fp8", "paper_fp4",
+                                   "fine_grained_fp4")):
+    """Measure wall-clock matmul speed factors for the cost model.
+
+    For every distinct operand-spec pair appearing in the given recipes'
+    matmul roles (fwd: (fwd_x, fwd_w), dgrad: (dgrad_g, dgrad_w), wgrad:
+    (wgrad_x, wgrad_g) — exactly the pairings ``cost_model._linear_time``
+    prices), time the jitted QDQ matmul at ``size^3`` and express its
+    throughput relative to the plain matmul at the same shape — the same
+    normalization as the paper's ``_SPEED`` theory, so the table drops
+    straight into ``cost_model.calibrate``.  Keys follow
+    ``cost_model._cal_key``: ``fmt`` for passthrough, ``fmt@granularity``
+    otherwise.
+
+    Returns a ``CostCalibration``.  On this CPU container the QDQ
+    simulation is *slower* than the plain matmul (factors < 1 where theory
+    says 4x) — which is the point: the searcher should rank plans by what
+    this host actually pays, and on FP4 tensor-core hardware the same
+    harness measures the real speedup.
+    """
+    from repro.core.cost_model import _cal_key, calibrate
+    from repro.core.qlinear import dot_qdq
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (size, size), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1),
+                          (size, size), jnp.float32) * 0.05
+    t_ref = timeit(jax.jit(lambda a, b: a @ b), x, w, n=n)
+    pairs = {}
+    for rname in recipes:
+        recipe = RECIPES[rname]
+        for f in dataclasses.fields(recipe):
+            mm = getattr(recipe, f.name)
+            if not isinstance(mm, MatmulRecipe):
+                continue
+            for sa, sb in ((mm.fwd_x, mm.fwd_w), (mm.dgrad_g, mm.dgrad_w),
+                           (mm.wgrad_x, mm.wgrad_g)):
+                pairs.setdefault((_cal_key(sa), _cal_key(sb)), (sa, sb))
+    table = {}
+    for (ka, kb), (sa, sb) in sorted(pairs.items()):
+        f_mm = jax.jit(lambda a, b, sa=sa, sb=sb: dot_qdq(a, b, sa, sb))
+        t = timeit(f_mm, x, w, n=n)
+        factor = t_ref / t
+        table[(ka, kb)] = factor
+        emit(f"kernel/speed_factor_{ka}*{kb}", t,
+             f"measured_factor={factor:.4f};ref_plain_us={t_ref:.1f};"
+             f"shape={size}x{size}x{size}", unit="us")
+    return calibrate(table, source=f"kernel_bench:{size}^3")
 
 
 def run() -> None:
@@ -199,7 +253,18 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as machine-readable JSON")
+    ap.add_argument("--measure-speed", default=None, metavar="PATH",
+                    help="measure wall-clock speed factors and write a "
+                         "speed_factors.v1 JSON (feeds TrainConfig."
+                         "cost_calibration / cost_model.calibrate); skips "
+                         "the full kernel sweep")
     args = ap.parse_args()
-    run()
+    if args.measure_speed:
+        cal = measure_speed_factors()
+        cal.to_json(args.measure_speed)
+        print(f"[bench] wrote {len(cal.table)} measured speed factors -> "
+              f"{args.measure_speed}", flush=True)
+    else:
+        run()
     if args.json:
         write_json(args.json)

@@ -7,7 +7,12 @@ Sections:
   table3   target-precision schedule (Table 3)
   fig1     compute share / underflow rates / attention entropy (Fig. 1)
   kernel   micro-benchmarks
+  step     measured step/phase profile (StepTimer percentiles + MFU)
   roofline dry-run roofline table (reads artifacts/dryrun)
+
+Timing rows carry step-time percentile fields (``p50_us``/``p95_us``/
+``p99_us``) in the record where measured — one schema across table1,
+kernel, and step sections (``bench.v1``).
 """
 import argparse
 import sys
@@ -17,7 +22,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,fig1,appb,kernel,"
-                         "roofline")
+                         "step,roofline")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all emitted rows as BENCH JSON")
@@ -54,6 +59,9 @@ def main() -> None:
     if go("kernel"):
         from benchmarks import kernel_bench
         kernel_bench.run()
+    if go("step"):
+        from benchmarks import profile_report
+        profile_report.run(steps=min(args.steps, 12))
     if go("roofline"):
         from benchmarks import roofline_table
         roofline_table.run()

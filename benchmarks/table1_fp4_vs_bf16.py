@@ -18,7 +18,9 @@ def run(steps: int = 300) -> dict:
         out[recipe] = r
         emit(f"table1/gpt_{recipe}", r["us_per_step"],
              f"val_loss={r['val_loss']:.4f};val_ppl={r['val_ppl']:.2f};"
-             f"train_loss={r['train_loss']:.4f}")
+             f"train_loss={r['train_loss']:.4f}",
+             extra={k: r[k] for k in ("p50_us", "p95_us", "p99_us")
+                    if k in r})
     gap = out["paper_fp4"]["val_loss"] - out["bf16"]["val_loss"]
     emit("table1/fp4_minus_bf16_val_loss", 0.0, f"gap={gap:.4f}")
     return out

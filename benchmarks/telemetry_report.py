@@ -125,13 +125,19 @@ def bwd_table(last: Dict) -> List[str]:
 def build_report(rows: List[Dict]) -> str:
     steps, events = split_rows(rows)
     out = ["# Quantization telemetry report", ""]
-    if not steps:
+    if not rows:
         return "\n".join(out + ["(empty log)"])
-    out += [f"- steps logged: {len(steps)} "
-            f"(step {steps[0]['step']} .. {steps[-1]['step']})",
-            f"- recipes seen: "
-            f"{sorted({r.get('recipe', '?') for r in steps})}",
-            f"- controller events: {len(events)}", ""]
+    if steps:
+        out += [f"- steps logged: {len(steps)} "
+                f"(step {steps[0]['step']} .. {steps[-1]['step']})",
+                f"- recipes seen: "
+                f"{sorted({r.get('recipe', '?') for r in steps})}",
+                f"- controller events: {len(events)}", ""]
+    else:
+        # events-only log (e.g. a crashed run's tail): the step sections
+        # have nothing to say, but the decision log below still renders
+        out += ["- steps logged: 0",
+                f"- controller events: {len(events)}", ""]
     loss = series(steps, "loss")
     if loss:
         out += ["## Loss", "```",
@@ -150,17 +156,20 @@ def build_report(rows: List[Dict]) -> str:
                 "```", ""]
     # Stage-2 (target-precision) steps carry no quant stats — report the
     # last step that does.
-    layer_row = next((r for r in reversed(steps)
-                      if any(_LAYER_RE.match(k) for k in r)), steps[-1])
-    bwd_row = next((r for r in reversed(steps)
-                    if any(k.startswith("tel/bwd/") and k.endswith("/taps")
-                           and float(v) > 0 for k, v in r.items())),
-                   steps[-1])
-    out += [f"## Layer x role quant health (step {layer_row['step']}; "
-            "fwd slots mean over call sites, dgrad_g/wgrad_g from the "
-            "layer-indexed probes)", ""] + per_layer_table(layer_row) + [""]
-    out += [f"## Backward-side stats (step {bwd_row['step']}, per module "
-            "class)", ""] + bwd_table(bwd_row) + [""]
+    if steps:
+        layer_row = next((r for r in reversed(steps)
+                          if any(_LAYER_RE.match(k) for k in r)), steps[-1])
+        bwd_row = next(
+            (r for r in reversed(steps)
+             if any(k.startswith("tel/bwd/") and k.endswith("/taps")
+                    and float(v) > 0 for k, v in r.items())),
+            steps[-1])
+        out += [f"## Layer x role quant health (step {layer_row['step']}; "
+                "fwd slots mean over call sites, dgrad_g/wgrad_g from the "
+                "layer-indexed probes)", ""] \
+            + per_layer_table(layer_row) + [""]
+        out += [f"## Backward-side stats (step {bwd_row['step']}, per "
+                "module class)", ""] + bwd_table(bwd_row) + [""]
     points = [e for e in events if e.get("event") == "frontier_point"]
     if points:
         # every measured point, in search order; dominated points (the
@@ -182,7 +191,8 @@ def build_report(rows: List[Dict]) -> str:
                        f"{float(p['error']):.5f} | {mark} | "
                        f"{p.get('plan', '?')} |")
         out.append("")
-    decisions = [e for e in events if e.get("event") != "frontier_point"]
+    decisions = [e for e in events
+                 if e.get("event") not in ("frontier_point", "straggler")]
     if decisions:
         out += ["## Controller decisions", ""]
         for ev in decisions:
@@ -190,10 +200,21 @@ def build_report(rows: List[Dict]) -> str:
                            if k != "event")
             out.append(f"- **{ev['event']}** ({kv})")
         out.append("")
+    # Straggler evidence from both channels: the per-step flag folded into
+    # history rows, and the trainer's {"event": "straggler"} JSONL events
+    # (which carry the measured dt vs the detector's EMA).
+    straggler_events = [e for e in events if e.get("event") == "straggler"]
     stragglers = [r["step"] for r in steps if r.get("straggler")]
-    if stragglers:
-        out += [f"## Stragglers", "",
-                f"steps flagged by StepTimeMonitor: {stragglers}", ""]
+    if stragglers or straggler_events:
+        out += ["## Stragglers", ""]
+        if stragglers:
+            out.append(f"steps flagged by StepTimeMonitor: {stragglers}")
+        for ev in sorted(straggler_events, key=lambda e: e.get("step", 0)):
+            dt, ema = float(ev.get("dt", 0)), float(ev.get("ema", 0))
+            out.append(f"- step {ev.get('step', '?')}: {dt * 1e3:.0f}ms vs "
+                       f"EMA {ema * 1e3:.0f}ms"
+                       + (f" (x{dt / ema:.1f})" if ema > 0 else ""))
+        out.append("")
     return "\n".join(out)
 
 

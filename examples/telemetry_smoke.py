@@ -51,6 +51,23 @@ def main() -> int:
         print("[smoke] FAIL: JSONL log missing")
         return 1
 
+    # measured step-time profile (StepTimer percentiles + MFU) + async
+    # writer health -> the CI-uploaded profiler artifact
+    import json
+    summ = tr.step_time_summary()
+    summ["writer_dropped"] = tr.writer.dropped
+    summary_path = os.path.join(args.out, "profiler_summary.json")
+    with open(summary_path, "w") as f:
+        json.dump(summ, f, indent=2)
+    print(f"[smoke] profiler summary -> {summary_path}")
+    if not summ.get("steps"):
+        print("[smoke] FAIL: no post-warmup step timings recorded")
+        return 1
+    if summ["writer_dropped"]:
+        print(f"[smoke] FAIL: async writer dropped "
+              f"{summ['writer_dropped']} rows")
+        return 1
+
     from benchmarks.telemetry_report import build_report
     from repro.telemetry.writer import read_jsonl
     report = build_report(read_jsonl(jsonl))

@@ -219,6 +219,15 @@ class TrainConfig:
     plan_preset: str = "uniform"
     plan_k: int = 2                  # first_last_k: protected depth
     plan_frac: float = 0.5           # ramp: ramp fraction of the depth
+    # Measured-performance observability (telemetry.profiler):
+    # profiler_warmup steps are excluded from step-time statistics
+    # (compile + autotune); cost_calibration optionally points at a
+    # speed_factors.v1 JSON (kernel_bench --measure-speed) so the plan
+    # searcher prices plans by measured wall clock instead of the paper's
+    # theoretical bit-width factors.  Empty = paper factors (bit-exact
+    # legacy behavior).
+    profiler_warmup: int = 2
+    cost_calibration: str = ""
 
 
 # ---------------------------------------------------------------------------

@@ -29,11 +29,22 @@ the step budget.
 
 Also reproduces Fig. 1(a): the share of block compute held by attention
 linears (QKV+O), the attention scores/context matmuls, and the FFN.
+
+**Measured calibration** — the paper factors above are *theory* (bit-width
+ratios).  :func:`calibrate` turns a measured speed-factor table (e.g.
+``benchmarks.kernel_bench.measure_speed_factors``, wall-clock throughput
+of each operand-spec pair relative to the plain matmul) into a
+:class:`CostCalibration`, and every pricing entry point
+(:func:`speed_factor` / :func:`plan_cost` / :func:`schedule_cost`) takes
+an optional ``calibration=`` to price wall clock instead.  The default
+(``calibration=None``) is the paper path, bit-exact with the pre-
+calibration code (parity-tested), so Tables 2/3 reproduction never moves.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple, Union
+import json
+from typing import Dict, Mapping, Optional, Tuple, Union
 
 from repro.core.quantize import QuantSpec
 from repro.core.recipe import (RECIPES, LayerRecipe, MatmulRecipe,
@@ -42,7 +53,7 @@ from repro.core.recipe import (RECIPES, LayerRecipe, MatmulRecipe,
 __all__ = ["block_flops", "theoretical_cost", "compute_share",
            "speed_factor", "BlockDims", "LayerDims", "ModelDims",
            "plan_cost", "schedule_cost", "schedule_adjusted_cost",
-           "paper_calibrated_cost"]
+           "paper_calibrated_cost", "CostCalibration", "calibrate"]
 
 _SPEED = {"fp32": 0.5, "fp16": 1.0, "bf16": 1.0,
           "fp8_e4m3": 2.0, "fp8_e5m2": 2.0,
@@ -50,8 +61,81 @@ _SPEED = {"fp32": 0.5, "fp16": 1.0, "bf16": 1.0,
           "fp4_e2m1": 4.0, "fp4_e1m2": 4.0}
 
 
-def speed_factor(spec_a: QuantSpec, spec_b: QuantSpec) -> float:
-    """Throughput multiplier of a matmul = min of its operand formats."""
+def _cal_key(spec: QuantSpec) -> str:
+    """Calibration key of one operand spec: ``fmt`` for passthrough,
+    ``fmt@granularity`` otherwise — scale/rounding flags and block size do
+    not change kernel throughput class, granularity does (token/tensor
+    scales amortize differently from block/tile)."""
+    return spec.fmt if spec.is_passthrough else \
+        f"{spec.fmt}@{spec.granularity}"
+
+
+@dataclasses.dataclass(frozen=True)
+class CostCalibration:
+    """A measured speed-factor table: ``(key_a, key_b) -> factor`` where a
+    key is :func:`_cal_key` of an operand spec and the factor is measured
+    matmul throughput relative to the plain (bf16/fp16) matmul at the same
+    shape — the same normalization as the paper's ``_SPEED`` theory, so
+    calibrated and paper costs share one unit (fp16-matmul time).
+
+    Lookup order: exact ``(a, b)``, swapped ``(b, a)``, then the
+    format-only pair (granularity wildcards), then ``None`` — callers fall
+    back to the paper factor, so a partial measurement still prices every
+    plan.
+    """
+
+    table: Mapping[Tuple[str, str], float]
+    source: str = "measured"
+
+    def lookup(self, spec_a: QuantSpec,
+               spec_b: QuantSpec) -> Optional[float]:
+        a, b = _cal_key(spec_a), _cal_key(spec_b)
+        for key in ((a, b), (b, a),
+                    (spec_a.fmt, spec_b.fmt), (spec_b.fmt, spec_a.fmt)):
+            if key in self.table:
+                return float(self.table[key])
+        return None
+
+    # -- persistence (kernel_bench --measure-speed writes this form) ------
+
+    def to_json(self, path: str) -> None:
+        payload = {"schema": "speed_factors.v1", "source": self.source,
+                   "factors": {f"{a}|{b}": f
+                               for (a, b), f in sorted(self.table.items())}}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+
+    @classmethod
+    def from_json(cls, path: str) -> "CostCalibration":
+        with open(path) as f:
+            payload = json.load(f)
+        return calibrate(payload["factors"],
+                         source=payload.get("source", path))
+
+
+def calibrate(measured: Mapping, source: str = "measured"
+              ) -> CostCalibration:
+    """Build a :class:`CostCalibration` from a measured table whose keys
+    are ``(key_a, key_b)`` tuples or ``"key_a|key_b"`` strings (the JSON
+    form)."""
+    table: Dict[Tuple[str, str], float] = {}
+    for k, v in measured.items():
+        if isinstance(k, str):
+            a, _, b = k.partition("|")
+            k = (a, b)
+        table[(str(k[0]), str(k[1]))] = float(v)
+    return CostCalibration(table, source=source)
+
+
+def speed_factor(spec_a: QuantSpec, spec_b: QuantSpec,
+                 calibration: Optional[CostCalibration] = None) -> float:
+    """Throughput multiplier of a matmul: the measured factor when a
+    ``calibration`` covers the pair, else the paper theory — min of the
+    operand formats' assumed speedups."""
+    if calibration is not None:
+        f = calibration.lookup(spec_a, spec_b)
+        if f is not None:
+            return f
     return min(_SPEED[spec_a.fmt], _SPEED[spec_b.fmt])
 
 
@@ -131,6 +215,14 @@ class ModelDims:
     def n_layers(self) -> int:
         return len(self.layers)
 
+    @property
+    def total_fwd_flops(self) -> float:
+        """Forward matmul flops per token, whole model (linears + SDPA +
+        lm-head) — the numerator of tokens/sec-based MFU
+        (``telemetry.profiler.train_step_flops``)."""
+        return sum(ld.attn_linear + ld.attn_sdpa + ld.ffn
+                   for ld in self.layers) + self.head_flops
+
     @classmethod
     def from_block(cls, d: BlockDims, n_layers: int) -> "ModelDims":
         """Uniform depth from a single block's dims, head excluded (the
@@ -187,22 +279,26 @@ class ModelDims:
 # Pricing
 # ---------------------------------------------------------------------------
 
-def _mm_time(flops: float, spec_a: QuantSpec, spec_b: QuantSpec) -> float:
-    return flops / speed_factor(spec_a, spec_b)
+def _mm_time(flops: float, spec_a: QuantSpec, spec_b: QuantSpec,
+             cal: Optional[CostCalibration] = None) -> float:
+    return flops / speed_factor(spec_a, spec_b, cal)
 
 
-def _linear_time(flops_fwd: float, mm: MatmulRecipe) -> float:
+def _linear_time(flops_fwd: float, mm: MatmulRecipe,
+                 cal: Optional[CostCalibration] = None) -> float:
     """fwd + dgrad + wgrad matmul time for a linear of given forward FLOPs."""
-    t = _mm_time(flops_fwd, mm.fwd_x, mm.fwd_w)
-    t += _mm_time(flops_fwd, mm.dgrad_g, mm.dgrad_w)
-    t += _mm_time(flops_fwd, mm.wgrad_x, mm.wgrad_g)
+    t = _mm_time(flops_fwd, mm.fwd_x, mm.fwd_w, cal)
+    t += _mm_time(flops_fwd, mm.dgrad_g, mm.dgrad_w, cal)
+    t += _mm_time(flops_fwd, mm.wgrad_x, mm.wgrad_g, cal)
     return t
 
 
-def _layer_terms(ld: LayerDims, row: LayerRecipe) -> Tuple[float, float]:
+def _layer_terms(ld: LayerDims, row: LayerRecipe,
+                 cal: Optional[CostCalibration] = None
+                 ) -> Tuple[float, float]:
     """(time, fp16-baseline time) of one layer under one plan row."""
-    t = _linear_time(ld.attn_linear, row.attn_linear)
-    t += _linear_time(ld.ffn, row.ffn_linear)
+    t = _linear_time(ld.attn_linear, row.attn_linear, cal)
+    t += _linear_time(ld.ffn, row.ffn_linear, cal)
     t += 3.0 * ld.attn_sdpa  # fwd + bwd at FP16 speed
     baseline = 3.0 * (ld.attn_linear + ld.ffn + ld.attn_sdpa)
     return t, baseline
@@ -223,7 +319,8 @@ def _coerce_plan(p: Union[PrecisionPlan, PrecisionRecipe],
 
 
 def plan_cost(plan: Union[PrecisionPlan, PrecisionRecipe],
-              dims: ModelDims) -> float:
+              dims: ModelDims,
+              calibration: Optional[CostCalibration] = None) -> float:
     """Matmul time of a whole plan vs the FP16 baseline (Tables 2/3
     "Computation cost", resolved per (layer, class, role)).
 
@@ -233,6 +330,10 @@ def plan_cost(plan: Union[PrecisionPlan, PrecisionRecipe],
     of that one group — the *identical* float arithmetic as the old
     single-block recipe path, so a uniform plan prices bit-identically to
     ``theoretical_cost`` of its template at any depth.
+
+    ``calibration`` swaps the paper speed factors for a measured table
+    (see :func:`calibrate`); ``None`` — the default — keeps the paper
+    path, bitwise.
     """
     plan = _coerce_plan(plan, dims.n_layers)
     if plan.n_layers != dims.n_layers:
@@ -241,10 +342,11 @@ def plan_cost(plan: Union[PrecisionPlan, PrecisionRecipe],
     groups: Dict[Tuple[LayerDims, LayerRecipe], int] = {}
     for ld, row in zip(dims.layers, plan.layers):
         groups[(ld, row)] = groups.get((ld, row), 0) + 1
-    terms = [(cnt, *_layer_terms(ld, row))
+    terms = [(cnt, *_layer_terms(ld, row, calibration))
              for (ld, row), cnt in groups.items()]
     if dims.head_flops:
-        terms.append((1, _linear_time(dims.head_flops, plan.head_linear),
+        terms.append((1, _linear_time(dims.head_flops, plan.head_linear,
+                                      calibration),
                       3.0 * dims.head_flops))
     if len(terms) == 1:  # uniform: depth cancels exactly (parity path)
         _, t, baseline = terms[0]
@@ -266,7 +368,8 @@ def theoretical_cost(recipe: Union[PrecisionRecipe, PrecisionPlan],
 def schedule_cost(plan: Union[PrecisionPlan, PrecisionRecipe],
                   dims: ModelDims, *,
                   target: Optional[PrecisionPlan] = None,
-                  total_steps: Optional[int] = None) -> float:
+                  total_steps: Optional[int] = None,
+                  calibration: Optional[CostCalibration] = None) -> float:
     """Cost with the §3.3 stage-2 switch integrated over the step budget.
 
     Stage 2 runs ``stage2_plan(plan, target)`` (default: the uniform BF16
@@ -275,13 +378,13 @@ def schedule_cost(plan: Union[PrecisionPlan, PrecisionRecipe],
     (``round(total * (1 - frac))``); without, the continuous fraction is
     used.  ``target_precision_frac <= 0`` disables stage 2."""
     plan = _coerce_plan(plan, dims.n_layers)
-    lo = plan_cost(plan, dims)
+    lo = plan_cost(plan, dims, calibration)
     frac = plan.target_precision_frac
     if frac <= 0.0:
         return lo
     tgt = target if target is not None else PrecisionPlan.uniform(
         RECIPES["bf16"], plan.n_layers)
-    hi = plan_cost(stage2_plan(plan, tgt), dims)
+    hi = plan_cost(stage2_plan(plan, tgt), dims, calibration)
     if total_steps:
         switch = int(round(total_steps * (1.0 - frac)))
         return (switch * lo + (total_steps - switch) * hi) / total_steps

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from repro.core.quantize import QuantSpec, qdq
 from repro.core.recipe import MatmulRecipe
 from repro.telemetry import collect as telemetry
+from repro.telemetry.profiler import graph_span
 
 __all__ = ["qmatmul", "pallas_qmatmul", "pallas_qmatmul_stats", "qlinear",
            "dot_qdq", "kernel_quant_mode", "matmul_impl"]
@@ -70,11 +71,13 @@ def dot_qdq(a: jnp.ndarray, b: jnp.ndarray,
     ``axes_a``/``axes_b``: optional logical (row, col) names for SPMD scale
     placement (see ``quantize.scale_logical_axes``).
     """
-    aq = qdq(a, spec_a, reduction_axis=1,
-             stochastic_key=_maybe_key(key_data, spec_a, salt), axes=axes_a)
-    bq = qdq(b, spec_b, reduction_axis=0,
-             stochastic_key=_maybe_key(key_data, spec_b, salt + 1),
-             axes=axes_b)
+    with graph_span("quantize"):   # phase metadata for trace attribution
+        aq = qdq(a, spec_a, reduction_axis=1,
+                 stochastic_key=_maybe_key(key_data, spec_a, salt),
+                 axes=axes_a)
+        bq = qdq(b, spec_b, reduction_axis=0,
+                 stochastic_key=_maybe_key(key_data, spec_b, salt + 1),
+                 axes=axes_b)
     return jax.lax.dot(aq, bq, precision=precision)
 
 

@@ -38,6 +38,13 @@ def main() -> None:
     ap.add_argument("--no-fsdp", action="store_true",
                     help="replicate embed params over the data axes "
                          "(required with --grad-compression fp8)")
+    ap.add_argument("--telemetry-jsonl", default="",
+                    help="JSONL metrics log (written off the critical "
+                         "path by the async writer)")
+    ap.add_argument("--cost-calibration", default="",
+                    help="measured speed-factor JSON from "
+                         "'kernel_bench --measure-speed' (empty = paper "
+                         "theory factors)")
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
@@ -59,12 +66,22 @@ def main() -> None:
         microbatch=args.microbatch, grad_compression=args.grad_compression,
         mesh_shape=mesh_shape, mesh_axes=mesh_axes, fsdp=not args.no_fsdp,
         checkpoint_every=args.ckpt_every, checkpoint_dir=args.ckpt,
+        telemetry_jsonl=args.telemetry_jsonl,
+        cost_calibration=args.cost_calibration,
         log_every=max(args.steps // 20, 1))
     pipe = make_pipeline(args.data, cfg.vocab_size, args.seq, args.batch)
     trainer = Trainer(model, tcfg, pipe)
     state = trainer.resume() if args.resume else None
     state = trainer.train(state, log=print)
     print("eval:", trainer.evaluate(state))
+    summ = trainer.step_time_summary()
+    if summ.get("steps"):
+        print("step-time: "
+              + " ".join(f"{k}={summ[k]:.1f}" for k in
+                         ("p50_ms", "p95_ms", "p99_ms") if k in summ)
+              + (f" tokens/s={summ['tokens_per_sec']:.0f}"
+                 if "tokens_per_sec" in summ else "")
+              + (f" mfu={summ['mfu']:.4f}" if "mfu" in summ else ""))
 
 
 if __name__ == "__main__":

@@ -49,7 +49,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ControllerSettings
 from repro.core import recipe as recipe_lib
-from repro.core.cost_model import ModelDims, plan_cost
+from repro.core.cost_model import CostCalibration, ModelDims, plan_cost
 from repro.core.schedule import TargetPrecisionSchedule
 from repro.telemetry.collect import SCOPE_CLASS, cell_error_signals
 
@@ -141,11 +141,21 @@ class PlanSearcher:
 
     All state is JSON-able and float-exact through a json round-trip, so
     checkpoint resume replays the search bit-exactly.
+
+    ``calibration`` (a ``cost_model.CostCalibration``) swaps the paper
+    speed factors for measured wall-clock throughput in every
+    ``plan_cost`` the search makes — frontier points, budget checks and
+    candidate ranking all price the same way, so the frontier is measured
+    on BOTH axes.  It is configuration, not search state: it does not
+    persist in ``state_dict`` and a resume must be constructed with the
+    same table to replay identically.
     """
 
-    def __init__(self, dims: ModelDims, settings: ControllerSettings):
+    def __init__(self, dims: ModelDims, settings: ControllerSettings,
+                 calibration: Optional[CostCalibration] = None):
         self.dims = dims
         self.cfg = settings
+        self.calibration = calibration
         self.cell_err: Dict[str, float] = {}   # per-cell rel_err EMA
         self.edits: List[List[str]] = []       # applied [op, cell] pairs
         self.frontier: List[Dict] = []         # Pareto-pruned points
@@ -225,7 +235,7 @@ class PlanSearcher:
         overlay = overlay or (lambda p: p)
         cur = overlay(self.apply(base))
         point = {"event": "frontier_point", "step": step,
-                 "cost": plan_cost(cur, self.dims),
+                 "cost": plan_cost(cur, self.dims, self.calibration),
                  "error": self._err_sum / self._err_n,
                  "plan": cur.name,
                  "edits": [list(e) for e in self.edits]}
@@ -245,7 +255,7 @@ class PlanSearcher:
         events.append({"event": "plan_search", "step": step,
                        "op": move[0], "cell": move[1],
                        "cell_error": self.cell_err.get(move[1]),
-                       "cost": plan_cost(new, self.dims),
+                       "cost": plan_cost(new, self.dims, self.calibration),
                        "plan": new.name})
         return events
 
@@ -278,7 +288,8 @@ class PlanSearcher:
                 base, self.edits + [["promote", cell]]))
             if cand == cur:
                 continue
-            if budget <= 0 or plan_cost(cand, self.dims) <= budget:
+            if budget <= 0 or plan_cost(cand, self.dims,
+                                        self.calibration) <= budget:
                 return ("promote", cell)
             break  # worst cell busts the budget: free cost via demotion
         # Demote the healthiest cell's wgrad roles (never dgrad).
@@ -325,7 +336,8 @@ class PrecisionController:
 
     def __init__(self, schedule: TargetPrecisionSchedule,
                  settings: Optional[ControllerSettings] = None,
-                 dims: Optional[ModelDims] = None):
+                 dims: Optional[ModelDims] = None,
+                 calibration: Optional[CostCalibration] = None):
         self.schedule = schedule
         self.cfg = settings or ControllerSettings()
         self.error_ema: Optional[float] = None
@@ -346,7 +358,8 @@ class PrecisionController:
                     "ControllerSettings.plan_search needs the model's "
                     "ModelDims — pass PrecisionController(..., dims=...) "
                     "(the Trainer derives them from ModelConfig)")
-            self.searcher = PlanSearcher(dims, self.cfg)
+            self.searcher = PlanSearcher(dims, self.cfg,
+                                         calibration=calibration)
 
     # -- plan selection ----------------------------------------------------
 

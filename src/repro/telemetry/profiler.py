@@ -1,0 +1,209 @@
+"""Measured-performance profiling: phase spans, step timing, MFU.
+
+The paper's efficiency claims are theoretical (speed factors derived from
+bit-widths); this module produces the *measured* side of that argument —
+per-phase trace annotations, wall-clock step-time percentiles, tokens/sec
+and MFU — so every perf change in the repo can be judged by wall clock
+(cf. Quartet's measured-throughput optimality argument, PAPERS.md).
+
+Three pieces:
+
+  * **Spans** — :func:`phase_span` wraps a *host-side* region of the train
+    loop in a ``jax.profiler.TraceAnnotation`` (visible as a named slice in
+    a captured trace); :func:`graph_span` is the *trace-time* counterpart
+    (``jax.named_scope``) used inside jitted code, so the quantize / fwd /
+    bwd / optim / collective regions carry their phase name into the HLO
+    metadata and any xprof / perfetto trace.
+  * **StepTimer** — rolling step-time statistics with correct device-sync
+    discipline: callers time ``fn(...)`` to the ``block_until_ready`` of
+    its outputs (``time_call`` does this for you), the first ``warmup``
+    records are excluded (compile + autotune), and :meth:`summary` reports
+    p50/p95/p99/mean over a bounded rolling window plus throughput
+    (tokens/sec) and MFU when given the model's flop count.
+  * **Flops/MFU helpers** — :func:`train_step_flops` turns
+    ``core.cost_model.ModelDims`` into a per-step training-flop count
+    (fwd + dgrad + wgrad = 3x forward matmul flops);
+    :func:`device_peak_flops` provides the peak-flops denominator (known
+    TPU generations, ``REPRO_PEAK_FLOPS`` env override, a nominal CPU
+    figure so smoke runs still produce a number).
+
+Capturing a real trace around the annotated regions:
+
+    with jax.profiler.trace("/tmp/trace"):   # or profiler server + xprof
+        trainer.train(num_steps=20)
+
+then open the trace in TensorBoard/xprof — the ``data``/``step``/``host``
+host spans and the ``quantize``/``fwd``/``bwd``/``optim``/``grad_comms``
+graph scopes appear by name.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+
+__all__ = ["phase_span", "graph_span", "percentiles", "StepTimer",
+           "train_step_flops", "device_peak_flops", "PHASES"]
+
+# Canonical phase names used by the trainer / train_step wiring; free-form
+# names are fine too, these just keep traces and reports consistent.
+PHASES = ("data", "quantize", "fwd", "bwd", "optim", "collective", "host")
+
+
+@contextlib.contextmanager
+def phase_span(name: str):
+    """Host-side span: annotate a region of host code (data loading, the
+    dispatch+sync of one step, controller/writer work) so it shows as a
+    named slice in a ``jax.profiler`` trace.  No-op overhead when no trace
+    is being captured (~sub-microsecond), so it is always on."""
+    ann = getattr(jax.profiler, "TraceAnnotation", None)
+    if ann is None:  # very old jax: annotation API absent
+        yield
+        return
+    with ann(name):
+        yield
+
+
+def graph_span(name: str):
+    """Trace-time span for *jitted* code: a ``jax.named_scope`` context.
+    Ops traced under it carry ``name`` in their HLO metadata, which xprof
+    uses to attribute device time to phases (quantize/fwd/bwd/optim/...).
+    Pure metadata — the compiled computation is unchanged."""
+    return jax.named_scope(name)
+
+
+def percentiles(xs: Sequence[float],
+                qs: Sequence[float] = (50.0, 95.0, 99.0)) -> Dict[str, float]:
+    """Nearest-rank percentiles of ``xs`` as ``{"p50": ..., ...}``.
+
+    Deterministic (no interpolation) and dependency-free so report code and
+    tests agree exactly; empty input yields NaNs.
+    """
+    out: Dict[str, float] = {}
+    s = sorted(xs)
+    for q in qs:
+        key = f"p{int(q) if float(q).is_integer() else q}"
+        if not s:
+            out[key] = float("nan")
+            continue
+        rank = max(1, -(-len(s) * q // 100))  # ceil(n*q/100), 1-based
+        out[key] = float(s[int(rank) - 1])
+    return out
+
+
+class StepTimer:
+    """Rolling wall-clock step statistics with warmup exclusion.
+
+    Record either with :meth:`record` (caller already blocked on device
+    outputs — the trainer's path) or :meth:`time_call`, which runs
+    ``fn(*args)``, blocks via ``jax.block_until_ready`` on the result (the
+    device-sync discipline: without it you time the dispatch, not the
+    step), records, and returns the result.
+
+    The first ``warmup`` records are counted (``n_total``) but excluded
+    from statistics — they measure compilation, not steady state.  Kept
+    times live in a bounded rolling window (``window`` entries) so a long
+    run's summary reflects recent behavior and memory stays constant.
+    """
+
+    def __init__(self, warmup: int = 2, window: int = 1024):
+        self.warmup = warmup
+        self.window = window
+        self.n_total = 0
+        self._times: collections.deque = collections.deque(maxlen=window)
+
+    def record(self, seconds: float) -> None:
+        self.n_total += 1
+        if self.n_total > self.warmup:
+            self._times.append(float(seconds))
+
+    def time_call(self, fn: Callable, *args: Any, **kw: Any) -> Any:
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        self.record(time.perf_counter() - t0)
+        return out
+
+    @property
+    def times(self) -> List[float]:
+        """Post-warmup step times (seconds), oldest first."""
+        return list(self._times)
+
+    def summary(self, tokens_per_step: Optional[float] = None,
+                flops_per_step: Optional[float] = None,
+                peak_flops: Optional[float] = None) -> Dict[str, float]:
+        """Step-time stats: ``steps`` (post-warmup count), ``warmup``,
+        ``mean_ms``/``p50_ms``/``p95_ms``/``p99_ms``, and — when the caller
+        supplies the model numbers — ``tokens_per_sec`` and ``mfu``, both
+        computed at the p50 step time (median: robust to straggler steps).
+        """
+        ts = self.times
+        out: Dict[str, float] = {"steps": len(ts), "warmup": self.warmup}
+        if not ts:
+            return out
+        pct = percentiles(ts)
+        out["mean_ms"] = sum(ts) / len(ts) * 1e3
+        for k, v in pct.items():
+            out[f"{k}_ms"] = v * 1e3
+        p50 = pct["p50"]
+        if tokens_per_step is not None and p50 > 0:
+            out["tokens_per_sec"] = tokens_per_step / p50
+        if flops_per_step is not None and p50 > 0:
+            out["flops_per_sec"] = flops_per_step / p50
+            if peak_flops is None:
+                peak_flops = device_peak_flops()
+            out["mfu"] = flops_per_step / p50 / peak_flops
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Flops / MFU
+# ---------------------------------------------------------------------------
+
+def train_step_flops(dims, tokens_per_step: float) -> float:
+    """Training matmul flops of one step from ``cost_model.ModelDims``.
+
+    ``dims.total_fwd_flops`` is forward matmul flops per token (already
+    2x mult+add); training runs fwd + dgrad + wgrad = 3x forward.  This is
+    the model-flops convention of the PaLM MFU definition — rematerialized
+    recompute is deliberately NOT counted, so MFU measures useful work.
+    """
+    return 3.0 * dims.total_fwd_flops * tokens_per_step
+
+
+# Peak dense matmul throughput (flops/sec, bf16) by TPU device kind, for
+# the MFU denominator.  The CPU fallback is a nominal figure (one AVX-512
+# core's ~100 GF/s) — CPU "MFU" is only meaningful as a run-to-run trend,
+# which is exactly how BENCH_step.json uses it.
+_PEAK_FLOPS = {
+    "TPU v4": 275e12,
+    "TPU v5 lite": 197e12,
+    "TPU v5e": 197e12,
+    "TPU v5p": 459e12,
+    "TPU v6 lite": 918e12,
+    "TPU v6e": 918e12,
+    "cpu": 1e11,
+}
+
+
+def device_peak_flops(device=None) -> float:
+    """Peak flops/sec of ``device`` (default: the first local device).
+
+    Resolution order: ``REPRO_PEAK_FLOPS`` env var (authoritative — set it
+    when your part's spec is known), the known-TPU table, the CPU nominal
+    figure.  Unknown accelerators fall back to the CPU figure rather than
+    raising: MFU should degrade to "trend-only", never crash a report.
+    """
+    env = os.environ.get("REPRO_PEAK_FLOPS")
+    if env:
+        return float(env)
+    device = device or jax.devices()[0]
+    kind = getattr(device, "device_kind", "cpu")
+    for name, peak in _PEAK_FLOPS.items():
+        if name != "cpu" and kind.lower().startswith(name.lower()):
+            return peak
+    return _PEAK_FLOPS["cpu"]

@@ -43,6 +43,7 @@ from repro.nn import layers
 from repro.optim import (clip_by_global_norm, compressed_reduce_dp,
                          fp8_compress_grads, get_optimizer, warmup_cosine)
 from repro.telemetry import collect as telemetry
+from repro.telemetry.profiler import graph_span
 
 __all__ = ["make_train_step", "make_eval_step", "make_optimizer",
            "train_step_shardings"]
@@ -178,11 +179,17 @@ def make_train_step(model: Model, tcfg: TrainConfig,
     # collector, no probes, bit-identical graph.
     collector = telemetry.TelemetryCollector() if tcfg.telemetry else None
 
+    # Phase scopes (telemetry.profiler.graph_span = jax.named_scope) are
+    # pure HLO metadata: xprof attributes device time to fwd/bwd/optim/
+    # collective by name, and the compiled computation is unchanged.  The
+    # forward trace runs under bwd/fwd (value_and_grad traces it there);
+    # backward-only ops carry bwd alone.
     def loss_fn(params, batch):
-        return model.loss(params, batch, plan)
+        with graph_span("fwd"):
+            return model.loss(params, batch, plan)
 
     def loss_fn_tel(params, batch, probes):
-        with telemetry.collecting(collector, probes):
+        with graph_span("fwd"), telemetry.collecting(collector, probes):
             loss, metrics = model.loss(params, batch, plan)
             metrics = dict(metrics)
             metrics.update(collector.drain_root())
@@ -275,14 +282,16 @@ def make_train_step(model: Model, tcfg: TrainConfig,
 
         def sharded_grads(params, comp_state, batch):
             batch_dp = jax.tree.map(_split_dp, batch)
-            with layers.sharding_context(inner_rules):
+            with graph_span("bwd"), layers.sharding_context(inner_rules):
                 grads_dp, metrics_dp = jax.vmap(
                     compute_grads, in_axes=(None, 0))(params, batch_dp)
-            # pin the replica axis to the data shards so quantization and
-            # error feedback stay local (one slice per shard)
-            grads_dp = jax.tree.map(jax.lax.with_sharding_constraint,
-                                    grads_dp, c_shards)
-            grads, comp_state = compressed_reduce_dp(grads_dp, comp_state)
+            with graph_span("collective"):
+                # pin the replica axis to the data shards so quantization
+                # and error feedback stay local (one slice per shard)
+                grads_dp = jax.tree.map(jax.lax.with_sharding_constraint,
+                                        grads_dp, c_shards)
+                grads, comp_state = compressed_reduce_dp(grads_dp,
+                                                         comp_state)
             return grads, comp_state, jax.tree.map(_reduce_metric,
                                                    metrics_dp)
 
@@ -300,15 +309,18 @@ def make_train_step(model: Model, tcfg: TrainConfig,
                     metrics.update(telemetry.grad_norm_metrics(grads))
                 grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
             else:
-                grads, metrics = compute_grads(params, batch)
+                with graph_span("bwd"):
+                    grads, metrics = compute_grads(params, batch)
                 if collector is not None:
                     metrics.update(telemetry.grad_norm_metrics(grads))
                 grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
                 if use_compression:
-                    grads, comp_state = fp8_compress_grads(grads,
-                                                           comp_state)
-            lr = lr_fn(step) * lr_scale
-            params, opt_state = opt.update(grads, opt_state, params, lr)
+                    with graph_span("collective"):
+                        grads, comp_state = fp8_compress_grads(grads,
+                                                               comp_state)
+            with graph_span("optim"):
+                lr = lr_fn(step) * lr_scale
+                params, opt_state = opt.update(grads, opt_state, params, lr)
             metrics = dict(metrics)
             metrics["grad_norm"] = gnorm
             metrics["lr"] = lr

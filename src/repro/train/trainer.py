@@ -22,7 +22,14 @@ Responsibilities:
     ``resume()`` continues bit-exact across the switch boundary AND across
     a per-layer demotion boundary (both tested);
   * straggler monitoring: per-step wall-time EMA outlier detection with a
-    pluggable action; flags are folded into the history rows;
+    pluggable action; flags are folded into the history rows and flagged
+    steps are emitted as ``{"event": "straggler", ...}`` JSONL events;
+  * measured-performance observability: every step is timed with device
+    sync into a ``telemetry.profiler.StepTimer`` (``step_time_summary()``
+    reports p50/p95/p99, tokens/sec, MFU), the loop's data/step/host
+    regions carry ``jax.profiler`` phase spans, and the JSONL stream goes
+    through the host-offloaded ``AsyncJsonlWriter`` (bounded queue +
+    writer thread) so logging never blocks the step;
   * eval + metrics history; optional JSONL telemetry log
     (``TrainConfig.telemetry_jsonl``);
   * mesh-native SPMD: pass ``rules=ShardingRules(...)`` (or set
@@ -46,14 +53,15 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import TrainConfig
-from repro.core.cost_model import ModelDims
+from repro.core.cost_model import CostCalibration, ModelDims
 from repro.core.recipe import RECIPES, PrecisionPlan
 from repro.core.schedule import TargetPrecisionSchedule
 from repro.distributed.sharding import ShardingRules, default_rules
 from repro.models.model import Model
 from repro.optim import init_compression_state
 from repro.telemetry.controller import PrecisionController
-from repro.telemetry.writer import JsonlWriter
+from repro.telemetry.profiler import StepTimer, phase_span, train_step_flops
+from repro.telemetry.writer import AsyncJsonlWriter
 from repro.train.train_step import (make_optimizer, make_train_step,
                                     train_step_shardings)
 
@@ -122,16 +130,25 @@ class Trainer:
             self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
                                           keep=tcfg.keep_checkpoints,
                                           async_save=tcfg.async_checkpoint)
+        # layer-resolved flops: plan-searcher cost pricing + MFU accounting
+        self.dims = ModelDims.from_config(model.cfg, seq_len=tcfg.seq_len)
+        # measured wall-clock speed factors (kernel_bench --measure-speed);
+        # None keeps the paper's theoretical factors bit-exact
+        self.calibration: Optional[CostCalibration] = None
+        if tcfg.cost_calibration:
+            self.calibration = CostCalibration.from_json(tcfg.cost_calibration)
         self.controller: Optional[PrecisionController] = None
         if tcfg.controller is not None:
-            # layer-resolved flops for the plan searcher's cost pricing
-            dims = ModelDims.from_config(model.cfg, seq_len=tcfg.seq_len)
             self.controller = PrecisionController(self.schedule,
                                                   tcfg.controller,
-                                                  dims=dims)
-        self.writer: Optional[JsonlWriter] = None
+                                                  dims=self.dims,
+                                                  calibration=self.calibration)
+        # Host-offloaded metrics pipeline: rows/events go through a bounded
+        # queue to a writer thread so disk latency never lands in step time.
+        self.writer: Optional[AsyncJsonlWriter] = None
         if tcfg.telemetry_jsonl:
-            self.writer = JsonlWriter(tcfg.telemetry_jsonl)
+            self.writer = AsyncJsonlWriter(tcfg.telemetry_jsonl)
+        self.timer = StepTimer(warmup=tcfg.profiler_warmup)
 
     # ------------------------------------------------------------------
 
@@ -252,47 +269,72 @@ class Trainer:
                 self.tcfg.telemetry_every <= 1
                 or step % self.tcfg.telemetry_every == 0)
             fn = self._step_fn(plan, telemetry=tel_on)
-            batch = {k: jnp.asarray(v)
-                     for k, v in self.pipeline.batch(step).items()}
+            with phase_span("data"):
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.pipeline.batch(step).items()}
             lr_scale = (self.controller.lr_scale
                         if self.controller is not None else 1.0)
-            t0 = time.time()
-            params, opt_state, comp_state, metrics = fn(
-                state.params, state.opt_state, state.comp_state, batch,
-                jnp.asarray(step, jnp.int32),
-                jnp.asarray(lr_scale, jnp.float32))
-            jax.block_until_ready(metrics["loss"])
-            dt = time.time() - t0
+            # dispatch + device sync is the measured step: block on an
+            # output before reading the clock so dt is the device step
+            # time, not just the host dispatch.
+            with phase_span("step"):
+                t0 = time.perf_counter()
+                params, opt_state, comp_state, metrics = fn(
+                    state.params, state.opt_state, state.comp_state, batch,
+                    jnp.asarray(step, jnp.int32),
+                    jnp.asarray(lr_scale, jnp.float32))
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+            self.timer.record(dt)
             straggler = self.monitor.record(step, dt)
-            if straggler:
-                log(f"[straggler] step {step} took {dt:.2f}s "
-                    f"(ema {self.monitor.ema:.2f}s)")
             state = TrainState(params, opt_state, comp_state, step + 1)
-            row = {k: float(np.asarray(v)) for k, v in metrics.items()}
-            row["step"] = step
-            row["recipe"] = plan.name
-            row["dt"] = dt
-            row["straggler"] = straggler
-            self.history.append(row)
-            if self.writer is not None:
-                self.writer.write(row)
-            if self.tcfg.log_every and step % self.tcfg.log_every == 0:
-                log(f"step {step:5d} loss {row['loss']:.4f} "
-                    f"gnorm {row['grad_norm']:.3f} lr {row['lr']:.2e} "
-                    f"[{plan.name}] {dt*1000:.0f}ms")
-            # controller first: a loss-spike rollback must restore a
-            # checkpoint from BEFORE the spiked update, so the boundary
-            # save below happens only after the row was judged healthy
-            # (or after the restore, persisting the armed replay window).
-            if self.controller is not None:
-                state = self._apply_controller_events(
-                    state, self.controller.observe(step, row), log)
-            if (self.ckpt is not None and self.tcfg.checkpoint_every
-                    and (step + 1) % self.tcfg.checkpoint_every == 0):
-                self.save(state)
+            # everything below is host-side bookkeeping, off the device
+            # critical path (the async writer never blocks here)
+            with phase_span("host"):
+                if straggler:
+                    log(f"[straggler] step {step} took {dt:.2f}s "
+                        f"(ema {self.monitor.ema:.2f}s)")
+                    if self.writer is not None:
+                        self.writer.write({"event": "straggler",
+                                           "step": step, "dt": dt,
+                                           "ema": self.monitor.ema,
+                                           "factor": self.monitor.factor})
+                row = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                row["step"] = step
+                row["recipe"] = plan.name
+                row["dt"] = dt
+                row["straggler"] = straggler
+                self.history.append(row)
+                if self.writer is not None:
+                    self.writer.write(row)
+                if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                    log(f"step {step:5d} loss {row['loss']:.4f} "
+                        f"gnorm {row['grad_norm']:.3f} lr {row['lr']:.2e} "
+                        f"[{plan.name}] {dt*1000:.0f}ms")
+                # controller first: a loss-spike rollback must restore a
+                # checkpoint from BEFORE the spiked update, so the boundary
+                # save below happens only after the row was judged healthy
+                # (or after the restore, persisting the armed replay window).
+                if self.controller is not None:
+                    state = self._apply_controller_events(
+                        state, self.controller.observe(step, row), log)
+                if (self.ckpt is not None and self.tcfg.checkpoint_every
+                        and (step + 1) % self.tcfg.checkpoint_every == 0):
+                    self.save(state)
         if self.ckpt is not None:
             self.ckpt.wait()
+        if self.writer is not None:
+            self.writer.flush()   # log is complete once train() returns
         return state
+
+    def step_time_summary(self) -> Dict[str, float]:
+        """Measured step-time statistics for this trainer's run so far:
+        p50/p95/p99/mean (ms), tokens/sec at the median step, and MFU from
+        the model's ``ModelDims`` flops (``telemetry.profiler`` summary)."""
+        tokens = self.tcfg.global_batch * self.tcfg.seq_len
+        return self.timer.summary(
+            tokens_per_step=tokens,
+            flops_per_step=train_step_flops(self.dims, tokens))
 
     # ------------------------------------------------------------------
 

@@ -6,10 +6,11 @@ import json
 import pytest
 
 from repro.configs.base import ControllerSettings, get_config
-from repro.core.cost_model import (BlockDims, ModelDims, compute_share,
+from repro.core.cost_model import (BlockDims, CostCalibration, ModelDims,
+                                   _cal_key, calibrate, compute_share,
                                    paper_calibrated_cost, plan_cost,
                                    schedule_adjusted_cost, schedule_cost,
-                                   theoretical_cost)
+                                   speed_factor, theoretical_cost)
 from repro.core.recipe import RECIPES, PrecisionPlan
 from repro.telemetry.controller import PlanSearcher
 
@@ -281,3 +282,97 @@ def test_searcher_resume_bit_exact():
                                                for p in ref.frontier]
     assert [p["error"] for p in b.frontier] == [p["error"]
                                                 for p in ref.frontier]
+
+
+# ---------------------------------------------------------------------------
+# Measured cost calibration (wall-clock-calibrated plan costs)
+# ---------------------------------------------------------------------------
+
+# A synthetic "this host" table where FP8 matmuls measured ~3x the plain
+# matmul but FP4 QDQ measured *slower* than plain (0.5x) — the opposite
+# ranking from the paper's bit-width theory (fp4=4x > fp8=2x).  Format-only
+# keys act as granularity wildcards via the lookup fallback.
+FP8_FAST = calibrate({
+    ("fp4_e2m1", "fp4_e2m1"): 0.5,
+    ("fp4_e2m1", "fp8_e4m3"): 0.5,
+    ("fp4_e2m1", "fp8_e5m2"): 0.5,
+    ("fp8_e4m3", "fp8_e4m3"): 3.0,
+    ("fp8_e4m3", "fp8_e5m2"): 3.0,
+    ("fp8_e5m2", "fp8_e5m2"): 3.0,
+    ("bf16", "bf16"): 1.0,
+}, source="test")
+
+
+def test_speed_factor_lookup_order_and_paper_fallback():
+    fp4 = RECIPES["all_fp4"].ffn_linear
+    bf = RECIPES["bf16"].ffn_linear
+    # paper defaults (no calibration): min of the formats' assumed factors
+    assert speed_factor(fp4.fwd_x, fp4.fwd_w) == 4.0
+    assert speed_factor(bf.fwd_x, bf.fwd_w) == 1.0
+    # exact (key_a, key_b) hit
+    cal = calibrate({(_cal_key(fp4.fwd_x), _cal_key(fp4.fwd_w)): 0.25})
+    assert speed_factor(fp4.fwd_x, fp4.fwd_w, cal) == 0.25
+    # swapped-pair hit
+    cal = calibrate({(_cal_key(fp4.fwd_w), _cal_key(fp4.fwd_x)): 0.3})
+    assert speed_factor(fp4.fwd_x, fp4.fwd_w, cal) == 0.3
+    # format-only wildcard (granularity stripped)
+    cal = calibrate({("fp4_e2m1", "fp4_e2m1"): 0.4})
+    assert speed_factor(fp4.fwd_x, fp4.fwd_w, cal) == 0.4
+    # uncovered pair falls back to the paper factor
+    assert speed_factor(bf.fwd_x, bf.fwd_w, cal) == 1.0
+
+
+def test_calibration_json_roundtrip(tmp_path):
+    path = str(tmp_path / "speed_factors.json")
+    FP8_FAST.to_json(path)
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["schema"] == "speed_factors.v1"
+    back = CostCalibration.from_json(path)
+    assert dict(back.table) == dict(FP8_FAST.table)
+    assert back.source == "test"
+
+
+@pytest.mark.parametrize("name", sorted(RECIPES))
+def test_plan_cost_no_calibration_is_bit_exact_paper_path(name):
+    """calibration=None must be the PR-5 arithmetic, bitwise: the explicit
+    None call equals the legacy two-arg call, which the uniform-parity
+    tests above pin to theoretical_cost."""
+    dims = ModelDims.from_config(get_config("tiny"), seq_len=64)
+    plan = PrecisionPlan.uniform(RECIPES[name], dims.n_layers)
+    assert plan_cost(plan, dims) == plan_cost(plan, dims, None)
+    assert schedule_cost(plan, dims) == schedule_cost(plan, dims,
+                                                      calibration=None)
+
+
+def test_searcher_reranks_candidates_under_measured_factors():
+    """The acceptance contract: the same two candidate plans swap rank when
+    pricing switches from paper theory to the measured table, and the
+    PlanSearcher's own events price with whichever table it was built with.
+    """
+    dims = ModelDims.from_config(get_config("tiny"), seq_len=64)
+    base = PrecisionPlan.uniform(RECIPES["all_fp4"], dims.n_layers)
+    promoted = base.promote("ffn", layer=0)
+    # paper theory: promoting a cell to FP8 always costs more
+    assert plan_cost(promoted, dims) > plan_cost(base, dims)
+    # measured: fp8 is the fast path on this host, so the SAME promotion
+    # is a cost *decrease* — the candidates re-rank
+    assert plan_cost(promoted, dims, FP8_FAST) < plan_cost(base, dims,
+                                                           FP8_FAST)
+
+    # and the searcher prices frontier points / moves with its table
+    for cal in (None, FP8_FAST):
+        s = PlanSearcher(dims, ControllerSettings(
+            plan_search=True, plan_search_every=3), calibration=cal)
+        events = _drive(s, base, dict(START_ERRS), steps=4)
+        frontier0 = next(e for e in events
+                         if e["event"] == "frontier_point")
+        move = next(e for e in events if e["event"] == "plan_search")
+        assert move["op"] == "promote" and move["cell"] == "l00/ffn"
+        assert frontier0["cost"] == plan_cost(base, dims, cal)
+        assert move["cost"] == plan_cost(
+            base.promote("ffn", layer=0), dims, cal)
+        if cal is None:
+            assert move["cost"] > frontier0["cost"]
+        else:
+            assert move["cost"] < frontier0["cost"]

