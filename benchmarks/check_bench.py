@@ -36,6 +36,10 @@ MIN_US = 200.0
 REQUIRED = (
     "kernel/qmm256_ffn_paper_fwd_pallas_fused",
     "kernel/qmm256_ffn_paper_dgrad_wgrad_pallas_fused",
+    "kernel/qmm256_ffn_paper_fwd_pallas_stream",
+    "kernel/qmm256_ffn_paper_dgrad_wgrad_pallas_stream",
+    "kernel/qmm256_ffn_paper_fwd_stream_t128",
+    "kernel/qmm256_ffn_paper_fwd_two_pass_t128",
     "kernel/flash_attention_fwd_256",
 )
 
@@ -121,6 +125,17 @@ def check_step(baseline: str, current: str, threshold: float) -> int:
                 if field not in rec:
                     failures.append(f"{tag} {name}: missing percentile "
                                     f"field {field}")
+        # A negative phase share is impossible by construction — it means
+        # the report emitted a raw noisy delta instead of clamping it
+        # (profile_report marks clamped rows with noise=true instead).
+        for name, rec in d.items():
+            if not name.startswith("step/phase_"):
+                continue
+            share = _derived_float(rec, "share")
+            if share == share and share < 0:  # NaN-safe
+                failures.append(f"{tag} {name}: negative share "
+                                f"{share:.3f} (impossible; expected "
+                                f"clamped-to-zero + noise=true)")
     if failures:
         print("[check_bench] FAILURES:", file=sys.stderr)
         for f_ in failures:

@@ -9,14 +9,17 @@ roofline analysis instead.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit, timeit_stats, write_json
-from repro.core.qlinear import pallas_qmatmul, qlinear, qmatmul
+from repro.core.qlinear import (pallas_qmatmul, pallas_qmatmul_two_pass,
+                                qlinear, qmatmul)
 from repro.core.recipe import RECIPES, MatmulRecipe
+from repro.kernels.fp4_matmul import fused_qmm, use_pipeline
 from repro.kernels.ref import fp4_matmul_ref
 from repro.models.attention import chunked_attention
 from repro.kernels.ref import flash_attention_ref
@@ -49,22 +52,71 @@ def _quant_work_counters(m, k, n, tag: str) -> None:
 
 
 def _bench_fused_roles(x, w, recipe, tag: str) -> None:
-    """Time the fused pallas_qmatmul path vs unfused qmatmul for all three
-    training matmuls: fwd via the primal, dgrad+wgrad via the VJP."""
+    """Time the Pallas pipelines vs unfused qmatmul for all three training
+    matmuls: fwd via the primal, dgrad+wgrad via the VJP.
+
+    ``pallas_fused`` is the two-pass reference pipeline (quantize to HBM,
+    then the tiled matmul — the historical meaning of the entry, kept so
+    the committed baseline stays comparable); ``pallas_stream`` is the
+    single-pass streaming pipeline (quantized K-panels live in VMEM and are
+    consumed directly by the MXU loop).  The stream rows carry a
+    ``speedup_vs_two_pass`` derived field so the overlap win is measured,
+    and ``check_bench`` REQUIREs both entry families.
+    """
     key = jnp.zeros((2,), jnp.uint32)
     c = jnp.ones((x.shape[0], w.shape[1]), x.dtype)
 
-    for impl_name, mm in (("qdq", qmatmul), ("pallas_fused", pallas_qmatmul)):
-        f_fwd = jax.jit(lambda a, b, mm=mm: mm(a, b, key, recipe))
-        # vjp once OUTSIDE the timed region (it runs the primal); time only
-        # the jitted pullback so the row really is dgrad+wgrad.
-        _, pullback = jax.vjp(lambda p, q: mm(p, q, key, recipe), x, w)
-        f_bwd = jax.jit(pullback)
-        emit(f"kernel/{tag}_fwd_{impl_name}", timeit(f_fwd, x, w, n=15),
-             f"impl={impl_name};role=fwd")
-        emit(f"kernel/{tag}_dgrad_wgrad_{impl_name}",
-             timeit(f_bwd, c, n=15), f"impl={impl_name};role=dgrad+wgrad")
+    times = {}
+    for impl_name, mm, pipe in (
+            ("qdq", qmatmul, None),
+            ("pallas_fused", pallas_qmatmul_two_pass, None),
+            ("pallas_stream", pallas_qmatmul, "stream")):
+        # use_pipeline must cover tracing, which happens at the first timed
+        # call; pallas_stream pins the pipeline explicitly so the row stays
+        # a stream measurement even if the session default changes.
+        ctx = use_pipeline(pipe) if pipe else contextlib.nullcontext()
+        with ctx:
+            f_fwd = jax.jit(lambda a, b, mm=mm: mm(a, b, key, recipe))
+            # vjp once OUTSIDE the timed region (it runs the primal); time
+            # only the jitted pullback so the row really is dgrad+wgrad.
+            _, pullback = jax.vjp(lambda p, q: mm(p, q, key, recipe), x, w)
+            f_bwd = jax.jit(pullback)
+            times[impl_name] = (timeit(f_fwd, x, w, n=15),
+                                timeit(f_bwd, c, n=15))
+    for impl_name, (t_fwd, t_bwd) in times.items():
+        extra_f = extra_b = ""
+        if impl_name == "pallas_stream":
+            tp_f, tp_b = times["pallas_fused"]
+            extra_f = f";speedup_vs_two_pass={tp_f / t_fwd:.3f}"
+            extra_b = f";speedup_vs_two_pass={tp_b / t_bwd:.3f}"
+        emit(f"kernel/{tag}_fwd_{impl_name}", t_fwd,
+             f"impl={impl_name};role=fwd{extra_f}")
+        emit(f"kernel/{tag}_dgrad_wgrad_{impl_name}", t_bwd,
+             f"impl={impl_name};role=dgrad+wgrad{extra_b}")
     _quant_work_counters(x.shape[0], x.shape[1], w.shape[1], tag)
+
+
+def _bench_stream_overlap(x, w, tag: str) -> None:
+    """Both pipelines pinned to the same fixed (128, 128, 128) tiling —
+    the constrained multi-tile regime real VMEM budgets force on TPU (the
+    autotuned whole-dim tiles reduce both pipelines to one grid step each,
+    where the comparison degenerates).  two_pass walks a quantize grid AND
+    a matmul grid with an HBM round-trip between them; stream walks one
+    fused grid with both operand caches live.  NOTE: interpret mode prices
+    emulated op count, not launches or HBM traffic, so the CPU ratio here
+    is a trend anchor for the TPU re-measurement (ROADMAP item 3), not a
+    speedup claim."""
+    times = {}
+    for pipe in ("two_pass", "stream"):
+        f = jax.jit(lambda a, b, p=pipe: fused_qmm(
+            a, b, a_mode="block", b_mode="tile", bm=128, bn=128, bk=128,
+            pipeline=p, interpret=True))
+        times[pipe] = timeit(f, x, w, n=15)
+    emit(f"kernel/{tag}_fwd_two_pass_t128", times["two_pass"],
+         "impl=two_pass;tiles=128x128x128")
+    emit(f"kernel/{tag}_fwd_stream_t128", times["stream"],
+         f"impl=stream;tiles=128x128x128;"
+         f"speedup_vs_two_pass={times['two_pass'] / times['stream']:.3f}")
 
 
 def _bench_telemetry_epilogue(x, w, recipe, tag: str) -> None:
@@ -203,6 +255,45 @@ def measure_speed_factors(size: int = 256, n: int = 10,
     return calibrate(table, source=f"kernel_bench:{size}^3")
 
 
+def run_autotune(path: str) -> None:
+    """Populate and save the persistent ``(bm, bn, bk)`` tuning table.
+
+    Sweeps the tile candidates for the paper-recipe FFN matmul roles (the
+    shapes/granularities the fused-role benches and the qlinear training
+    path actually issue) and writes a ``qmm_tuning_table.v1`` JSON that
+    ``fused_qmm`` consults on every call without explicit tiles.  The
+    committed copy lives at ``src/repro/kernels/tuning_table.json`` and is
+    validated in CI (``python -m repro.kernels.autotune --validate``).
+    """
+    from repro.kernels.autotune import TuningTable, autotune_qmm
+
+    table = TuningTable(meta={
+        "source": "kernel_bench --autotune",
+        "backend": jax.default_backend(),
+        "note": "interpret-mode timings on CPU; regenerate on TPU for "
+                "hardware-true tiles",
+    })
+    jobs = (
+        # paper FFN fwd: fp4 block x fp4 tile, nn
+        dict(m=256, n=256, k=256, a_mode="block", b_mode="tile"),
+        dict(m=512, n=512, k=512, a_mode="block", b_mode="tile"),
+        # paper FFN dgrad: bf16 passthrough pair, g @ w^T
+        dict(m=256, n=256, k=256, a_mode="pass", b_mode="pass",
+             trans_b=True),
+        # paper FFN wgrad: fp8 block pair, x^T @ g
+        dict(m=256, n=256, k=256, a_mode="block", b_mode="block",
+             a_fmt="fp8_e4m3", b_fmt="fp8_e5m2", trans_a=True),
+    )
+    for job in jobs:
+        tiles, us = autotune_qmm(table=table, **job)
+        print(f"[autotune] m{job['m']}_n{job['n']}_k{job['k']} "
+              f"{job['a_mode']}:{job['b_mode']} -> bm={tiles[0]} "
+              f"bn={tiles[1]} bk={tiles[2]} ({us:.0f}us)", flush=True)
+    table.save(path)
+    print(f"[autotune] wrote {len(table.entries)} entries -> {path}",
+          flush=True)
+
+
 def run() -> None:
     m, k, n = 512, 512, 512
     x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
@@ -227,6 +318,7 @@ def run() -> None:
     xs, ws = x[:256, :256], w[:256, :256]
     _bench_fused_roles(xs, ws, RECIPES["paper_fp4"].ffn_linear,
                        "qmm256_ffn_paper")
+    _bench_stream_overlap(xs, ws, "qmm256_ffn_paper")
     _bench_telemetry_epilogue(xs, ws, RECIPES["paper_fp4"].ffn_linear,
                               "qmm256_ffn_paper")
 
@@ -258,12 +350,19 @@ if __name__ == "__main__":
                          "speed_factors.v1 JSON (feeds TrainConfig."
                          "cost_calibration / cost_model.calibrate); skips "
                          "the full kernel sweep")
+    ap.add_argument("--autotune", default=None, metavar="PATH",
+                    help="sweep (bm, bn, bk) candidates for the paper-"
+                         "recipe matmul roles and write the tuning table "
+                         "JSON here (commit to src/repro/kernels/"
+                         "tuning_table.json); skips the full kernel sweep")
     args = ap.parse_args()
     if args.measure_speed:
         cal = measure_speed_factors()
         cal.to_json(args.measure_speed)
         print(f"[bench] wrote {len(cal.table)} measured speed factors -> "
               f"{args.measure_speed}", flush=True)
+    elif args.autotune:
+        run_autotune(args.autotune)
     else:
         run()
     if args.json:

@@ -12,20 +12,21 @@ weight unchanged).
 Two implementations share the same recipe semantics:
 
   * ``qmatmul``        — unfused QDQ + ``lax.dot`` (simulation reference);
-  * ``pallas_qmatmul`` — fwd, dgrad and wgrad each run through the
-    quantize-once two-phase Pallas pipeline
-    (``kernels.fp4_matmul.fused_qmm``: one quantize pass per operand's
-    K-panels + a decoupled-tiling matmul pass), with transposed-operand
-    variants so the backward matmuls quantize relative to their own
-    reduction axes without materializing ``w^T``/``x^T`` in HBM.
-    Stochastic-rounding specs are kernel-realizable (in-kernel PRNG noise
-    seeded from ``key_data``); roles the kernel cannot realize (fp16
-    clipping, non-128 blocks) fall back to the QDQ path for that role
-    only.
+  * ``pallas_qmatmul`` — fwd, dgrad and wgrad each run through the fused
+    Pallas pipeline (``kernels.fp4_matmul.fused_qmm``; streaming
+    quantize-into-the-MXU-loop single pass by default, autotuned tiling),
+    with transposed-operand variants so the backward matmuls quantize
+    relative to their own reduction axes without materializing
+    ``w^T``/``x^T`` in HBM.  Stochastic-rounding specs are
+    kernel-realizable (in-kernel PRNG noise seeded from ``key_data``);
+    roles the kernel cannot realize (fp16 clipping, non-128 blocks) fall
+    back to the QDQ path for that role only.
+  * ``pallas_qmatmul_two_pass`` — the same contract pinned to the PR-3
+    two-pass reference pipeline (bit-identical at equal tiling).
 
 The public entry point ``qlinear`` folds arbitrary leading batch dims and
-selects the implementation via ``impl`` ('qdq' | 'pallas', threaded from
-``ModelConfig.linear_impl``).  Stochastic rounding (beyond-paper option)
+selects the implementation via ``impl`` ('qdq' | 'pallas' |
+'pallas_two_pass', threaded from ``ModelConfig.linear_impl``).  Stochastic rounding (beyond-paper option)
 consumes the ``key`` argument; RTN recipes ignore it, and passthrough (bf16)
 recipes lower to a single dot — important for clean roofline baselines.
 
@@ -48,8 +49,9 @@ from repro.core.recipe import MatmulRecipe
 from repro.telemetry import collect as telemetry
 from repro.telemetry.profiler import graph_span
 
-__all__ = ["qmatmul", "pallas_qmatmul", "pallas_qmatmul_stats", "qlinear",
-           "dot_qdq", "kernel_quant_mode", "matmul_impl"]
+__all__ = ["qmatmul", "pallas_qmatmul", "pallas_qmatmul_two_pass",
+           "pallas_qmatmul_stats", "qlinear", "dot_qdq",
+           "kernel_quant_mode", "matmul_impl"]
 
 
 def _maybe_key(key_data: Optional[jnp.ndarray], spec: QuantSpec,
@@ -156,18 +158,21 @@ def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
                *, trans_a: bool = False, trans_b: bool = False,
                key_data: Optional[jnp.ndarray] = None,
                salt: int = 0, collect_stats: bool = False,
+               pipeline: Optional[str] = None,
                axes_a=None, axes_b=None):
-    """One matmul role through the quantize-once Pallas pipeline when its
-    specs are kernel-realizable, else through ``dot_qdq`` (transposes
-    materialized).
+    """One matmul role through the fused Pallas pipeline when its specs are
+    kernel-realizable, else through ``dot_qdq`` (transposes materialized).
 
     ``a``/``b`` are the STORED arrays; the effective operands are
     ``a^T``/``b^T`` under the trans flags, and quantization granularities
     apply in effective orientation (reduction-relative).  Stochastic specs
     consume ``key_data`` through the kernel's in-kernel PRNG (different
     stream than the QDQ path's ``jax.random`` — statistically equivalent,
-    not bit-equal).  With ``collect_stats`` returns ``(y, (sa, sb))`` raw
-    quantize-pass stat vectors (None for pass/fallback operands).
+    not bit-equal).  ``pipeline``: None = the process default (streaming
+    single-pass unless overridden via ``use_pipeline``, resolved at trace
+    time), or an explicit ``kernels.fp4_matmul.PIPELINES`` name.  With
+    ``collect_stats`` returns ``(y, (sa, sb))`` raw quantize stat vectors
+    (None for pass/fallback operands).
     """
     mode_a, mode_b = kernel_quant_mode(spec_a), kernel_quant_mode(spec_b)
     if mode_a is not None and mode_b is not None:
@@ -176,7 +181,7 @@ def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
         from repro.kernels.ops import pallas_qmm
         return pallas_qmm(a, b, spec_a, spec_b, mode_a=mode_a, mode_b=mode_b,
                           trans_a=trans_a, trans_b=trans_b,
-                          key_data=key_data, salt=salt,
+                          key_data=key_data, salt=salt, pipeline=pipeline,
                           collect_stats=collect_stats)
     ae = a.T if trans_a else a
     be = b.T if trans_b else b
@@ -185,40 +190,55 @@ def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
     return (y, (None, None)) if collect_stats else y
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def pallas_qmatmul(x: jnp.ndarray, w: jnp.ndarray, key_data: jnp.ndarray,
-                   recipe: MatmulRecipe, axes=None) -> jnp.ndarray:
+def _make_pallas_qmatmul(pipeline: Optional[str]):
+    """Build a ``qmatmul``-shaped custom_vjp whose three roles all run
+    through the fused kernel with a fixed ``pipeline`` choice (None = the
+    process default).  Returns ``(qmatmul_fn, bwd_fn)`` — the bwd is shared
+    with the stats variant below."""
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+    def _pqm(x: jnp.ndarray, w: jnp.ndarray, key_data: jnp.ndarray,
+             recipe: MatmulRecipe, axes=None) -> jnp.ndarray:
+        ax = axes or (None, None, None)
+        return _dot_fused(x, w, recipe.fwd_x, recipe.fwd_w,
+                          key_data=key_data, salt=0, pipeline=pipeline,
+                          axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]))
+
+    def _fwd(x, w, key_data, recipe, axes):
+        return _pqm(x, w, key_data, recipe, axes), (x, w, key_data)
+
+    def _bwd(recipe, axes, res, g):
+        x, w, key_data = res
+        row, k, n = axes or (None, None, None)
+        # dgrad: dx = Q(g) @ Q(w^T); reduction over N (w read transposed
+        # in-kernel via the BlockSpec index map).
+        dx = _dot_fused(g, w, recipe.dgrad_g, recipe.dgrad_w, trans_b=True,
+                        key_data=key_data, salt=2, pipeline=pipeline,
+                        axes_a=(row, n), axes_b=(n, k))
+        # wgrad: dw = Q(x^T) @ Q(g); reduction over M (tokens).
+        dw = _dot_fused(x, g, recipe.wgrad_x, recipe.wgrad_g, trans_a=True,
+                        key_data=key_data, salt=4, pipeline=pipeline,
+                        axes_a=(k, row), axes_b=(row, n))
+        return (dx.astype(x.dtype), dw.astype(w.dtype),
+                jnp.zeros_like(key_data))
+
+    _pqm.defvjp(_fwd, _bwd)
+    return _pqm, _bwd
+
+
+pallas_qmatmul, _pallas_qmatmul_bwd = _make_pallas_qmatmul(None)
+pallas_qmatmul.__doc__ = (
     """``qmatmul`` with all three matmuls (fwd/dgrad/wgrad) running through
-    the fused quantize+matmul Pallas kernel.  Same signature/semantics.
+    the fused quantize+matmul Pallas kernel (default pipeline: streaming
+    single-pass; see ``kernels.fp4_matmul``).  Same signature/semantics.
     ``axes`` only steers the QDQ-fallback roles (kernel scales live in
-    kernel-private buffers and need no placement)."""
-    ax = axes or (None, None, None)
-    return _dot_fused(x, w, recipe.fwd_x, recipe.fwd_w, key_data=key_data,
-                      salt=0, axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]))
+    kernel-private buffers and need no placement).""")
 
-
-def _pallas_qmatmul_fwd(x, w, key_data, recipe, axes):
-    y = pallas_qmatmul(x, w, key_data, recipe, axes)
-    return y, (x, w, key_data)
-
-
-def _pallas_qmatmul_bwd(recipe, axes, res, g):
-    x, w, key_data = res
-    row, k, n = axes or (None, None, None)
-    # dgrad: dx = Q(g) @ Q(w^T); reduction over N (w read transposed
-    # in-kernel via the BlockSpec index map).
-    dx = _dot_fused(g, w, recipe.dgrad_g, recipe.dgrad_w, trans_b=True,
-                    key_data=key_data, salt=2,
-                    axes_a=(row, n), axes_b=(n, k))
-    # wgrad: dw = Q(x^T) @ Q(g); reduction over M (tokens).
-    dw = _dot_fused(x, g, recipe.wgrad_x, recipe.wgrad_g, trans_a=True,
-                    key_data=key_data, salt=4,
-                    axes_a=(k, row), axes_b=(row, n))
-    return (dx.astype(x.dtype), dw.astype(w.dtype),
-            jnp.zeros_like(key_data))
-
-
-pallas_qmatmul.defvjp(_pallas_qmatmul_fwd, _pallas_qmatmul_bwd)
+pallas_qmatmul_two_pass, _ = _make_pallas_qmatmul("two_pass")
+pallas_qmatmul_two_pass.__doc__ = (
+    """``pallas_qmatmul`` pinned to the two-pass reference pipeline
+    (quantize pass + matmul pass) — bit-identical to the streaming default
+    at equal tiling; kept selectable for A/B measurement and debugging.""")
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
@@ -249,7 +269,8 @@ def _pallas_qmatmul_stats_bwd(recipe, res, ct):
 pallas_qmatmul_stats.defvjp(_pallas_qmatmul_stats_fwd,
                             _pallas_qmatmul_stats_bwd)
 
-_IMPLS = {"qdq": qmatmul, "pallas": pallas_qmatmul}
+_IMPLS = {"qdq": qmatmul, "pallas": pallas_qmatmul,
+          "pallas_two_pass": pallas_qmatmul_two_pass}
 
 
 def matmul_impl(impl: str):

@@ -44,15 +44,44 @@ accumulates into an f32 VMEM scratch; ``pass``-mode (unquantized bf16)
 operands skip phase 1 entirely and are read transposed via BlockSpec index
 maps, exactly as before.
 
-``fused_qmm`` orchestrates both phases and keeps its role-parameterized
+**Single-pass streaming pipeline** (``_stream_kernel``, the default since
+the overlap round).  The two-pass split still paid a full HBM round-trip
+of the dequantized K-panels between the phases.  The streaming pipeline is
+ONE ``pallas_call`` whose grid walks ``(M/bm, N/bn)`` output tiles with K
+innermost: each K-step's operand tiles are fetched by the grid pipeline
+(double-buffered HBM->VMEM DMA, Pallas' standard prefetch), quantized
+in-registers/VMEM, and consumed directly by the MXU accumulation — the
+quantize work rides inside the GEMM's dataflow (the quantize-fused-GEMM
+unit of cost of Quartet and "Optimizing LLM Training Using FP4
+Quantization") and the dequantized panels never touch HBM.  The LHS row
+panel is additionally cached in a VMEM scratch across the ``N/bn``
+output-column revisits (quantized exactly once, weight-stationary style)
+and the quantized RHS across the ``M/bm`` output-row revisits, each under
+its own VMEM budget; past the budgets, tiles re-quantize per revisit —
+recompute that overlaps the MXU on hardware.
+Because the codec is the bit-exact integer RTN of ``kernels.rounding`` and
+SR noise is keyed by each element's *global* coordinate, re-quantizing a
+tile reproduces the quantize pass bit-for-bit: for the same ``(bm, bn,
+bk)`` the streaming output ``y`` (and the telemetry epilogue's counter /
+extrema lanes) is **bit-identical** to the two-pass pipeline, which stays
+selectable as the reference implementation (``pipeline='two_pass'`` /
+``use_pipeline``).  ``token``/``tensor`` granularities need their
+whole-reduction-axis amax sweep before any element can quantize, so those
+roles route through the two-pass pipeline automatically.
+
+``fused_qmm`` orchestrates the pipelines and keeps its role-parameterized
 contract: per-operand modes ``pass | block | tile | token | tensor``,
 ``trans_a``/``trans_b`` stored-layout transposition, per-operand formats
-and pow2-scale flags, plus new per-operand ``sr`` flags and seeds.  Tile
-knobs: ``block`` (quant group, 128), ``bm``/``bn``/``bk`` (MXU tiling,
-defaults auto-picked per shape), quantize-pass panels auto-picked.
+and pow2-scale flags, plus per-operand ``sr`` flags and seeds.  Tile
+knobs: ``block`` (quant group, 128), ``bm``/``bn``/``bk`` (MXU tiling —
+when all three are omitted the persistent autotuning table
+(``kernels.autotune``, committed ``tuning_table.json``, populated by
+``kernel_bench --autotune``) is consulted first, falling back to the
+``_pick_tile`` heuristic on a miss).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional, Tuple
 
@@ -64,12 +93,31 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import FORMATS
 from repro.kernels.rounding import (group_scale, hash_uniform, round_to_grid,
-                                    uniform_from_bits)
+                                    snap_to_dtype, uniform_from_bits)
 
 __all__ = ["fp4_matmul", "fused_qmm", "quantize_panels", "compiler_params",
-           "finalize_quant_stats", "QUANT_MODES", "STATS_WIDTH"]
+           "finalize_quant_stats", "QUANT_MODES", "STATS_WIDTH",
+           "PIPELINES", "default_pipeline", "use_pipeline",
+           "stream_supported"]
 
 QUANT_MODES = ("pass", "block", "tile", "token", "tensor")
+
+# Matmul pipelines: "stream" = single-pass quantize->MXU fusion (default),
+# "two_pass" = the PR-3 quantize-pass + matmul-pass reference.  token/tensor
+# granularities always take two_pass (see stream_supported).
+PIPELINES = ("stream", "two_pass")
+
+# LHS row-panel VMEM cache budget for the streaming kernel: the quantized
+# (bm, K) panel is kept in scratch across N/bn output-column revisits when it
+# fits, so the LHS quantizes exactly once.  Tests monkeypatch this to force
+# the requantize-per-revisit branch.
+_AQ_CACHE_BYTES = 4 * 1024 * 1024
+
+# RHS VMEM cache budget: the full quantized (K, N) operand is kept in scratch
+# across M/bm output-row revisits when it fits, so the RHS also quantizes
+# exactly once.  Safe to cache bitwise: the SR noise is keyed by the tile's
+# (j, kk) coordinates only, so an i-revisit would reproduce identical bits.
+_BQ_CACHE_BYTES = 4 * 1024 * 1024
 
 # Telemetry-epilogue accumulator lanes (f32, shape (1, STATS_WIDTH)):
 #   0 clip count   1 underflow count   2 nonzero count   3 sum err^2
@@ -96,6 +144,40 @@ def _pick_tile(dim: int, block: int = 128) -> int:
     raise ValueError(f"dim {dim} not a multiple of block {block}")
 
 
+# Stack-shaped so nested `use_pipeline` contexts unwind correctly; the
+# resolution happens OUTSIDE the jit boundary (`fused_qmm` is a plain python
+# wrapper), so flipping the pipeline can never serve a stale jit cache.
+_pipeline_stack = ["stream"]
+
+
+def default_pipeline() -> str:
+    """The pipeline `fused_qmm` uses when none is passed explicitly."""
+    return _pipeline_stack[-1]
+
+
+@contextlib.contextmanager
+def use_pipeline(name: str):
+    """Temporarily override the default matmul pipeline (re-entrant)."""
+    assert name in PIPELINES, name
+    _pipeline_stack.append(name)
+    try:
+        yield
+    finally:
+        _pipeline_stack.pop()
+
+
+def stream_supported(a_mode: str, b_mode: str) -> bool:
+    """Whether the streaming pipeline can run this granularity pair.
+
+    ``token``/``tensor`` scale groups span the whole reduction axis — their
+    amax sweep must complete before the first element can quantize, which is
+    exactly the dependency the streaming pipeline removes — so those roles
+    fall back to the two-pass pipeline.
+    """
+    streamable = ("pass", "block", "tile")
+    return a_mode in streamable and b_mode in streamable
+
+
 def finalize_quant_stats(vec: jnp.ndarray):
     """Reduce a quantize-pass stats vector to the telemetry stat dict.
 
@@ -114,6 +196,69 @@ def finalize_quant_stats(vec: jnp.ndarray):
         "scale_spread": jnp.log2(jnp.maximum(smax, 1e-30)
                                  / jnp.maximum(smin, 1e-30)),
     }
+
+
+# ---------------------------------------------------------------------------
+# In-kernel telemetry accumulation (shared by both pipelines)
+# ---------------------------------------------------------------------------
+
+def _stats_init():
+    """Fresh per-grid-step stats partials (numpy scalars: kernel-closable)."""
+    return dict(clip=np.float32(0), under=np.float32(0), nzc=np.float32(0),
+                err2=np.float32(0), val2=np.float32(0),
+                smin=np.float32(_STATS_BIG), smax=np.float32(0),
+                cnt=np.float32(0))
+
+
+def _stats_accum(st, sub, qsub, scale_f32, gvalid, fmt):
+    """Fold one quant group's QDQ result into the stats partials."""
+    af, qf = sub.astype(jnp.float32), qsub.astype(jnp.float32)
+    magf = jnp.abs(af)
+    nonzero = magf > 0  # zero-padding never counts as nonzero
+    thr = scale_f32 * np.float32(fmt.max_value * (1.0 + 1e-6))
+    st["clip"] += jnp.sum((magf > thr).astype(jnp.float32))
+    st["under"] += jnp.sum((nonzero & (qf == 0)).astype(jnp.float32))
+    st["nzc"] += jnp.sum(nonzero.astype(jnp.float32))
+    st["err2"] += jnp.sum((af - qf) ** 2)
+    st["val2"] += jnp.sum(af * af)
+    st["smin"] = jnp.minimum(
+        st["smin"], jnp.min(jnp.where(gvalid, scale_f32, _STATS_BIG)))
+    st["smax"] = jnp.maximum(
+        st["smax"], jnp.max(jnp.where(gvalid, scale_f32, 0.0)))
+
+
+def _stats_slab_flush(sacc_ref, row, lane, st):
+    """Fold one (block-row, k-slab) stats partial into its block-row's
+    accumulator row of the (R, STATS_WIDTH) scratch (``row`` may be traced).
+
+    Accumulation granularity is one ``(block, block)`` slab per flush —
+    never a whole multi-slab tile — so the f32 fold each block-row sees is
+    the SAME sequence of adds (its k-slabs in increasing-k order) no matter
+    how the surrounding kernel tiles the operand.  This is what makes the
+    stats bit-identical between the streaming and two-pass pipelines and
+    across every ``(bm, bn, bk)``: order-sensitive float sums are pinned to
+    a canonical order instead of the kernel's walk order.
+    """
+    addvec = jnp.stack(
+        [st["clip"], st["under"], st["nzc"], st["err2"], st["val2"],
+         jnp.zeros(()), jnp.zeros(()), st["cnt"]]).reshape(1, STATS_WIDTH)
+    acc = sacc_ref[pl.ds(row, 1), :]
+    new = acc + addvec
+    new = jnp.where(lane == 5, jnp.minimum(acc, st["smin"]), new)
+    new = jnp.where(lane == 6, jnp.maximum(acc, st["smax"]), new)
+    sacc_ref[pl.ds(row, 1), :] = new
+
+
+def _stats_fold(sacc_ref, lane):
+    """Canonical final fold of the (R, STATS_WIDTH) per-block-row partials
+    into the (1, STATS_WIDTH) output vector.  R depends only on the operand
+    shape (never on the kernel tiling), so this reduction's shape — and
+    therefore its bit pattern — is identical across pipelines and tilings."""
+    acc = sacc_ref[...]
+    tot = jnp.sum(acc, axis=0, keepdims=True)
+    mn = jnp.min(acc, axis=0, keepdims=True)
+    mx = jnp.max(acc, axis=0, keepdims=True)
+    return jnp.where(lane == 5, mn, jnp.where(lane == 6, mx, tot))
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +321,8 @@ def _quant_kernel(*refs, mode, fmt, pow2, sr, trans, emit_trans, use_hw_rng,
 
         @pl.when(first)
         def _():
-            sacc_ref[...] = jnp.where(lane == 5, _STATS_BIG, 0.0)
+            sacc_ref[...] = jnp.broadcast_to(
+                jnp.where(lane == 5, _STATS_BIG, 0.0), sacc_ref.shape)
 
     # --- sweep 0: amax accumulation for whole-reduction-axis groups ------
     if grid_kind == "token":
@@ -221,25 +367,6 @@ def _quant_kernel(*refs, mode, fmt, pow2, sr, trans, emit_trans, use_hw_rng,
                 jnp.int32, (bq, 1), 0)) < m_real
             cols_valid = (kt * bkq + jax.lax.broadcasted_iota(
                 jnp.int32, (1, bkq), 1)) < k_real
-            st = dict(clip=np.float32(0), under=np.float32(0),
-                      nzc=np.float32(0), err2=np.float32(0),
-                      val2=np.float32(0), smin=np.float32(_STATS_BIG),
-                      smax=np.float32(0))
-
-        def _accum_stats(sub, qsub, scale_f32, gvalid):
-            af, qf = sub.astype(jnp.float32), qsub.astype(jnp.float32)
-            magf = jnp.abs(af)
-            nonzero = magf > 0  # zero-padding never counts as nonzero
-            thr = scale_f32 * np.float32(fmt.max_value * (1.0 + 1e-6))
-            st["clip"] += jnp.sum((magf > thr).astype(jnp.float32))
-            st["under"] += jnp.sum((nonzero & (qf == 0)).astype(jnp.float32))
-            st["nzc"] += jnp.sum(nonzero.astype(jnp.float32))
-            st["err2"] += jnp.sum((af - qf) ** 2)
-            st["val2"] += jnp.sum(af * af)
-            st["smin"] = jnp.minimum(
-                st["smin"], jnp.min(jnp.where(gvalid, scale_f32, _STATS_BIG)))
-            st["smax"] = jnp.maximum(
-                st["smax"], jnp.max(jnp.where(gvalid, scale_f32, 0.0)))
 
         if mode in ("block", "tile"):
             per_row = mode == "block"
@@ -265,7 +392,13 @@ def _quant_kernel(*refs, mode, fmt, pow2, sr, trans, emit_trans, use_hw_rng,
                         else:        # one (block x block) tile group
                             gvalid = ((p * bq + i * block < m_real)
                                       & (kt * bkq + j * block < k_real))
-                        _accum_stats(sub, qsub, scale, gvalid)
+                        st = _stats_init()
+                        _stats_accum(st, sub, qsub, scale, gvalid, fmt)
+                        st["cnt"] = (
+                            jnp.sum(rows_valid[rs].astype(jnp.float32))
+                            * jnp.sum(cols_valid[:, cs].astype(jnp.float32)))
+                        _stats_slab_flush(sacc_ref, p * (bq // block) + i,
+                                          lane, st)
         else:  # token / tensor: scale broadcast from the amax scratch
             scale = group_scale(amax_ref[...], fmt, pow2, qm)
             sc = scale.astype(in_dt)
@@ -273,19 +406,15 @@ def _quant_kernel(*refs, mode, fmt, pow2, sr, trans, emit_trans, use_hw_rng,
             o_ref[...] = qt.T if emit_trans else qt
             if collect_stats:
                 gvalid = rows_valid if grid_kind == "token" else True
-                _accum_stats(xt, qt, scale, gvalid)
-
-        if collect_stats:
-            cnt = (jnp.sum(rows_valid.astype(jnp.float32))
-                   * jnp.sum(cols_valid.astype(jnp.float32)))
-            addvec = jnp.stack(
-                [st["clip"], st["under"], st["nzc"], st["err2"], st["val2"],
-                 jnp.zeros(()), jnp.zeros(()), cnt]).reshape(1, STATS_WIDTH)
-            acc = sacc_ref[...]
-            new = acc + addvec
-            new = jnp.where(lane == 5, jnp.minimum(acc, st["smin"]), new)
-            new = jnp.where(lane == 6, jnp.maximum(acc, st["smax"]), new)
-            sacc_ref[...] = new
+                st = _stats_init()
+                _stats_accum(st, xt, qt, scale, gvalid, fmt)
+                st["cnt"] = (jnp.sum(rows_valid.astype(jnp.float32))
+                             * jnp.sum(cols_valid.astype(jnp.float32)))
+                # Whole-tile partial into the panel's first block-row: the
+                # final fold sums all rows, so placement is arbitrary (only
+                # two-pass runs token/tensor — no cross-pipeline order
+                # contract to honor here).
+                _stats_slab_flush(sacc_ref, p * (bq // block), lane, st)
 
     if grid_kind == "one":
         _quantize()
@@ -295,7 +424,7 @@ def _quant_kernel(*refs, mode, fmt, pow2, sr, trans, emit_trans, use_hw_rng,
     if collect_stats:
         @pl.when(last)
         def _():
-            stats_ref[...] = sacc_ref[...]
+            stats_ref[...] = _stats_fold(sacc_ref, lane)
 
 
 def _quantize_operand(t: jnp.ndarray, *, mode: str, fmt, pow2: bool,
@@ -366,7 +495,10 @@ def _quantize_operand(t: jnp.ndarray, *, mode: str, fmt, pow2: bool,
     elif grid_kind == "tensor":
         scratch.append(pltpu.VMEM((1, 1), jnp.float32))
     if collect_stats:
-        scratch.append(pltpu.VMEM((1, STATS_WIDTH), jnp.float32))
+        # Per-block-row partials (see _stats_slab_flush): R rows depend only
+        # on the operand shape, keeping the stats fold order canonical.
+        scratch.append(pltpu.VMEM((m_eff // block, STATS_WIDTH),
+                                  jnp.float32))
 
     kernel = functools.partial(
         _quant_kernel, mode=mode, fmt=fmt, pow2=pow2, sr=sr, trans=trans,
@@ -481,46 +613,354 @@ def _tiled_matmul(a: jnp.ndarray, b: jnp.ndarray, *, trans_a: bool,
 
 
 # ---------------------------------------------------------------------------
+# Single-pass streaming pipeline: quantize fused into the MXU loop
+# ---------------------------------------------------------------------------
+
+def _qdq_stream_tile(xt, *, mode, fmt, pow2, qm, block, noise, sacc_ref,
+                     lane, gate, row0, col0, m_real, k_real):
+    """QDQ one (R, C) quant-orientation tile inside the streaming kernel.
+
+    Mirrors ``_quant_kernel``'s block/tile sub-group loop op-for-op (same
+    amax -> scale -> divide -> round -> rescale order on the same 128-aligned
+    groups), so every element's QDQ value is bit-identical to the two-pass
+    quantize pass.  ``row0``/``col0`` are the tile's global offsets in the
+    quant-orientation operand (traced scalars): they key the SR noise and
+    mask padding out of the stats.  Stats (from the pre-materialization
+    qsub, exactly as ``_quant_kernel``) flush per (block-row, k-slab) into
+    ``sacc_ref`` — the canonical order that makes them tiling- and
+    pipeline-invariant — under ``gate`` (the once-per-element condition,
+    e.g. first operand revisit); ``sacc_ref=None`` skips stats entirely.
+    """
+    rt, ct = xt.shape
+    in_dt = xt.dtype
+    mag = jnp.abs(xt)
+    per_row = mode == "block"
+    if sacc_ref is not None:
+        rows_valid = (row0 + jax.lax.broadcasted_iota(
+            jnp.int32, (rt, 1), 0)) < m_real
+        cols_valid = (col0 + jax.lax.broadcasted_iota(
+            jnp.int32, (1, ct), 1)) < k_real
+    rows = []
+    for i in range(rt // block):
+        cols = []
+        for j in range(ct // block):
+            rs = slice(i * block, (i + 1) * block)
+            cs = slice(j * block, (j + 1) * block)
+            sub, smag = xt[rs, cs], mag[rs, cs]
+            amax = (jnp.max(smag, axis=1, keepdims=True) if per_row
+                    else jnp.max(smag))
+            scale = group_scale(amax, fmt, pow2, qm)
+            sc = scale.astype(in_dt)
+            nsub = noise[rs, cs] if noise is not None else None
+            qsub = round_to_grid(sub / sc, fmt, nsub) * sc
+            cols.append(qsub)
+            if sacc_ref is not None:
+                if per_row:  # (1 x block) groups: row x k-group
+                    gvalid = rows_valid[rs] & (col0 + j * block < k_real)
+                else:        # one (block x block) tile group
+                    gvalid = ((row0 + i * block < m_real)
+                              & (col0 + j * block < k_real))
+                st = _stats_init()
+                _stats_accum(st, sub, qsub, scale, gvalid, fmt)
+                st["cnt"] = (
+                    jnp.sum(rows_valid[rs].astype(jnp.float32))
+                    * jnp.sum(cols_valid[:, cs].astype(jnp.float32)))
+                row = row0 // block + i
+
+                def _flush(row=row, st=st):
+                    _stats_slab_flush(sacc_ref, row, lane, st)
+                if gate is None:
+                    _flush()
+                else:
+                    pl.when(gate)(_flush)
+        rows.append(cols[0] if len(cols) == 1 else
+                    jnp.concatenate(cols, axis=1))
+    return rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+
+
+def _stream_noise(shape, seed_ref, tile_id, nk, row0, col0, use_hw_rng):
+    """SR noise for one streamed tile.
+
+    Interpret mode uses the coordinate-keyed counter hash — bit-identical
+    to the two-pass quantize pass AND tiling-invariant, because each
+    element's noise depends only on its global (row, col).  On TPU the
+    hardware PRNG is reseeded per (tile, K-step) — deterministic across
+    revisits of the same tile, but a different stream than the two-pass
+    pipeline's panel order (the standing PR-3 TPU-validation caveat).
+    """
+    if use_hw_rng:
+        pltpu.prng_seed(seed_ref[0] + tile_id * nk + pl.program_id(2))
+        bits = pltpu.bitcast(pltpu.prng_random_bits(shape), jnp.uint32)
+        return uniform_from_bits(bits)
+    return hash_uniform(shape, seed_ref[0], row0, col0)
+
+
+def _stream_kernel(*refs, a_mode, b_mode, fmt_a, fmt_b, a_pow2, b_pow2,
+                   sr_a, sr_b, trans_a, trans_b, use_hw_rng, cache_a,
+                   cache_b, bm, bn, bk, nk, block, m_real, k_real, n_real,
+                   emit_sa, emit_sb):
+    """One fused grid step: quantize the (i, kk) / (j, kk) operand tiles in
+    VMEM and accumulate their product into the (i, j) output tile.
+
+    Grid (M/bm, N/bn, K/bk), K innermost, sequential ("arbitrary") order.
+    The LHS panel is quantized once per ``i`` (at j == 0) into the ``aq``
+    VMEM scratch when ``cache_a``, else requantized per revisit (bit-
+    identical either way — the codec is deterministic given the element's
+    global coordinate).  RHS tiles are quantized once (at i == 0) into the
+    ``bq`` VMEM scratch when ``cache_b``, else requantized per ``i``
+    revisit — also bit-identical, the SR seed never involves ``i``.  Stats
+    accumulate exactly once per element (A gated on j == 0, B on i == 0)
+    into per-operand scratch, flushed to the stats outputs at the last step.
+    """
+    it = iter(refs)
+    seed_a_ref = next(it) if sr_a else None
+    seed_b_ref = next(it) if sr_b else None
+    qmax_a_ref = next(it) if a_mode != "pass" else None
+    qmax_b_ref = next(it) if b_mode != "pass" else None
+    a_ref, b_ref, o_ref = next(it), next(it), next(it)
+    stats_a_ref = next(it) if emit_sa else None
+    stats_b_ref = next(it) if emit_sb else None
+    acc_ref = next(it)
+    aq_ref = next(it) if cache_a else None
+    bq_ref = next(it) if cache_b else None
+    sa_ref = next(it) if emit_sa else None
+    sb_ref = next(it) if emit_sb else None
+
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    first = (i == 0) & (j == 0) & (kk == 0)
+    last = ((i == pl.num_programs(0) - 1) & (j == pl.num_programs(1) - 1)
+            & (kk == pl.num_programs(2) - 1))
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, STATS_WIDTH), 1)
+
+    if emit_sa or emit_sb:
+        @pl.when(first)
+        def _():
+            init = jnp.where(lane == 5, jnp.float32(_STATS_BIG),
+                             jnp.float32(0.0))
+            if sa_ref is not None:
+                sa_ref[...] = jnp.broadcast_to(init, sa_ref.shape)
+            if sb_ref is not None:
+                sb_ref[...] = jnp.broadcast_to(init, sb_ref.shape)
+
+    @pl.when(kk == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # --- LHS tile -> effective (bm, bk) -----------------------------------
+    def _qdq_a(gate):
+        xt = a_ref[...]
+        if trans_a:
+            xt = xt.T  # stored (bk, bm) -> quant orientation (bm, bk)
+        noise = (_stream_noise((bm, bk), seed_a_ref, i, nk,
+                               i * bm, kk * bk, use_hw_rng)
+                 if sr_a else None)
+        q = _qdq_stream_tile(xt, mode=a_mode, fmt=fmt_a, pow2=a_pow2,
+                             qm=qmax_a_ref[0], block=block, noise=noise,
+                             sacc_ref=sa_ref, lane=lane, gate=gate,
+                             row0=i * bm, col0=kk * bk,
+                             m_real=m_real, k_real=k_real)
+        return snap_to_dtype(q)
+
+    if a_mode == "pass":
+        at = a_ref[...]
+        if trans_a:
+            at = at.T
+    elif cache_a:
+        @pl.when(j == 0)
+        def _():
+            # The whole call runs once per (i, kk) — stats ungated inside.
+            aq_ref[:, pl.ds(kk * bk, bk)] = _qdq_a(gate=None)
+        at = aq_ref[:, pl.ds(kk * bk, bk)]
+    else:
+        # Requantized per j-revisit; stats must still fold exactly once.
+        at = _qdq_a(gate=(j == 0))
+
+    # --- RHS tile -> effective (bk, bn) -----------------------------------
+    def _qdq_b(gate):
+        xt = b_ref[...]
+        if not trans_b:
+            xt = xt.T  # effective (bk, bn) -> quant orientation (bn, bk)
+        noise = (_stream_noise((bn, bk), seed_b_ref, j, nk,
+                               j * bn, kk * bk, use_hw_rng)
+                 if sr_b else None)
+        q = _qdq_stream_tile(xt, mode=b_mode, fmt=fmt_b, pow2=b_pow2,
+                             qm=qmax_b_ref[0], block=block, noise=noise,
+                             sacc_ref=sb_ref, lane=lane, gate=gate,
+                             row0=j * bn, col0=kk * bk,
+                             m_real=n_real, k_real=k_real)
+        return snap_to_dtype(q).T  # (bk, bn)
+
+    if b_mode == "pass":
+        bt = b_ref[...]
+        if trans_b:
+            bt = bt.T  # stored (bn, bk) -> effective (bk, bn)
+    elif cache_b:
+        @pl.when(i == 0)
+        def _():
+            # The whole call runs once per (j, kk) — stats ungated inside.
+            bq_ref[pl.ds(kk * bk, bk), pl.ds(j * bn, bn)] = _qdq_b(gate=None)
+        bt = bq_ref[pl.ds(kk * bk, bk), pl.ds(j * bn, bn)]
+    else:
+        # Requantized per i-revisit; stats must still fold exactly once.
+        bt = _qdq_b(gate=(i == 0))
+
+    acc_ref[...] += jnp.dot(at, bt, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    if emit_sa or emit_sb:
+        @pl.when(last)
+        def _():
+            if stats_a_ref is not None:
+                stats_a_ref[...] = _stats_fold(sa_ref, lane)
+            if stats_b_ref is not None:
+                stats_b_ref[...] = _stats_fold(sb_ref, lane)
+
+
+def _stream_qmm(a: jnp.ndarray, b: jnp.ndarray, *, a_mode, b_mode,
+                fmt_a, fmt_b, a_pow2, b_pow2, sr_a, sr_b, seed_a, seed_b,
+                trans_a, trans_b, block, bm, bn, bk, m_real, k_real, n_real,
+                collect_stats, interpret):
+    """Build the single fused pallas_call for the streaming pipeline.
+
+    Returns ``(y, (stats_a, stats_b))`` — stats slots None for pass-mode
+    operands or when ``collect_stats`` is off.
+    """
+    m, k = (a.shape[1], a.shape[0]) if trans_a else a.shape
+    _, n = (b.shape[1], b.shape[0]) if trans_b else b.shape
+    grid = (m // bm, n // bn, k // bk)
+    ni, nj, nk = grid
+    # Cache the quantized LHS row panel across output-column revisits when
+    # it fits the VMEM budget (weight-stationary flavor: quantize A once).
+    cache_a = (a_mode != "pass" and nj > 1
+               and bm * k * a.dtype.itemsize <= _AQ_CACHE_BYTES)
+    # Cache the full quantized RHS across output-row revisits likewise
+    # (quantize B once; the SR seed is (j, kk)-keyed so this is bitwise
+    # identical to requantizing).
+    cache_b = (b_mode != "pass" and ni > 1
+               and k * n * b.dtype.itemsize <= _BQ_CACHE_BYTES)
+    emit_sa = collect_stats and a_mode != "pass"
+    emit_sb = collect_stats and b_mode != "pass"
+
+    in_specs, operands = [], []
+    for sr, seed in ((sr_a, seed_a), (sr_b, seed_b)):
+        if sr:
+            assert seed is not None, "stochastic rounding needs a seed"
+            in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+            operands.append(seed.reshape(1).astype(jnp.int32))
+    for mode, fmt in ((a_mode, fmt_a), (b_mode, fmt_b)):
+        if mode != "pass":
+            # Q_max as a traced SMEM scalar (see _quant_kernel).
+            in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+            operands.append(jax.lax.optimization_barrier(
+                jnp.full((1,), fmt.max_value, jnp.float32)))
+    in_specs.append(
+        pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)) if trans_a
+        else pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)))
+    operands.append(a)
+    in_specs.append(
+        pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)) if trans_b
+        else pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
+    operands.append(b)
+
+    out_specs = [pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))]
+    out_shapes = [jax.ShapeDtypeStruct((m, n), a.dtype)]
+    for emit in (emit_sa, emit_sb):
+        if emit:
+            out_specs.append(pl.BlockSpec((1, STATS_WIDTH),
+                                          lambda i, j, kk: (0, 0)))
+            out_shapes.append(
+                jax.ShapeDtypeStruct((1, STATS_WIDTH), jnp.float32))
+
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    if cache_a:
+        scratch.append(pltpu.VMEM((bm, k), a.dtype))
+    if cache_b:
+        scratch.append(pltpu.VMEM((k, n), b.dtype))
+    # Per-block-row stats partials (see _stats_slab_flush): one row per
+    # 128-row slab of the quant-orientation operand (A: M rows, B: N rows),
+    # tiling-independent so the final fold order is canonical.
+    if emit_sa:
+        scratch.append(pltpu.VMEM((m // block, STATS_WIDTH), jnp.float32))
+    if emit_sb:
+        scratch.append(pltpu.VMEM((n // block, STATS_WIDTH), jnp.float32))
+
+    kernel = functools.partial(
+        _stream_kernel, a_mode=a_mode, b_mode=b_mode, fmt_a=fmt_a,
+        fmt_b=fmt_b, a_pow2=a_pow2, b_pow2=b_pow2, sr_a=sr_a, sr_b=sr_b,
+        trans_a=trans_a, trans_b=trans_b, use_hw_rng=not interpret,
+        cache_a=cache_a, cache_b=cache_b, bm=bm, bn=bn, bk=bk, nk=nk,
+        block=block,
+        m_real=m_real, k_real=k_real, n_real=n_real,
+        emit_sa=emit_sa, emit_sb=emit_sb)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=scratch,
+        # Scratch (acc, LHS panel cache, stats) is revisited across grid
+        # steps -> sequential order required.
+        compiler_params=compiler_params(
+            dimension_semantics=("arbitrary",) * 3),
+        interpret=interpret,
+    )(*operands)
+    y = outs[0]
+    idx = 1
+    stats_a = stats_b = None
+    if emit_sa:
+        stats_a, idx = outs[idx], idx + 1
+    if emit_sb:
+        stats_b = outs[idx]
+    return y, (stats_a, stats_b)
+
+
+# ---------------------------------------------------------------------------
 # Orchestrator
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=(
     "a_mode", "b_mode", "a_fmt", "b_fmt", "a_pow2", "b_pow2", "a_sr", "b_sr",
-    "trans_a", "trans_b", "block", "bm", "bn", "bk", "real_dims",
+    "trans_a", "trans_b", "block", "bm", "bn", "bk", "pipeline", "real_dims",
     "collect_stats", "interpret"))
-def fused_qmm(a: jnp.ndarray, b: jnp.ndarray, *,
-              a_mode: str = "block", b_mode: str = "tile",
-              a_fmt: str = "fp4_e2m1", b_fmt: str = "fp4_e2m1",
-              a_pow2: bool = False, b_pow2: bool = False,
-              a_sr: bool = False, b_sr: bool = False,
-              seed_a: Optional[jnp.ndarray] = None,
-              seed_b: Optional[jnp.ndarray] = None,
-              trans_a: bool = False, trans_b: bool = False,
-              block: int = 128,
-              bm: Optional[int] = None, bn: Optional[int] = None,
-              bk: Optional[int] = None,
-              real_dims: Optional[Tuple[int, int, int]] = None,
-              collect_stats: bool = False,
-              interpret: bool = False):
-    """y = Q(A') @ Q(B') through the two-phase pipeline; A' = a^T under
-    ``trans_a`` (same for B').  Effective shapes A': (M, K), B': (K, N);
-    all dims must be multiples of ``block`` (the ops.py wrapper pads).
-
-    Each operand is QDQ'd exactly once by the quantize pass (phase 1) —
-    ``pass`` operands skip it — then the matmul pass (phase 2) runs with
-    ``(bm, bn, bk)`` tiling decoupled from the quant group (auto-picked
-    from the shapes when omitted).  ``a_sr``/``b_sr`` enable in-kernel
-    stochastic rounding (seeds required); ``real_dims`` = unpadded
-    (M, K, N) for stats masking; with ``collect_stats`` returns
-    ``(y, (stats_a, stats_b))`` where pass-mode slots are None.
-    """
+def _fused_qmm(a: jnp.ndarray, b: jnp.ndarray, *,
+               a_mode: str, b_mode: str, a_fmt: str, b_fmt: str,
+               a_pow2: bool, b_pow2: bool, a_sr: bool, b_sr: bool,
+               seed_a: Optional[jnp.ndarray], seed_b: Optional[jnp.ndarray],
+               trans_a: bool, trans_b: bool, block: int,
+               bm: int, bn: int, bk: int, pipeline: str,
+               real_dims: Optional[Tuple[int, int, int]],
+               collect_stats: bool, interpret: bool):
+    """Jit'd pipeline body — every knob arrives concrete (see fused_qmm)."""
     assert a_mode in QUANT_MODES and b_mode in QUANT_MODES, (a_mode, b_mode)
+    assert pipeline in PIPELINES, pipeline
     m, k = (a.shape[1], a.shape[0]) if trans_a else a.shape
     kb, n = (b.shape[1], b.shape[0]) if trans_b else b.shape
     assert k == kb, (a.shape, b.shape, trans_a, trans_b)
     assert m % block == 0 and k % block == 0 and n % block == 0, \
         (m, k, n, block)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     mr, kr, nr = real_dims if real_dims is not None else (m, k, n)
+
+    if pipeline == "stream":
+        assert stream_supported(a_mode, b_mode), (a_mode, b_mode)
+        y, (stats_a, stats_b) = _stream_qmm(
+            a, b, a_mode=a_mode, b_mode=b_mode,
+            fmt_a=FORMATS[a_fmt], fmt_b=FORMATS[b_fmt],
+            a_pow2=a_pow2, b_pow2=b_pow2,
+            sr_a=(a_sr and a_mode != "pass"
+                  and not FORMATS[a_fmt].passthrough),
+            sr_b=(b_sr and b_mode != "pass"
+                  and not FORMATS[b_fmt].passthrough),
+            seed_a=seed_a, seed_b=seed_b, trans_a=trans_a, trans_b=trans_b,
+            block=block, bm=bm, bn=bn, bk=bk, m_real=mr, k_real=kr,
+            n_real=nr, collect_stats=collect_stats, interpret=interpret)
+        if collect_stats:
+            return y, (stats_a, stats_b)
+        return y
 
     stats_a = stats_b = None
     mm_trans_a, mm_trans_b = trans_a, trans_b
@@ -543,9 +983,6 @@ def fused_qmm(a: jnp.ndarray, b: jnp.ndarray, *,
             k_real=kr, collect_stats=collect_stats, interpret=interpret)
         mm_trans_b = False
 
-    bm = bm if bm is not None else _pick_tile(m, block)
-    bn = bn if bn is not None else _pick_tile(n, block)
-    bk = bk if bk is not None else _pick_tile(k, block)
     y = _tiled_matmul(a, b, trans_a=mm_trans_a, trans_b=mm_trans_b,
                       bm=bm, bn=bn, bk=bk, interpret=interpret)
     if collect_stats:
@@ -553,8 +990,70 @@ def fused_qmm(a: jnp.ndarray, b: jnp.ndarray, *,
     return y
 
 
-@functools.partial(jax.jit, static_argnames=("x_fmt", "w_fmt", "block",
-                                             "interpret"))
+def fused_qmm(a: jnp.ndarray, b: jnp.ndarray, *,
+              a_mode: str = "block", b_mode: str = "tile",
+              a_fmt: str = "fp4_e2m1", b_fmt: str = "fp4_e2m1",
+              a_pow2: bool = False, b_pow2: bool = False,
+              a_sr: bool = False, b_sr: bool = False,
+              seed_a: Optional[jnp.ndarray] = None,
+              seed_b: Optional[jnp.ndarray] = None,
+              trans_a: bool = False, trans_b: bool = False,
+              block: int = 128,
+              bm: Optional[int] = None, bn: Optional[int] = None,
+              bk: Optional[int] = None,
+              pipeline: Optional[str] = None,
+              real_dims: Optional[Tuple[int, int, int]] = None,
+              collect_stats: bool = False,
+              interpret: bool = False):
+    """y = Q(A') @ Q(B'); A' = a^T under ``trans_a`` (same for B').
+    Effective shapes A': (M, K), B': (K, N); all dims must be multiples of
+    ``block`` (the ops.py wrapper pads).
+
+    ``pipeline`` picks the implementation: ``"stream"`` (default via
+    ``default_pipeline``/``use_pipeline``) fuses quantize into the MXU loop
+    in ONE pallas_call; ``"two_pass"`` is the quantize-pass + matmul-pass
+    reference.  Both are bit-identical for the same ``(bm, bn, bk)``;
+    token/tensor granularities silently take two_pass (stream_supported).
+
+    Tiling: explicit ``bm``/``bn``/``bk`` win; when ALL are omitted the
+    autotuning table (``kernels.autotune``) is consulted, falling back to
+    the ``_pick_tile`` heuristic on a miss (partially-specified tiles skip
+    the table).  This wrapper is deliberately NOT jit'd: pipeline and tile
+    resolution happen per call, outside the jit boundary, so a flipped
+    default pipeline or an updated tuning table can never serve a stale jit
+    cache — the resolved static knobs key ``_fused_qmm``'s cache.
+
+    ``a_sr``/``b_sr`` enable in-kernel stochastic rounding (seeds
+    required); ``real_dims`` = unpadded (M, K, N) for stats masking; with
+    ``collect_stats`` returns ``(y, (stats_a, stats_b))`` where pass-mode
+    slots are None.
+    """
+    m, k = (a.shape[1], a.shape[0]) if trans_a else a.shape
+    _, n = (b.shape[1], b.shape[0]) if trans_b else b.shape
+    if pipeline is None:
+        pipeline = default_pipeline()
+    assert pipeline in PIPELINES, pipeline
+    if pipeline == "stream" and not stream_supported(a_mode, b_mode):
+        pipeline = "two_pass"
+    if bm is None and bn is None and bk is None:
+        from repro.kernels import autotune  # lazy: autotune imports us
+        hit = autotune.resolve_tiles(
+            m, n, k, dtypes=(a.dtype.name, b.dtype.name),
+            modes=(a_mode, b_mode), trans=(trans_a, trans_b), block=block)
+        if hit is not None:
+            bm, bn, bk = hit
+    bm = bm if bm is not None else _pick_tile(m, block)
+    bn = bn if bn is not None else _pick_tile(n, block)
+    bk = bk if bk is not None else _pick_tile(k, block)
+    return _fused_qmm(a, b, a_mode=a_mode, b_mode=b_mode, a_fmt=a_fmt,
+                      b_fmt=b_fmt, a_pow2=a_pow2, b_pow2=b_pow2, a_sr=a_sr,
+                      b_sr=b_sr, seed_a=seed_a, seed_b=seed_b,
+                      trans_a=trans_a, trans_b=trans_b, block=block,
+                      bm=bm, bn=bn, bk=bk, pipeline=pipeline,
+                      real_dims=real_dims, collect_stats=collect_stats,
+                      interpret=interpret)
+
+
 def fp4_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
                x_fmt: str = "fp4_e2m1", w_fmt: str = "fp4_e2m1",
                block: int = 128, interpret: bool = False) -> jnp.ndarray:
@@ -562,7 +1061,8 @@ def fp4_matmul(x: jnp.ndarray, w: jnp.ndarray, *,
 
     x: (M, K), w: (K, N); M, K, N must be multiples of ``block``
     (the ops.py wrapper pads).  Returns x.dtype.  Kept as the historical
-    fwd-only entry point; a thin specialization of ``fused_qmm``.
+    fwd-only entry point; a thin specialization of ``fused_qmm`` (and like
+    it deliberately un-jit'd, so the pipeline default resolves per call).
     """
     return fused_qmm(x, w, a_mode="block", b_mode="tile", a_fmt=x_fmt,
                      b_fmt=w_fmt, block=block, interpret=interpret)

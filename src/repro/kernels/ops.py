@@ -59,18 +59,25 @@ def pallas_qmm(a: jnp.ndarray, b: jnp.ndarray,
                trans_a: bool = False, trans_b: bool = False,
                block: int = 128,
                key_data: Optional[jnp.ndarray] = None, salt: int = 0,
+               pipeline: Optional[str] = None,
+               bm: Optional[int] = None, bn: Optional[int] = None,
+               bk: Optional[int] = None,
                collect_stats: bool = False,
                interpret: Optional[bool] = None):
-    """Per-role quantized matmul ``Q(A') @ Q(B')`` through the two-phase
-    quantize-once pipeline, with padding.
+    """Per-role quantized matmul ``Q(A') @ Q(B')`` through the fused
+    pipeline (streaming single-pass by default, two-pass as reference —
+    see ``kernels.fp4_matmul``), with padding.
 
     ``a``/``b`` are stored arrays; ``A' = a^T`` under ``trans_a`` (same for
-    B') — the quantize pass reads the stored layout via its index maps and
-    emits effective-orientation panels.  Quantization (``mode_*`` from
+    B') — the kernels read the stored layout via their index maps and
+    quantize in effective orientation.  Quantization (``mode_*`` from
     ``core.qlinear.kernel_quant_mode``) is relative to the *effective*
     orientation, i.e. each backward matmul's own reduction axis; ``token``/
-    ``tensor`` amax now runs inside the quantize pass (no XLA pre-reduction).
-    Stochastic specs draw in-kernel noise seeded from ``key_data``+``salt``.
+    ``tensor`` amax needs its whole-axis sweep and automatically routes
+    through the two-pass pipeline.  Stochastic specs draw in-kernel noise
+    seeded from ``key_data``+``salt``.  ``pipeline``/``bm``/``bn``/``bk``
+    pass straight through to ``fused_qmm`` (None = default pipeline +
+    autotuned-or-heuristic tiles).
     Padding semantics: zero K-padding adds nothing to the dot and leaves
     real rows' amax groups unchanged; padded M/N rows/cols quantize on the
     eps-floor scale path and are sliced away.  With ``collect_stats``
@@ -98,6 +105,7 @@ def pallas_qmm(a: jnp.ndarray, b: jnp.ndarray,
             a_pow2=spec_a.pow2_scale, b_pow2=spec_b.pow2_scale,
             a_sr=a_sr, b_sr=b_sr, seed_a=seed_a, seed_b=seed_b,
             trans_a=trans_a, trans_b=trans_b, block=block,
+            bm=bm, bn=bn, bk=bk, pipeline=pipeline,
             real_dims=(m, k, n), collect_stats=collect_stats,
             interpret=interpret)
     if collect_stats:

@@ -45,10 +45,26 @@ from repro.core.quantize import pow2_floor, scale_from_amax
 
 __all__ = ["round_to_grid", "pow2_floor", "group_scale",
            "quantize_tile", "hash_bits", "hash_uniform",
-           "uniform_from_bits", "fold_seed"]
+           "uniform_from_bits", "fold_seed", "snap_to_dtype"]
 
 _F32_MANT = 23
 _F32_BIAS = 127
+
+
+def snap_to_dtype(t: jnp.ndarray) -> jnp.ndarray:
+    """Force a (possibly wider-carried) bf16 intermediate onto the bf16 grid.
+
+    Inside a fused Pallas kernel XLA:CPU carries bf16 intermediates at f32
+    precision; a value that the two-pass pipeline would round through a bf16
+    HBM write can therefore reach a downstream consumer (the MXU dot, a
+    rounding tie) with extra mantissa bits.  A bitcast round-trip forces
+    materialization on the bf16 grid; outside kernels, and for every other
+    dtype, it is an exact no-op.
+    """
+    if t.dtype == jnp.bfloat16:
+        return jax.lax.bitcast_convert_type(
+            jax.lax.bitcast_convert_type(t, jnp.uint16), jnp.bfloat16)
+    return t
 
 
 def round_to_grid(t: jnp.ndarray, fmt,
@@ -64,15 +80,11 @@ def round_to_grid(t: jnp.ndarray, fmt,
     the QDQ reference implements via ``jax.random.uniform``.
     """
     orig_dtype = t.dtype
-    if orig_dtype == jnp.bfloat16:
-        # Inside a fused Pallas kernel XLA:CPU carries bf16 intermediates at
-        # f32 precision, so the pre-scaled quotient reaching us may not be
-        # bf16-rounded — a plain upcast would leak that extra precision and
-        # flip RTN ties vs the (properly rounded) QDQ reference.  A bitcast
-        # round-trip forces materialization on the bf16 grid; outside
-        # kernels it is an exact no-op.
-        t = jax.lax.bitcast_convert_type(
-            jax.lax.bitcast_convert_type(t, jnp.uint16), jnp.bfloat16)
+    # The pre-scaled quotient reaching us may be carried wider than bf16
+    # inside a fused kernel — a plain upcast would leak that extra precision
+    # and flip RTN ties vs the (properly rounded) QDQ reference; snap it
+    # onto the bf16 grid first (see snap_to_dtype).
+    t = snap_to_dtype(t)
     xf = t.astype(jnp.float32)
     sign = jnp.sign(xf)
     mag = jnp.minimum(jnp.abs(xf), np.float32(fmt.max_value))

@@ -108,18 +108,41 @@ class StepTimer:
     from statistics — they measure compilation, not steady state.  Kept
     times live in a bounded rolling window (``window`` entries) so a long
     run's summary reflects recent behavior and memory stays constant.
+
+    Post-warmup **recompile spikes** are excluded too: a shape change (or a
+    controller plan edit) can trigger a recompilation long after warmup,
+    and one multi-second compile landing in the window drags p95/p99 orders
+    of magnitude away from steady state (the old baseline showed p95=3.27s
+    against p50=103ms from exactly this).  A record more than
+    ``spike_factor`` x the current window median is counted and reported
+    separately (``spikes`` / ``spike_max_ms`` in :meth:`summary`) instead
+    of polluting the percentiles.  The first 3 post-warmup records are
+    always kept (no median to judge against yet); ``spike_factor=None``
+    disables the filter.
     """
 
-    def __init__(self, warmup: int = 2, window: int = 1024):
+    def __init__(self, warmup: int = 2, window: int = 1024,
+                 spike_factor: Optional[float] = 20.0):
         self.warmup = warmup
         self.window = window
+        self.spike_factor = spike_factor
         self.n_total = 0
+        self.n_spikes = 0
         self._times: collections.deque = collections.deque(maxlen=window)
+        self._spike_times: collections.deque = collections.deque(maxlen=16)
 
     def record(self, seconds: float) -> None:
         self.n_total += 1
-        if self.n_total > self.warmup:
-            self._times.append(float(seconds))
+        if self.n_total <= self.warmup:
+            return
+        t = float(seconds)
+        if self.spike_factor is not None and len(self._times) >= 3:
+            med = percentiles(self._times, qs=(50.0,))["p50"]
+            if t > self.spike_factor * med:
+                self.n_spikes += 1
+                self._spike_times.append(t)
+                return
+        self._times.append(t)
 
     def time_call(self, fn: Callable, *args: Any, **kw: Any) -> Any:
         t0 = time.perf_counter()
@@ -137,12 +160,17 @@ class StepTimer:
                 flops_per_step: Optional[float] = None,
                 peak_flops: Optional[float] = None) -> Dict[str, float]:
         """Step-time stats: ``steps`` (post-warmup count), ``warmup``,
-        ``mean_ms``/``p50_ms``/``p95_ms``/``p99_ms``, and — when the caller
-        supplies the model numbers — ``tokens_per_sec`` and ``mfu``, both
-        computed at the p50 step time (median: robust to straggler steps).
+        ``spikes`` (excluded recompile-spike count, plus ``spike_max_ms``
+        when any), ``mean_ms``/``p50_ms``/``p95_ms``/``p99_ms``, and — when
+        the caller supplies the model numbers — ``tokens_per_sec`` and
+        ``mfu``, both computed at the p50 step time (median: robust to
+        straggler steps).
         """
         ts = self.times
-        out: Dict[str, float] = {"steps": len(ts), "warmup": self.warmup}
+        out: Dict[str, float] = {"steps": len(ts), "warmup": self.warmup,
+                                 "spikes": self.n_spikes}
+        if self.n_spikes:
+            out["spike_max_ms"] = max(self._spike_times) * 1e3
         if not ts:
             return out
         pct = percentiles(ts)

@@ -45,7 +45,7 @@ def test_step_timer_warmup_excluded_and_window_bounded():
     for dt in (99.0, 88.0):      # compile-time outliers: counted, excluded
         t.record(dt)
     assert t.n_total == 2 and t.times == []
-    assert t.summary() == {"steps": 0, "warmup": 2}
+    assert t.summary() == {"steps": 0, "warmup": 2, "spikes": 0}
     for dt in (1.0, 2.0, 3.0, 4.0, 5.0):   # 5 post-warmup, window keeps 4
         t.record(dt)
     assert t.times == [2.0, 3.0, 4.0, 5.0]
@@ -53,6 +53,44 @@ def test_step_timer_warmup_excluded_and_window_bounded():
     assert s["steps"] == 4
     assert s["p50_ms"] == 3.0e3 and s["p99_ms"] == 5.0e3
     assert s["mean_ms"] == pytest.approx(3.5e3)
+
+
+def test_step_timer_recompile_spike_excluded():
+    """A post-warmup recompilation (e.g. a controller plan edit) must not
+    drag the percentiles: records > spike_factor x window median are
+    counted/reported separately, not kept."""
+    t = StepTimer(warmup=0, spike_factor=20.0)
+    for dt in (0.10, 0.11, 0.09, 0.10):
+        t.record(dt)
+    t.record(3.27)               # the old baseline's p95=3.27s pathology
+    assert t.n_spikes == 1
+    assert 3.27 not in t.times and len(t.times) == 4
+    s = t.summary()
+    assert s["spikes"] == 1
+    assert s["spike_max_ms"] == pytest.approx(3270.0)
+    assert s["p95_ms"] == pytest.approx(110.0)  # spike-free percentiles
+    t.record(0.10)               # normal steps keep flowing afterwards
+    assert len(t.times) == 5 and t.n_spikes == 1
+
+
+def test_step_timer_spike_filter_needs_a_median():
+    """The first 3 post-warmup records are always kept — there is no
+    median to judge against yet (a slow-but-real first step must not be
+    silently dropped)."""
+    t = StepTimer(warmup=0, spike_factor=20.0)
+    for dt in (5.0, 0.1, 0.1):
+        t.record(dt)
+    assert t.times == [5.0, 0.1, 0.1] and t.n_spikes == 0
+    t.record(5.0)                # now 5.0 > 20 x median(=0.1): spike
+    assert t.n_spikes == 1 and len(t.times) == 3
+
+
+def test_step_timer_spike_filter_disabled():
+    t = StepTimer(warmup=0, spike_factor=None)
+    for dt in (0.1, 0.1, 0.1, 99.0):
+        t.record(dt)
+    assert t.n_spikes == 0 and 99.0 in t.times
+    assert "spike_max_ms" not in t.summary()
 
 
 def test_step_timer_summary_throughput_and_mfu():
