@@ -19,6 +19,7 @@ Usage:
     python -m benchmarks.check_bench BENCH_kernels.json fresh.json
     python -m benchmarks.check_bench --frontier BENCH_plan_frontier.json
     python -m benchmarks.check_bench --step BENCH_step.json fresh_step.json
+    python -m benchmarks.check_bench --decode BENCH_decode.json [fresh.json]
 """
 from __future__ import annotations
 
@@ -59,6 +60,23 @@ REQUIRED_STEP = ("step/train_step_fp4", "step/train_step_bf16",
                  "step/phase_fwd", "step/phase_bwd", "step/phase_optim",
                  "step/phase_quantize", "step/telemetry_overhead")
 STEP_PCT_FIELDS = ("p50_us", "p95_us", "p99_us")
+
+# BENCH_decode.json (benchmarks.decode_microbenchmark) guard: the full
+# weights x KV-cache precision matrix must be present, plus the per-slot
+# loop baseline, the batched/loop ratio and the measured packed sizes.
+REQUIRED_DECODE = tuple(
+    f"decode/{stage}_w{w}_kv{kv}"
+    for w in ("bf16", "fp8", "fp4")
+    for kv in ("bf16", "fp8")
+    for stage in ("prefill", "insert", "generate")
+) + ("decode/generate_per_slot_loop", "decode/batched_speedup",
+     "decode/bytes_per_param_fp4", "decode/bytes_per_param_fp8")
+DECODE_NORM = "decode/generate_wbf16_kvbf16"
+# Acceptance contracts: batched generate beats the per-slot loop, and the
+# packed representations actually shrink (payload + scale overhead; bf16
+# would be 2.0 bytes/param).
+MAX_BYTES_PER_PARAM = {"decode/bytes_per_param_fp4": 0.7,
+                       "decode/bytes_per_param_fp8": 1.2}
 
 
 def _load(path: str) -> dict:
@@ -159,6 +177,73 @@ def check_step(baseline: str, current: str, threshold: float) -> int:
     return 0
 
 
+def _check_decode_one(tag: str, data: dict) -> list:
+    """Required entries + acceptance contracts for one BENCH_decode file."""
+    failures = [f"required entry missing from {tag}: {n}"
+                for n in REQUIRED_DECODE if n not in data]
+    sp = data.get("decode/batched_speedup")
+    if sp is not None:
+        ratio = _derived_float(sp, "ratio")
+        if ratio != ratio:  # NaN-safe fallback to the (rounded) value
+            ratio = sp["us_per_call"]
+        if not ratio < 1.0:
+            failures.append(f"{tag}: batched generate does not beat the "
+                            f"per-slot loop (ratio {ratio:.3f} >= 1.0)")
+    for name, limit in MAX_BYTES_PER_PARAM.items():
+        rec = data.get(name)
+        if rec is not None and rec["us_per_call"] > limit:
+            failures.append(f"{tag} {name}: {rec['us_per_call']:.3f} "
+                            f"bytes/param > {limit} (packing regressed)")
+    for name, rec in data.items():
+        if name.startswith("decode/generate") and name != \
+                "decode/batched_speedup":
+            for field in STEP_PCT_FIELDS:
+                if field not in rec:
+                    failures.append(f"{tag} {name}: missing percentile "
+                                    f"field {field}")
+    return failures
+
+
+def check_decode(baseline: str, current, threshold: float) -> int:
+    """BENCH_decode.json guard.
+
+    One file: required-entry + acceptance check (batched beats the loop,
+    packed bytes/param within bounds, percentile fields present).  With a
+    second (fresh) file, additionally gate generate-stage regressions:
+    each generate entry is normalized by the same run's bf16/bf16 generate
+    (cancels raw host speed) and compared across runs.
+    """
+    base = _load(baseline)
+    failures = _check_decode_one("baseline", base)
+    if current:
+        cur = _load(current)
+        failures += _check_decode_one("current", cur)
+        if DECODE_NORM in base and DECODE_NORM in cur:
+            bn = base[DECODE_NORM]["us_per_call"]
+            cn = cur[DECODE_NORM]["us_per_call"]
+            for name in sorted(base):
+                if not name.startswith("decode/generate_w") or \
+                        name == DECODE_NORM or name not in cur:
+                    continue
+                ratio = (cur[name]["us_per_call"] / cn) \
+                    / (base[name]["us_per_call"] / bn)
+                status = "ok"
+                if ratio > 1.0 + threshold:
+                    status = "REGRESSED"
+                    failures.append(
+                        f"{name}: {ratio:.3f}x the normalized baseline "
+                        f"(> {1 + threshold:.2f}x)")
+                print(f"[check_bench] {name}: {ratio:.3f}x normalized "
+                      f"baseline ({status})")
+    if failures:
+        print("[check_bench] FAILURES:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print("[check_bench] decode guard passed")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", nargs="?")
@@ -172,10 +257,20 @@ def main(argv=None) -> int:
                     help="treat baseline/current as BENCH_step.json "
                     "(profile_report) files: required entries + "
                     "percentile fields + fp4/bf16 step-time ratio gate")
+    ap.add_argument("--decode", action="store_true",
+                    help="treat baseline (and optionally current) as "
+                    "BENCH_decode.json (decode_microbenchmark) files: "
+                    "required entries + acceptance (batched beats the "
+                    "per-slot loop, packed bytes/param bounds) + "
+                    "generate-stage regression gate when two files given")
     args = ap.parse_args(argv)
 
     if args.frontier:
         return check_frontier(args.frontier)
+    if args.decode:
+        if not args.baseline:
+            ap.error("--decode requires at least a baseline file")
+        return check_decode(args.baseline, args.current, args.threshold)
     if not args.baseline or not args.current:
         ap.error("baseline and current are required unless --frontier")
     if args.step:

@@ -1,0 +1,151 @@
+"""Decode-engine microbenchmark: prefill / insert / per-token generate.
+
+Times the three ``DecodeEngine`` stages on the bench llama across the
+serving precision matrix — weights {bf16, fp8 packed, fp4 packed} x KV
+cache {bf16, fp8} — plus the seed-style per-slot Python decode loop as the
+batched-generate baseline, and the measured packed-weight bytes/param.
+
+Generate rows carry straggler-free percentiles (``p50_us``/``p95_us``/
+``p99_us``; warmup excludes compile) so tail jitter is visible separately
+from the median.  ``decode/batched_speedup`` is the acceptance headline:
+batched generate must beat the per-slot loop at the same occupancy
+(ratio < 1.0).  Gated in CI by ``check_bench --decode``.
+
+Usage:
+    python -m benchmarks.decode_microbenchmark [--smoke] [--json OUT.json]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_LLAMA, emit, timeit_stats, write_json
+from repro.core.recipe import RECIPES
+from repro.models import build_model
+from repro.train.serve import make_decode_fn
+from repro.train.serving_runtime import (DecodeEngine,
+                                         quantize_weights_for_serving,
+                                         serving_memory_report)
+
+MAX_LEN = 128
+N_SLOTS = 4
+PROMPT_LENS = (16, 24, 32, 48)   # mixed lengths: slots sit at different
+#                                  offsets, the realistic engine state
+
+
+def _prompts(vocab: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, (n,)).astype(np.int32)
+            for n in PROMPT_LENS]
+
+
+def _fill(engine: DecodeEngine, prompts) -> None:
+    for s, p in enumerate(prompts):
+        tok, c1 = engine.prefill(p)
+        engine.release(s)
+        engine.insert(c1, int(tok), s)
+
+
+def _per_slot_loop_step(model, params, prompts, recipe):
+    """Seed-style baseline: one b=1 jitted decode per live slot per step."""
+    decode = make_decode_fn(model, recipe)
+    caches, last = [], []
+    prefill = jax.jit(
+        lambda pr, t, c: model.prefill(pr, {"tokens": t}, c, recipe))
+    for p in prompts:
+        cache = model.init_cache(1, MAX_LEN)
+        # pad to the engine's bucket sizes so prefill cost is comparable;
+        # the loop baseline differs only in its decode structure
+        logits, cache = prefill(params, jnp.asarray(p)[None], cache)
+        caches.append(cache)
+        last.append(int(jnp.argmax(logits[0, -1].astype(jnp.float32))))
+
+    def step():
+        outs = []
+        for i in range(len(caches)):
+            tok = jnp.asarray([[last[i]]], jnp.int32)
+            lg, caches[i] = decode(params, tok, caches[i])
+            last[i] = int(jnp.argmax(lg[0, -1].astype(jnp.float32)))
+            outs.append(last[i])
+        return np.asarray(outs)
+
+    return step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer timed iterations (CI wall-clock budget)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the bench.v1 JSON artifact")
+    args = ap.parse_args(argv)
+    n, warmup = (6, 2) if args.smoke else (20, 3)
+
+    cfg = BENCH_LLAMA
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    recipe = RECIPES["bf16"]
+    prompts = _prompts(cfg.vocab_size)
+    weights = {
+        "bf16": params,
+        "fp8": quantize_weights_for_serving(model, params, "fp8_e4m3"),
+        "fp4": quantize_weights_for_serving(model, params, "fp4_e2m1"),
+    }
+
+    base_generate = None
+    for wname, wp in weights.items():
+        for kvname, kvfmt in (("bf16", None), ("fp8", "fp8_e4m3")):
+            tag = f"w{wname}_kv{kvname}"
+            engine = DecodeEngine(model, wp, n_slots=N_SLOTS,
+                                  max_len=MAX_LEN, recipe=recipe,
+                                  kv_format=kvfmt)
+            st = timeit_stats(lambda: engine.prefill(prompts[2]),
+                              n=n, warmup=warmup)
+            emit(f"decode/prefill_{tag}", st["median_us"],
+                 f"len={PROMPT_LENS[2]} bucket-padded {tag}")
+
+            tok, c1 = engine.prefill(prompts[0])
+
+            def reinsert():
+                engine.release(0)
+                engine.insert(c1, tok, 0)
+
+            st = timeit_stats(reinsert, n=n, warmup=warmup)
+            emit(f"decode/insert_{tag}", st["median_us"],
+                 f"slot splice {tag}")
+
+            _fill(engine, prompts)
+            st = timeit_stats(engine.generate_step, n=n, warmup=warmup)
+            emit(f"decode/generate_{tag}", st["median_us"],
+                 f"batched step n_slots={N_SLOTS} {tag}",
+                 extra={k: st[k] for k in ("p50_us", "p95_us", "p99_us")})
+            if tag == "wbf16_kvbf16":
+                base_generate = st["median_us"]
+
+    loop = _per_slot_loop_step(model, params, prompts, recipe)
+    st = timeit_stats(loop, n=n, warmup=warmup)
+    emit("decode/generate_per_slot_loop", st["median_us"],
+         f"seed-style loop n_slots={N_SLOTS} wbf16 kvbf16",
+         extra={k: st[k] for k in ("p50_us", "p95_us", "p99_us")})
+
+    speedup = base_generate / st["median_us"]
+    emit("decode/batched_speedup", speedup,
+         f"batched/loop per-step ratio={speedup:.3f} (must be < 1.0)",
+         unit="ratio")
+
+    for fmt in ("fp4", "fp8"):
+        rep = serving_memory_report(weights[fmt])
+        emit(f"decode/bytes_per_param_{fmt}", rep["bytes_per_packed_param"],
+             f"packed payload+scales vs_bf16={rep['vs_bf16']:.4f}",
+             unit="bytes")
+
+    if args.json:
+        write_json(args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

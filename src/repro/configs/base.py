@@ -71,6 +71,9 @@ class ModelConfig:
     linear_impl: str = "qdq"          # qdq (unfused sim) | pallas (fused
     #                                   quantize+matmul kernel, fwd+dgrad+wgrad)
     attention_chunk: int = 1024
+    # serving-side KV cache payload format (None = compute dtype; an 8-bit
+    # format name, e.g. "fp8_e4m3", stores uint8 codes + per-vector scales)
+    kv_cache_format: Optional[str] = None
     scan_layers: bool = True
     unroll_attention: bool = False  # python-loop KV chunks (roofline mode)
     remat: bool = True

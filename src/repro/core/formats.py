@@ -107,11 +107,11 @@ FORMATS = {
 }
 
 
-def format_values(fmt: FloatFormat) -> jnp.ndarray:
-    """Enumerate every non-negative representable value of a low-bit format.
+def format_values_host(fmt: FloatFormat) -> list:
+    """Non-negative representable values of a low-bit format as host floats.
 
-    Used by tests to verify that ``round_to_format`` lands exactly on the grid.
-    Only sensible for formats with <= 8 bits.
+    Pure Python — safe to call inside a jit/scan trace (no staged ops), which
+    is what lets ``core.packed`` build its codec tables lazily.
     """
     assert not fmt.passthrough and fmt.bits <= 8
     vals = [0.0]
@@ -126,9 +126,18 @@ def format_values(fmt: FloatFormat) -> jnp.ndarray:
         for i in range(2 ** fmt.mbits):
             v = base * (1.0 + i / (2 ** fmt.mbits))
             if v > fmt.max_value:
-                return jnp.asarray(sorted(set(vals)), dtype=jnp.float32)
+                return sorted(set(vals))
             vals.append(v)
         e += 1
+
+
+def format_values(fmt: FloatFormat) -> jnp.ndarray:
+    """Enumerate every non-negative representable value of a low-bit format.
+
+    Used by tests to verify that ``round_to_format`` lands exactly on the grid.
+    Only sensible for formats with <= 8 bits.
+    """
+    return jnp.asarray(format_values_host(fmt), dtype=jnp.float32)
 
 
 def round_to_format(

@@ -1,0 +1,266 @@
+"""Packed low-precision tensors: quantize-once weight panels for serving.
+
+Training simulates low precision with QDQ (quantize -> dequantize in the
+compute dtype), which is the right tool for studying numerics but stores the
+*dequantized* values — no memory is saved and every matmul re-runs the
+quantize math.  Serving wants the opposite trade: quantize each weight
+exactly ONCE at load time, keep only the low-bit payload plus the per-block
+scales in HBM, and have the matmul consume the pre-quantized panel directly.
+
+``PackedTensor`` is that representation:
+
+  * ``payload`` — uint8 codes.  Sign-magnitude: the top bit of each code is
+    the sign, the low bits index the format's non-negative value grid
+    (``formats.format_values``).  4-bit formats pack two codes per byte
+    along the last axis (0.5 B/param); 6/8-bit formats use one byte each.
+  * ``scale``   — f32 per-(block x block) tile scales in blocked layout
+    ``(..., rows/block, cols/block)`` — the same Eq. 3 scales
+    ``core.quantize`` computes, stored instead of re-derived.
+
+``pack_tensor``/``PackedTensor.dequantize`` replicate ``core.quantize.qdq``'s
+exact arithmetic (scale computed in f32, cast to the source dtype *before*
+the divide/multiply, grid rounding via ``round_to_format``), so
+
+    pack_tensor(w, spec).dequantize()  ==  qdq(w, spec, reduction_axis=1)
+
+**bitwise** — every grid value of a <=8-bit format is exactly representable
+in bf16 and f32 (mantissa <= 3 bits), so the decode-side table gather
+reproduces the QDQ rounding result bit-for-bit, including negative zeros.
+That identity is what lets the packed serving path share parity tests with
+the training QDQ reference.
+
+Registered as a jax pytree: payload/scale are children (so PackedTensor
+params flow through ``jax.jit``/``vmap``/``tree.map``), while the format
+metadata rides in static aux data.  Leading dims (scan-stacked layers, MoE
+experts) are vmapped per matrix, so tile blocks never span layers/experts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core.quantize import QuantSpec, _blocked_view, compute_scale, \
+    scale_from_amax
+
+__all__ = ["PackedTensor", "pack_tensor", "packed_nbytes",
+           "kv_quantize", "kv_dequantize"]
+
+
+@functools.lru_cache(maxsize=None)
+def _grid(fmt: str) -> np.ndarray:
+    """Sorted non-negative value grid of ``fmt`` as a host f32 array."""
+    return np.asarray(F.format_values_host(F.FORMATS[fmt]), np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _code_bits(fmt: str) -> int:
+    """Bits per stored code: 1 sign bit + index into the non-negative grid."""
+    f = F.FORMATS[fmt]
+    n = len(_grid(fmt))
+    bits = 1 + max(int(np.ceil(np.log2(n))), 1)
+    # the storage format's own width always suffices (sign + e + m fields)
+    assert bits <= f.bits, (fmt, bits, f.bits)
+    return f.bits
+
+
+def _sign_bit(fmt: str) -> int:
+    return 1 << (_code_bits(fmt) - 1)
+
+
+def _pack2(fmt: str) -> bool:
+    """Two codes per byte (4-bit formats only)."""
+    return _code_bits(fmt) <= 4
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedTensor:
+    """A low-bit weight panel: uint8 codes + per-tile f32 scales.
+
+    Logical shape ``(..., rows, n_cols)``; ``payload`` stores
+    ``(..., rows, ceil(n_cols / per_byte))`` code bytes and ``scale``
+    ``(..., ceil(rows/block), ceil(n_cols/block))`` tile scales.
+    ``ddtype`` is the dtype quantization ran in — ``dequantize()`` returns
+    that dtype so the round-trip is bitwise QDQ-identical.
+    """
+
+    payload: jnp.ndarray
+    scale: jnp.ndarray
+    fmt: str
+    block: int
+    n_cols: int
+    ddtype: str
+
+    # -- pytree protocol (payload/scale traced; metadata static) ----------
+
+    def tree_flatten(self):
+        return (self.payload, self.scale), (self.fmt, self.block,
+                                            self.n_cols, self.ddtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        payload, scale = children
+        fmt, block, n_cols, ddtype = aux
+        return cls(payload, scale, fmt, block, n_cols, ddtype)
+
+    # -- geometry ---------------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.payload.shape[:-1]) + (self.n_cols,)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def nbytes(self) -> int:
+        """Real storage bytes: packed payload + scales."""
+        return int(self.payload.size) * self.payload.dtype.itemsize + \
+            int(self.scale.size) * self.scale.dtype.itemsize
+
+    @property
+    def bits_per_param(self) -> float:
+        return 8.0 * self.nbytes / max(self.size, 1)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"PackedTensor({self.fmt}, shape={self.shape}, "
+                f"block={self.block}, {self.bits_per_param:.2f} bits/param)")
+
+    # -- decode -----------------------------------------------------------
+
+    def dequantize(self, dtype=None) -> jnp.ndarray:
+        """Codes -> values, bitwise identical to ``qdq(w, spec, 1)``.
+
+        Table-gather of the grid value, sign applied from the code's top
+        bit (reproducing QDQ's -0.0 exactly), then the per-tile rescale in
+        the same blocked layout and cast order as ``quantize_dequantize``.
+        """
+        dt = jnp.dtype(dtype or self.ddtype)
+        codes = self.payload
+        if _pack2(self.fmt):
+            lo = codes & jnp.uint8(0x0F)
+            hi = codes >> jnp.uint8(4)
+            codes = jnp.stack([lo, hi], axis=-1).reshape(
+                *codes.shape[:-1], -1)
+        codes = codes[..., :self.n_cols]
+        sb = _sign_bit(self.fmt)
+        idx = codes & jnp.uint8(sb - 1)
+        neg = (codes & jnp.uint8(sb)) != 0
+        table = jnp.asarray(_grid(self.fmt), dt)  # grid exact in bf16/f32
+        vals = jnp.where(neg, -table[idx], table[idx])
+
+        lead = vals.shape[:-2]
+        k, n = vals.shape[-2:]
+        b = self.block
+        rb, cb = -(-k // b), -(-n // b)
+        pr, pc = rb * b - k, cb * b - n
+        if pr or pc:
+            vals = jnp.pad(vals, [(0, 0)] * len(lead)
+                           + [(0, pr), (0, pc)])
+        vb = vals.reshape(*lead, rb, b, cb, b)
+        # same cast order as qdq: f32 scale -> compute dtype -> multiply
+        s = self.scale.reshape(*lead, rb, 1, cb, 1).astype(dt)
+        y = (vb * s).reshape(*lead, rb * b, cb * b)[..., :k, :n]
+        return y.astype(dt)
+
+
+def _encode_grid_values(q: jnp.ndarray, fmt: str) -> jnp.ndarray:
+    """Exact grid values -> uint8 sign-magnitude codes."""
+    grid = jnp.asarray(_grid(fmt), jnp.float32)
+    # values are exactly on the grid, so searchsorted lands on the index
+    idx = jnp.searchsorted(grid, jnp.abs(q).astype(jnp.float32))
+    idx = idx.astype(jnp.uint8)
+    neg = jnp.signbit(q)  # keeps QDQ's -0.0 (sign * 0 rounding)
+    return jnp.where(neg, idx | jnp.uint8(_sign_bit(fmt)), idx)
+
+
+def pack_tensor(w: jnp.ndarray, spec: QuantSpec) -> PackedTensor:
+    """Quantize ``w`` (..., K, N) once into a ``PackedTensor``.
+
+    Per-(block x block) tile scaling only (the serving weight granularity);
+    leading dims — scan-stacked layers, MoE experts — are vmapped so tile
+    blocks never cross a layer/expert boundary.
+    """
+    if spec.granularity != "tile":
+        raise ValueError(
+            f"pack_tensor packs tile-granular weights; got {spec.short()}")
+    if spec.is_passthrough or F.FORMATS[spec.fmt].bits > 8:
+        raise ValueError(f"{spec.fmt} is not a packable low-bit format")
+    fmt = F.FORMATS[spec.fmt]
+    lead = w.shape[:-2]
+    k, n = w.shape[-2:]
+    w3 = w.reshape((-1, k, n))
+
+    def one(m):
+        # exactly core.quantize.qdq's math up to (and including) rounding
+        scale = compute_scale(m, spec, 1)            # (rb, 1, cb, 1) f32
+        sc = scale.astype(m.dtype)
+        xb, _, _, _ = _blocked_view(m, "tile", spec.block, 1)
+        qg = F.round_to_format(xb / sc, fmt)         # grid values (blocked)
+        rb, bsz, cb, _ = qg.shape
+        q2 = qg.reshape(rb * bsz, cb * bsz)[:k, :n]
+        codes = _encode_grid_values(q2, spec.fmt)
+        if _pack2(spec.fmt):
+            if n % 2:
+                codes = jnp.pad(codes, ((0, 0), (0, 1)))
+            codes = codes[:, 0::2] | (codes[:, 1::2] << jnp.uint8(4))
+        return codes, scale.reshape(rb, cb)
+
+    payload, scale = jax.vmap(one)(w3)
+    payload = payload.reshape(lead + payload.shape[1:])
+    scale = scale.reshape(lead + scale.shape[1:])
+    return PackedTensor(payload, scale, spec.fmt, spec.block, n,
+                        str(w.dtype))
+
+
+def packed_nbytes(tree) -> Tuple[int, int]:
+    """(packed_bytes, packed_param_count) over all PackedTensor leaves."""
+    nbytes = count = 0
+    for leaf in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, PackedTensor)):
+        if isinstance(leaf, PackedTensor):
+            nbytes += leaf.nbytes
+            count += leaf.size
+    return nbytes, count
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV-cache codec (FP8 blockwise: one scale per (token, kv-head)
+# vector over head_dim — append-time quantize, read-time dequantize).
+# ---------------------------------------------------------------------------
+
+def kv_quantize(x: jnp.ndarray, fmt: str
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., D) -> (uint8 codes (..., D), f32 scales (...,)).
+
+    Per-vector amax scaling over the trailing head_dim (the KV analogue of
+    the paper's blockwise weight scaling), same Eq. 3 scale math as
+    training so the codec shares the quantize core.
+    """
+    f = F.FORMATS[fmt]
+    if f.bits != 8:
+        raise ValueError(f"kv cache packing supports 8-bit formats; "
+                         f"got {fmt}")
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = scale_from_amax(amax, f)                 # f32, eps-floored
+    sc = scale[..., None].astype(x.dtype)
+    qg = F.round_to_format(x / sc, f)
+    return _encode_grid_values(qg, fmt), scale
+
+
+def kv_dequantize(codes: jnp.ndarray, scale: jnp.ndarray, fmt: str,
+                  dtype) -> jnp.ndarray:
+    """Inverse of ``kv_quantize`` into ``dtype``."""
+    sb = _sign_bit(fmt)
+    idx = codes & jnp.uint8(sb - 1)
+    neg = (codes & jnp.uint8(sb)) != 0
+    table = jnp.asarray(_grid(fmt), dtype)
+    vals = jnp.where(neg, -table[idx], table[idx])
+    return vals * scale[..., None].astype(dtype)

@@ -44,13 +44,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import QuantSpec, qdq
+from repro.core.packed import PackedTensor
+from repro.core.quantize import BF16_SPEC, QuantSpec, qdq
 from repro.core.recipe import MatmulRecipe
 from repro.telemetry import collect as telemetry
 from repro.telemetry.profiler import graph_span
 
 __all__ = ["qmatmul", "pallas_qmatmul", "pallas_qmatmul_two_pass",
-           "pallas_qmatmul_stats", "qlinear", "dot_qdq",
+           "pallas_qmatmul_stats", "qlinear", "packed_linear", "dot_qdq",
            "kernel_quant_mode", "matmul_impl"]
 
 
@@ -297,6 +298,59 @@ def _hint2d(arr: jnp.ndarray, axes) -> jnp.ndarray:
     return shard_hint(arr, axes)
 
 
+def packed_linear(x: jnp.ndarray, w: PackedTensor, recipe: MatmulRecipe,
+                  *, bias: Optional[jnp.ndarray] = None,
+                  key_data: Optional[jnp.ndarray] = None,
+                  impl: str = "qdq",
+                  axes: Optional[Tuple[Optional[str], Optional[str],
+                                       Optional[str]]] = None
+                  ) -> jnp.ndarray:
+    """Serving-side linear over a quantize-once ``PackedTensor`` panel.
+
+    The RHS was quantized exactly once at load time (payload + per-tile
+    scales); here it is expanded by a table gather — bitwise identical to
+    the training QDQ of the same spec — and fed to the matmul as a
+    PASSTHROUGH operand, so no per-token weight re-quantization happens:
+
+      * passthrough activation spec -> plain dot (weight-only serving);
+      * pallas impls with a kernel-realizable activation spec -> the
+        fused stream pipeline via ``kernels.ops``, RHS in mode ``pass``
+        (the kernel quantizes only the activations and streams the
+        pre-quantized K-panels straight into the MXU loop);
+      * otherwise -> QDQ fallback for the activation side only.
+
+    Forward-only by design (serving): gradients, telemetry taps and the
+    custom_vjp STE machinery of the training path do not apply here.
+    """
+    lead: Tuple[int, ...] = x.shape[:-1]
+    k = x.shape[-1]
+    w_dq = w.dequantize().astype(x.dtype)
+    spec_x = recipe.fwd_x
+    x2d = _hint2d(x.reshape(-1, k), axes and axes[:2])
+    if spec_x.is_passthrough:
+        y = x2d @ w_dq
+    else:
+        if key_data is None:
+            key_data = _zero_key()
+        if (impl in ("pallas", "pallas_two_pass")
+                and kernel_quant_mode(spec_x) is not None):
+            pipeline = "two_pass" if impl == "pallas_two_pass" else None
+            ax = axes or (None, None, None)
+            y = _dot_fused(x2d, w_dq, spec_x, BF16_SPEC, key_data=key_data,
+                           salt=0, pipeline=pipeline,
+                           axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]))
+        else:
+            ax = axes or (None, None, None)
+            y = dot_qdq(x2d, w_dq, spec_x, BF16_SPEC, key_data=key_data,
+                        salt=0, axes_a=(ax[0], ax[1]),
+                        axes_b=(ax[1], ax[2]))
+    y = _hint2d(y, axes and (axes[0], axes[2]))
+    y = y.reshape(*lead, w_dq.shape[-1])
+    if bias is not None:
+        y = y + bias
+    return y
+
+
 def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
             *, bias: Optional[jnp.ndarray] = None,
             key_data: Optional[jnp.ndarray] = None,
@@ -314,6 +368,10 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
     orientation) get ``with_sharding_constraint`` hints so the quantize-once
     K-panels partition cleanly under GSPMD.
     """
+    if isinstance(w, PackedTensor):
+        # quantize-once serving panels take the forward-only packed path
+        return packed_linear(x, w, recipe, bias=bias, key_data=key_data,
+                             impl=impl, axes=axes)
     lead: Tuple[int, ...] = x.shape[:-1]
     k = x.shape[-1]
     if recipe.is_passthrough:

@@ -95,17 +95,25 @@ def chunked_attention(
     q: jnp.ndarray,           # (B, Sq, H, D)
     k: jnp.ndarray,           # (B, Sk, KVH, D)
     v: jnp.ndarray,           # (B, Sk, KVH, D)
-    q_pos: jnp.ndarray,       # (Sq,) absolute positions
-    k_pos: jnp.ndarray,       # (Sk,) absolute positions (-1 = invalid)
+    q_pos: jnp.ndarray,       # (Sq,) or (B, Sq) absolute positions
+    k_pos: jnp.ndarray,       # (Sk,) or (B, Sk) absolute (-1 = invalid)
     *,
     causal: bool = True,
     window: int = 0,
     chunk: int = 1024,
     unroll: bool = False,
 ) -> jnp.ndarray:
-    """Online-softmax attention over KV chunks; O(Sq * chunk) live scores."""
+    """Online-softmax attention over KV chunks; O(Sq * chunk) live scores.
+
+    2-D positions (per-slot decode: each batch row at its own offset)
+    broadcast into the mask as (B, 1, S) against the (B, H, Sq, Sk) scores.
+    """
     b, sq, h, d = q.shape
     sk, kvh = k.shape[1], k.shape[2]
+    if q_pos.ndim == 2:
+        q_pos = q_pos[:, None]            # (B, 1, Sq)
+    if k_pos.ndim == 2:
+        k_pos = k_pos[:, None]            # (B, 1, Sk)
     n_rep = h // kvh
     k = _repeat_kv(k, n_rep)
     v = _repeat_kv(v, n_rep)
@@ -155,13 +163,15 @@ def chunked_attention(
             for i in range(n_chunks):
                 sl = slice(i * chunk, (i + 1) * chunk)
                 carry = one_chunk(carry, kf[:, :, sl], vf[:, :, sl],
-                                  k_pos[sl])
+                                  k_pos[..., sl])
         else:
             kc = kf[:, :, :n_chunks * chunk].reshape(
                 b, h, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
             vc = vf[:, :, :n_chunks * chunk].reshape(
                 b, h, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
-            pc = k_pos[:n_chunks * chunk].reshape(n_chunks, chunk)
+            pc = k_pos[..., :n_chunks * chunk]
+            pc = jnp.moveaxis(
+                pc.reshape(pc.shape[:-1] + (n_chunks, chunk)), -2, 0)
 
             def body(c, xs):
                 return one_chunk(c, *xs), None
@@ -170,7 +180,7 @@ def chunked_attention(
     if rem:
         carry = one_chunk(carry, kf[:, :, n_chunks * chunk:],
                           vf[:, :, n_chunks * chunk:],
-                          k_pos[n_chunks * chunk:])
+                          k_pos[..., n_chunks * chunk:])
 
     m, l, acc = carry
     out = acc / jnp.maximum(l, 1e-30)[..., None]
@@ -187,9 +197,9 @@ def attention(
     x: jnp.ndarray,                      # (B, Sq, D)
     recipe: MatmulRecipe,
     *,
-    positions: Optional[jnp.ndarray] = None,   # (Sq,) absolute positions
+    positions: Optional[jnp.ndarray] = None,   # (Sq,) or (B, Sq) absolute
     cache: Optional[Dict[str, jnp.ndarray]] = None,
-    cache_len: Optional[jnp.ndarray] = None,   # scalar int32: tokens already cached
+    cache_len: Optional[jnp.ndarray] = None,   # int32 scalar or (B,) cached
     causal: bool = True,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """Self-attention sublayer.  Returns (out, updated_cache)."""
@@ -232,7 +242,7 @@ def attention(
                 chunk=cfg.attention_chunk, unroll=cfg.unroll_attention)
     else:
         new_cache, k_all, v_all, k_pos = _update_cache(
-            cache, k, v, cache_len, window)
+            cache, k, v, cache_len, window, cfg.kv_cache_format)
         out = chunked_attention(
             q, k_all, v_all, positions, k_pos, causal=causal, window=window,
             chunk=cfg.attention_chunk, unroll=cfg.unroll_attention)
@@ -288,40 +298,93 @@ def cross_attention(
 # ---------------------------------------------------------------------------
 
 def attn_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
-                    dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+                    dtype=jnp.bfloat16, per_slot: bool = False
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
     """Cache spec for ONE attention layer.
 
     Sliding-window configs get a ring buffer bounded by the window size —
     this is what makes long_500k decode sub-quadratic (and sub-linear in
     memory) for SWA archs.
+
+    ``per_slot`` gives every batch row its own position track
+    (pos (batch, size) instead of (size,)) so a continuous-batching engine
+    can hold slots at different sequence offsets in one cache.
+
+    ``cfg.kv_cache_format`` (serving-side, 8-bit) swaps the K/V leaves for
+    uint8 codes plus per-(token, kv-head) f32 scales — quantize on append,
+    dequantize on read (see ``core.packed.kv_quantize``).
     """
     size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     hd = cfg.resolved_head_dim
-    return {
-        "k": jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, hd), dtype),
-        "v": jax.ShapeDtypeStruct((batch, size, cfg.n_kv_heads, hd), dtype),
-        "pos": jax.ShapeDtypeStruct((size,), jnp.int32),
+    kvh = cfg.n_kv_heads
+    pos_shape = (batch, size) if per_slot else (size,)
+    spec: Dict[str, jax.ShapeDtypeStruct] = {
+        "pos": jax.ShapeDtypeStruct(pos_shape, jnp.int32),
     }
+    if cfg.kv_cache_format:
+        spec["k"] = jax.ShapeDtypeStruct((batch, size, kvh, hd), jnp.uint8)
+        spec["v"] = jax.ShapeDtypeStruct((batch, size, kvh, hd), jnp.uint8)
+        spec["k_scale"] = jax.ShapeDtypeStruct((batch, size, kvh),
+                                               jnp.float32)
+        spec["v_scale"] = jax.ShapeDtypeStruct((batch, size, kvh),
+                                               jnp.float32)
+    else:
+        spec["k"] = jax.ShapeDtypeStruct((batch, size, kvh, hd), dtype)
+        spec["v"] = jax.ShapeDtypeStruct((batch, size, kvh, hd), dtype)
+    return spec
 
 
 def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
-                    dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
-    spec = attn_cache_spec(cfg, batch, max_len, dtype)
+                    dtype=jnp.bfloat16,
+                    per_slot: bool = False) -> Dict[str, jnp.ndarray]:
+    spec = attn_cache_spec(cfg, batch, max_len, dtype, per_slot)
     cache = {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}
     cache["pos"] = jnp.full(spec["pos"].shape, -1, jnp.int32)
     return cache
 
 
-def _update_cache(cache, k, v, cache_len, window):
-    """Write new K/V at [cache_len, cache_len+sq) (mod ring size)."""
+def _update_cache(cache, k, v, cache_len, window, kv_format=None):
+    """Write new K/V at [cache_len, cache_len+sq) (mod ring size).
+
+    ``cache_len`` is either a scalar (whole batch at one offset) or a
+    ``(B,)`` vector (per-slot decode: every batch row advances from its own
+    length).  Quantized caches store uint8 codes + f32 scales; the read
+    side dequantizes the whole cache back into the compute dtype, so the
+    attention math itself is unchanged.
+    """
     sq = k.shape[1]
     size = cache["k"].shape[1]
     start = cache_len.astype(jnp.int32)
-    new_pos = start + jnp.arange(sq, dtype=jnp.int32)
-    # Ring indexing for windowed caches; identity when size covers max_len.
-    idx = new_pos % size if window else new_pos
-    k_new = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
-    v_new = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
-    pos_new = cache["pos"].at[idx].set(new_pos)
-    new_cache = {"k": k_new, "v": v_new, "pos": pos_new}
-    return new_cache, k_new, v_new, pos_new
+    if start.ndim:                      # per-slot (B,) lengths
+        new_pos = start[:, None] + jnp.arange(sq, dtype=jnp.int32)[None]
+        # Ring indexing for windowed caches; identity otherwise.
+        idx = new_pos % size if window else new_pos
+        bidx = jnp.arange(k.shape[0], dtype=jnp.int32)[:, None]
+
+        def put(dst, src):
+            return dst.at[bidx, idx].set(src.astype(dst.dtype))
+    else:
+        new_pos = start + jnp.arange(sq, dtype=jnp.int32)
+        idx = new_pos % size if window else new_pos
+
+        def put(dst, src):
+            return dst.at[:, idx].set(src.astype(dst.dtype))
+
+    if kv_format is not None and "k_scale" in cache:
+        from repro.core.packed import kv_dequantize, kv_quantize
+        kc, ks = kv_quantize(k, kv_format)
+        vc, vs = kv_quantize(v, kv_format)
+        new_cache = {"k": put(cache["k"], kc), "v": put(cache["v"], vc),
+                     "k_scale": put(cache["k_scale"], ks),
+                     "v_scale": put(cache["v_scale"], vs)}
+        k_all = kv_dequantize(new_cache["k"], new_cache["k_scale"],
+                              kv_format, k.dtype)
+        v_all = kv_dequantize(new_cache["v"], new_cache["v_scale"],
+                              kv_format, v.dtype)
+    else:
+        new_cache = {"k": put(cache["k"], k), "v": put(cache["v"], v)}
+        k_all, v_all = new_cache["k"], new_cache["v"]
+    pos_new = (put(cache["pos"], new_pos) if cache["pos"].ndim == 2
+               else cache["pos"].at[idx].set(new_pos))
+    new_cache["pos"] = pos_new
+    return new_cache, k_all, v_all, pos_new

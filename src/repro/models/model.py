@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.packed import PackedTensor
 from repro.core.recipe import PrecisionPlan, as_plan
 from repro.models import stack as stack_lib
 from repro.nn.layers import (apply_norm, linear, shard_hint,
@@ -73,15 +74,20 @@ class Model:
 
     def cast_params(self, params):
         """FP32 master -> compute-dtype copy (explicit-dtype specs, e.g. the
-        FP32 router / mamba dt/A params, keep their dtype)."""
+        FP32 router / mamba dt/A params, keep their dtype).  PackedTensor
+        leaves (quantize-once serving panels) pass through unchanged — they
+        are expanded to the compute dtype at their consuming matmul."""
         specs = self.param_specs()
 
         def cast(p, s):
+            if isinstance(p, PackedTensor):
+                return p
             if s.dtype is None and jnp.issubdtype(p.dtype, jnp.floating):
                 return p.astype(self._dt)
             return p
 
-        return jax.tree.map(cast, params, specs)
+        return jax.tree.map(cast, params, specs,
+                            is_leaf=lambda x: isinstance(x, PackedTensor))
 
     def abstract_params(self, dtype=jnp.float32):
         return spec_shapes(self.param_specs(), dtype)
@@ -116,7 +122,10 @@ class Model:
         if cfg.pos_emb == "learned":
             pos = (jnp.arange(tokens.shape[1], dtype=jnp.int32)
                    if positions is None else positions)
-            x = x + params["pos_embed"].astype(self._dt)[pos][None]
+            pe = params["pos_embed"].astype(self._dt)[pos]
+            # (Sq,) positions broadcast over batch; (B, Sq) per-slot
+            # positions (batched decode engine) index per row directly
+            x = x + (pe if pos.ndim == tokens.ndim else pe[None])
         return shard_hint(x, ("batch", "seq", "embed"))
 
     def _head(self, params, x: jnp.ndarray,
@@ -274,24 +283,41 @@ class Model:
     # Serving: prefill + decode
     # ------------------------------------------------------------------
 
-    def cache_spec(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+    def cache_spec(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   per_slot: bool = False):
+        """``per_slot=True`` gives every batch row its own length/position
+        tracking (the batched continuous-decode engine's slot cache):
+        ``length`` becomes ``(batch,)`` and attention ``pos`` buffers gain a
+        leading batch dim, so rows can sit at different decode depths."""
         spec = {
             "stack": stack_lib.stack_cache_spec(self.cfg, batch, max_len,
-                                                dtype),
-            "length": jax.ShapeDtypeStruct((), jnp.int32),
+                                                dtype, per_slot=per_slot),
+            "length": jax.ShapeDtypeStruct((batch,) if per_slot else (),
+                                           jnp.int32),
         }
         return spec
 
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   per_slot: bool = False):
         return {
             "stack": stack_lib.init_stack_cache(self.cfg, batch, max_len,
-                                                dtype),
-            "length": jnp.zeros((), jnp.int32),
+                                                dtype, per_slot=per_slot),
+            "length": jnp.zeros((batch,) if per_slot else (), jnp.int32),
         }
 
     def prefill(self, params, batch: Dict[str, jnp.ndarray], cache,
-                plan) -> Tuple[jnp.ndarray, Any]:
-        """Process the prompt; returns (last-position logits, filled cache)."""
+                plan, *, true_length=None) -> Tuple[jnp.ndarray, Any]:
+        """Process the prompt; returns (last-position logits, filled cache).
+
+        ``true_length`` (traced scalar) supports bucket-padded prompts: the
+        returned logits come from position ``true_length - 1`` instead of
+        the last padded column, and the cache length advances by
+        ``true_length``.  The padded tail still writes K/V, but at positions
+        ``>= true_length`` — causally masked for every later query until a
+        real decode step overwrites them, so full-attention logits are
+        unchanged.  (Not valid for SSM recurrences or ring-buffer windows —
+        the decode engine falls back to exact-length prefill there.)
+        """
         cfg = self.cfg
         plan = self._plan(plan)
         params = self.cast_params(params)
@@ -299,25 +325,39 @@ class Model:
         sq = tokens.shape[1]
         # absolute positions continue from whatever is already cached
         # (segmented/streaming prefill passes partially-filled caches)
-        positions = (cache["length"].astype(jnp.int32)
-                     + jnp.arange(sq, dtype=jnp.int32))
+        length = cache["length"].astype(jnp.int32)
+        arange = jnp.arange(sq, dtype=jnp.int32)
+        positions = (length[:, None] + arange[None] if length.ndim
+                     else length + arange)
         x = self._embed(params, tokens, positions=positions)
         cross = self._cross_states(params, batch, plan)
         x, new_stack, _ = stack_lib.run_stack(
             params["stack"], cfg, plan, x, positions=positions,
             cross_states=cross, cache=cache["stack"],
             cache_len=cache["length"], decode=False)
-        logits = self._head(params, x[:, -1:], plan)
-        return logits, {"stack": new_stack, "length": cache["length"] + sq}
+        if true_length is None:
+            x_last = x[:, -1:]
+            advance = sq
+        else:
+            tl = jnp.asarray(true_length, jnp.int32)
+            x_last = jax.lax.dynamic_slice_in_dim(x, tl - 1, 1, axis=1)
+            advance = tl
+        logits = self._head(params, x_last, plan)
+        return logits, {"stack": new_stack,
+                        "length": cache["length"] + advance}
 
     def decode_step(self, params, token: jnp.ndarray, cache,
                     plan) -> Tuple[jnp.ndarray, Any]:
-        """One decode step.  token: (B, 1) int32 -> logits (B, 1, V)."""
+        """One decode step.  token: (B, 1) int32 -> logits (B, 1, V).
+
+        A per-slot cache (vector ``length``) decodes all rows batched, each
+        at its own position — the batched-engine hot path."""
         cfg = self.cfg
         plan = self._plan(plan)
         params = self.cast_params(params)
         pos = cache["length"]
-        positions = pos[None].astype(jnp.int32)
+        positions = (pos[:, None] if pos.ndim else pos[None]
+                     ).astype(jnp.int32)
         x = self._embed(params, token, positions=positions)
         x, new_stack, _ = stack_lib.run_stack(
             params["stack"], cfg, plan, x, positions=positions,

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.packed import PackedTensor
 from repro.core.qlinear import matmul_impl
 from repro.core.recipe import MatmulRecipe
 from repro.nn.layers import ACTIVATIONS, shard_hint
@@ -47,6 +48,10 @@ def moe_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
 def _expert_linear(x: jnp.ndarray, w: jnp.ndarray,
                    recipe: MatmulRecipe, impl: str = "qdq") -> jnp.ndarray:
     """Batched per-expert quantized matmul: (E, C, K) @ (E, K, N)."""
+    if isinstance(w, PackedTensor):
+        # quantize-once serving panels: expand per expert (tile blocks were
+        # packed per expert, so this is the exact per-expert QDQ reference)
+        w = w.dequantize().astype(x.dtype)
     if recipe.is_passthrough:
         return jnp.einsum("eck,ekn->ecn", x, w)
     key = jnp.zeros((2,), jnp.uint32)

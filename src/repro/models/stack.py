@@ -131,10 +131,11 @@ def _period(specs: List[LayerSpec]) -> int:
 # ---------------------------------------------------------------------------
 
 def _layer_cache_spec(cfg: ModelConfig, spec: LayerSpec, batch: int,
-                      max_len: int, dtype):
+                      max_len: int, dtype, per_slot: bool = False):
     c: Dict[str, Any] = {}
     if spec.mixer == "attn":
-        c["self"] = attn_lib.attn_cache_spec(cfg, batch, max_len, dtype)
+        c["self"] = attn_lib.attn_cache_spec(cfg, batch, max_len, dtype,
+                                             per_slot=per_slot)
     else:
         c["self"] = ssm_lib.mamba_cache_spec(cfg, batch, dtype)
     if spec.cross:
@@ -150,11 +151,13 @@ def _layer_cache_spec(cfg: ModelConfig, spec: LayerSpec, batch: int,
 
 def stack_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
                      dtype=jnp.bfloat16,
-                     specs: Optional[List[LayerSpec]] = None):
+                     specs: Optional[List[LayerSpec]] = None,
+                     per_slot: bool = False):
     """ShapeDtypeStruct cache pytree matching run_stack's cache layout."""
     specs = specs if specs is not None else cfg.layer_specs()
     if not cfg.scan_layers:
-        return {"layers": [_layer_cache_spec(cfg, s, batch, max_len, dtype)
+        return {"layers": [_layer_cache_spec(cfg, s, batch, max_len, dtype,
+                                             per_slot)
                            for s in specs]}
     period = _period(specs)
     n_groups = len(specs) // period
@@ -163,15 +166,16 @@ def stack_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
         return jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype)
 
     group = {f"l{i:02d}": _layer_cache_spec(cfg, specs[i], batch, max_len,
-                                            dtype)
+                                            dtype, per_slot)
              for i in range(period)}
     return {"groups": jax.tree.map(bump, group)}
 
 
 def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
                      dtype=jnp.bfloat16,
-                     specs: Optional[List[LayerSpec]] = None):
-    spec_tree = stack_cache_spec(cfg, batch, max_len, dtype, specs)
+                     specs: Optional[List[LayerSpec]] = None,
+                     per_slot: bool = False):
+    spec_tree = stack_cache_spec(cfg, batch, max_len, dtype, specs, per_slot)
 
     def mk(s: jax.ShapeDtypeStruct):
         return jnp.zeros(s.shape, s.dtype)

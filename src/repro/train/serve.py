@@ -1,7 +1,7 @@
 """Batched serving: prefill + greedy/temperature decode loops."""
 from __future__ import annotations
 
-import functools
+import weakref
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -12,17 +12,39 @@ from repro.models.model import Model
 
 __all__ = ["make_prefill_fn", "make_decode_fn", "generate"]
 
+# Compiled serving fns, keyed per model instance (weak — dropping the model
+# drops its cache) by (kind, recipe, jit).  Recipes are frozen dataclasses,
+# so they hash; repeated `generate` calls reuse the jitted fn instead of
+# rebuilding a fresh jax.jit wrapper (and its compile cache) every call.
+_FN_CACHE: "weakref.WeakKeyDictionary[Model, Dict[Any, Any]]" = \
+    weakref.WeakKeyDictionary()
+
+
+def _cached(model: Model, key, build):
+    try:
+        hash(key)
+    except TypeError:
+        return build()
+    per_model = _FN_CACHE.setdefault(model, {})
+    if key not in per_model:
+        per_model[key] = build()
+    return per_model[key]
+
 
 def make_prefill_fn(model: Model, recipe: PrecisionRecipe, *, jit=True):
-    def prefill(params, batch, cache):
-        return model.prefill(params, batch, cache, recipe)
-    return jax.jit(prefill) if jit else prefill
+    def build():
+        def prefill(params, batch, cache):
+            return model.prefill(params, batch, cache, recipe)
+        return jax.jit(prefill) if jit else prefill
+    return _cached(model, ("prefill", recipe, jit), build)
 
 
 def make_decode_fn(model: Model, recipe: PrecisionRecipe, *, jit=True):
-    def decode(params, token, cache):
-        return model.decode_step(params, token, cache, recipe)
-    return jax.jit(decode, donate_argnums=(2,)) if jit else decode
+    def build():
+        def decode(params, token, cache):
+            return model.decode_step(params, token, cache, recipe)
+        return jax.jit(decode, donate_argnums=(2,)) if jit else decode
+    return _cached(model, ("decode", recipe, jit), build)
 
 
 def generate(model: Model, params, prompts: jnp.ndarray, *,

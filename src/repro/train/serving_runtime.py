@@ -1,16 +1,23 @@
-"""Serving runtime: continuous batching, FP4 weight-only serving weights,
-streaming long-context prefill.
+"""Serving runtime: quantize-once weight panels, batched continuous decode,
+FP8 KV caches, streaming long-context prefill.
 
-Three production-serving features that reuse the paper's quantization core:
+Four production-serving features that reuse the paper's quantization core:
 
 * ``quantize_weights_for_serving`` — FP4/FP8 weight-only compression of a
-  trained checkpoint (per-block QDQ via the same grids as training).  Halves
-  (FP8) or quarters (FP4) serving HBM per chip; the paper's per-block-128
-  scaling keeps matmul accuracy (logits stay close — tested).
-* ``ContinuousBatcher`` — slot-based continuous batching: a fixed decode
-  batch of S slots; finished/empty slots are refilled from a request queue
-  with per-slot prefill, while live slots keep decoding.  The classic
-  serving-throughput mechanism (Orca/vLLM-style, static-shape variant).
+  trained checkpoint.  The default ``packed=True`` quantizes every eligible
+  linear weight exactly ONCE at load into a ``core.packed.PackedTensor``
+  (uint8 codes + per-block-128 scales), which really shrinks serving HBM
+  (~0.25x / ~0.5x of bf16 for FP4 / FP8 plus scale overhead — see
+  ``serving_memory_report``).  ``packed=False`` keeps the legacy simulated
+  path: per-block QDQ that stores the *dequantized* bf16/f32 values — it
+  measures quantization accuracy but saves no memory.
+* ``DecodeEngine`` — slot-indexed batched decode: one per-slot KV cache
+  holds all slots, prefill runs per request (bucket-padded so prompt
+  lengths don't retrace), ``insert`` splices a prefilled slot in, and a
+  single jitted ``generate_step`` decodes ALL live slots in one batched
+  forward (maxtext-style prefill/insert/generate split).
+* ``ContinuousBatcher`` — request-queue bookkeeping over the engine
+  (Orca/vLLM-style continuous batching, static-shape variant).
 * ``streaming_prefill`` — long-context prefill in fixed-size segments
   (SSM state and KV cache carry across segments), bounding activation
   memory for 500k-token prompts.
@@ -25,41 +32,116 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import formats as F
+from repro.core.packed import PackedTensor, pack_tensor, packed_nbytes
 from repro.core.quantize import QuantSpec, qdq
 from repro.core.recipe import PrecisionRecipe, RECIPES
-from repro.models.model import Model
+from repro.models.model import Model, build_model
 from repro.nn.params import ParamSpec
+from repro.telemetry.profiler import phase_span
 
-__all__ = ["quantize_weights_for_serving", "ContinuousBatcher",
-           "streaming_prefill"]
+__all__ = ["quantize_weights_for_serving", "serving_memory_report",
+           "DecodeEngine", "ContinuousBatcher", "streaming_prefill"]
+
+
+# Eligible-looking (>=2-D, dtype-None, no vocab axis) params that are NOT
+# consumed by a linear matmul, so the packed representation can't feed them:
+# pos_embed is indexed per position, the mamba short-conv weights are used
+# elementwise.  The legacy QDQ path quantizes them (values only change
+# within format tolerance); the packed path must leave them dense.
+_NOT_LINEAR_CONSUMED = {"pos_embed", "conv_wx", "conv_wb", "conv_wc"}
 
 
 def quantize_weights_for_serving(model: Model, params,
                                  fmt: str = "fp4_e2m1",
-                                 block: int = 128):
-    """Per-(block x block) weight-only QDQ of every >=2-D linear weight.
+                                 block: int = 128,
+                                 packed: bool = True):
+    """Weight-only quantization of every >=2-D linear weight for serving.
 
-    Norm scales, biases, routers and mamba dt/A stay untouched (the same
-    sensitive classes the training recipe protects).
+    ``packed=True`` (default): quantize once into ``PackedTensor`` panels —
+    uint8 codes + per-(block x block) f32 scales.  This is a real storage
+    change (FP4 ~4 bits/param, FP8 ~8 bits/param vs bf16's 16); the
+    serving matmuls (``core.qlinear.packed_linear``) consume the panel
+    directly and expand it to the compute dtype on the fly.  Decoded
+    values are bitwise identical to the ``packed=False`` QDQ output.
+
+    ``packed=False``: legacy simulated path — per-block QDQ that stores the
+    dequantized values in the original dtype.  Accuracy-equivalent, but it
+    saves NO memory (the array is still bf16/f32-sized); use it only to
+    study quantization error or as the bitwise reference for the packed
+    path.
+
+    Norm scales, biases, routers, embeddings/LM head and mamba dt/A stay
+    untouched (the same sensitive classes the training recipe protects).
     """
     spec = QuantSpec(fmt, "tile", block)
     specs = model.param_specs()
 
-    def q(p, s: ParamSpec):
-        if s.dtype is not None or len(s.shape) < 2:
-            return p  # protected / vector param
-        if "vocab" in (s.axes or ()):
-            return p  # embeddings / LM head stay high-precision
-        if len(s.shape) > 2:
-            # scan-stacked (layers, K, N): quantize per layer so tile
-            # blocks never span layer boundaries
-            lead = int(np.prod(s.shape[:-2]))
-            mat = p.reshape(lead, s.shape[-2], s.shape[-1])
-            out = jax.vmap(lambda m: qdq(m, spec, 1))(mat)
-            return out.reshape(p.shape)
-        return qdq(p, spec, 1)
+    if not packed:
+        def q(p, s: ParamSpec):
+            if s.dtype is not None or len(s.shape) < 2:
+                return p  # protected / vector param
+            if "vocab" in (s.axes or ()):
+                return p  # embeddings / LM head stay high-precision
+            if len(s.shape) > 2:
+                # scan-stacked (layers, K, N): quantize per layer so tile
+                # blocks never span layer boundaries
+                lead = int(np.prod(s.shape[:-2]))
+                mat = p.reshape(lead, s.shape[-2], s.shape[-1])
+                out = jax.vmap(lambda m: qdq(m, spec, 1))(mat)
+                return out.reshape(p.shape)
+            return qdq(p, spec, 1)
 
-    return jax.tree.map(q, params, specs)
+        return jax.tree.map(q, params, specs)
+
+    def qp(path, p, s: ParamSpec):
+        name = getattr(path[-1], "key", None)
+        if s.dtype is not None or len(s.shape) < 2:
+            return p
+        if "vocab" in (s.axes or ()) or name in _NOT_LINEAR_CONSUMED:
+            return p
+        # A packable leaf must end in a true (K, N) matmul panel.  Strip
+        # the scan-stack leading axis before the rank test: a stacked norm
+        # scale is (layers, d) — 2-D, but not a matrix.  (The legacy QDQ
+        # path quantizes those; dense values tolerate that, packed panels
+        # would break ``apply_norm``.)
+        axes = list(s.axes or ())
+        rank = len(s.shape)
+        if axes and axes[0] == "layers":
+            rank -= 1
+        if rank < 2:
+            return p
+        # pack_tensor vmaps over leading dims (scan-stacked layers, MoE
+        # experts), so tile blocks never span a layer/expert boundary —
+        # same isolation as the legacy path's per-layer vmap.
+        return pack_tensor(p, spec)
+
+    return jax.tree_util.tree_map_with_path(qp, params, specs)
+
+
+def serving_memory_report(params) -> Dict[str, float]:
+    """Measured storage of a (possibly packed) serving param tree.
+
+    ``bytes_per_packed_param`` counts payload + scales over the packed
+    leaves only; ``vs_bf16`` is that figure relative to 2 B/param.
+    """
+    packed_bytes, packed_params = packed_nbytes(params)
+    dense_bytes = dense_params = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedTensor)):
+        if not isinstance(leaf, PackedTensor):
+            dense_bytes += int(leaf.size) * leaf.dtype.itemsize
+            dense_params += int(leaf.size)
+    bpp = packed_bytes / max(packed_params, 1)
+    return {
+        "packed_bytes": int(packed_bytes),
+        "packed_params": int(packed_params),
+        "dense_bytes": int(dense_bytes),
+        "dense_params": int(dense_params),
+        "total_bytes": int(packed_bytes + dense_bytes),
+        "bytes_per_packed_param": float(bpp),
+        "vs_bf16": float(bpp / 2.0),
+    }
 
 
 def streaming_prefill(model: Model, params, tokens: jnp.ndarray, cache,
@@ -82,6 +164,158 @@ def streaming_prefill(model: Model, params, tokens: jnp.ndarray, cache,
     return logits, cache
 
 
+# ---------------------------------------------------------------------------
+# Batched decode engine (prefill / insert / generate split)
+# ---------------------------------------------------------------------------
+
+class DecodeEngine:
+    """Slot-indexed batched decode over one per-slot KV cache.
+
+    The serving hot loop splits into three jitted stages:
+
+      * ``prefill(prompt)``   — run one prompt through the model into a
+        fresh single-slot cache.  Prompts are right-padded to power-of-two
+        buckets (``min_bucket`` .. ``max_len``) so arbitrary lengths hit a
+        bounded set of compiled shapes; the padded tail writes K/V at
+        positions >= the true length, which stay causally masked until
+        decode overwrites them (full-attention only — SSM recurrences and
+        ring-window caches fall back to exact-length prefill and pay the
+        retrace).
+      * ``insert(c1, tok, slot)`` — splice the prefilled cache into slot
+        ``slot`` of the engine cache (one ``dynamic_update_slice`` per
+        leaf; the slot index is traced, so refill never retraces).
+      * ``generate_step()``   — ONE batched forward decodes every slot at
+        its own position (vector ``length`` cache).  Dead slots run too —
+        their logits are ignored and their lengths frozen via the traced
+        ``live`` mask, so occupancy changes never retrace.
+
+    ``kv_format`` ("fp8_e4m3" / "fp8_e5m2") switches the engine's cache to
+    quantized K/V storage (uint8 codes + per-(token, head) scales —
+    quantize on append, dequantize on read; ~half the cache HBM of bf16).
+    """
+
+    def __init__(self, model: Model, params, *, n_slots: int = 4,
+                 max_len: int = 512,
+                 recipe: Optional[PrecisionRecipe] = None,
+                 kv_format: Optional[str] = None,
+                 cache_dtype=None, jit: bool = True,
+                 min_bucket: int = 16):
+        if kv_format is not None:
+            if F.FORMATS[kv_format].bits != 8:
+                raise ValueError(
+                    f"kv_format must be an 8-bit format, got {kv_format}")
+            model = build_model(model.cfg.replace(kv_cache_format=kv_format))
+        self.model = model
+        self.params = params
+        self.recipe = recipe or RECIPES["bf16"]
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.min_bucket = min_bucket
+        self.cache_dtype = cache_dtype or jnp.bfloat16
+        specs = model.cfg.layer_specs()
+        # Bucket-padded prefill relies on padded K/V staying causally
+        # masked; SSM recurrences and ring-buffer windows consume the pad.
+        self._can_bucket = (all(s.mixer == "attn" and not s.cross
+                                for s in specs)
+                            and not model.cfg.sliding_window)
+        self.cache = model.init_cache(n_slots, max_len, self.cache_dtype,
+                                      per_slot=True)
+        self.live = np.zeros(n_slots, bool)
+        self.last_tok = np.zeros(n_slots, np.int32)
+        if jit:
+            self._prefill = jax.jit(self._prefill_impl)
+            self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+            self._generate = jax.jit(self._generate_impl,
+                                     donate_argnums=(1,))
+        else:
+            self._prefill = self._prefill_impl
+            self._insert = self._insert_impl
+            self._generate = self._generate_impl
+
+    # -- jitted stage bodies (bound methods; self rides in the closure) ----
+
+    def _prefill_impl(self, params, toks, true_len):
+        cache = self.model.init_cache(1, self.max_len, self.cache_dtype,
+                                      per_slot=True)
+        logits, cache = self.model.prefill(
+            params, {"tokens": toks}, cache, self.recipe,
+            true_length=true_len)
+        tok = jnp.argmax(logits[0, -1].astype(jnp.float32))
+        return tok.astype(jnp.int32), cache
+
+    def _insert_impl(self, cache, c1, slot):
+        def put(dst, src):
+            src = src.astype(dst.dtype)
+            if dst.shape == src.shape:
+                return src
+            ax = next(i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
+                      if a != b)
+            return jax.lax.dynamic_update_slice_in_dim(dst, src, slot, ax)
+
+        return jax.tree.map(put, cache, c1)
+
+    def _generate_impl(self, params, cache, toks, live):
+        logits, new_cache = self.model.decode_step(params, toks, cache,
+                                                   self.recipe)
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        # Dead slots decode too (their logits are ignored) but must not
+        # advance — freeze their lengths so a later insert starts clean.
+        new_cache["length"] = jnp.where(live, new_cache["length"],
+                                        cache["length"])
+        return nxt.astype(jnp.int32), new_cache
+
+    # -- public stages -----------------------------------------------------
+
+    def prefill(self, prompt) -> Tuple[int, Any]:
+        """Run one prompt; returns (first generated token, slot cache)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n = int(prompt.size)
+        assert 0 < n <= self.max_len, (n, self.max_len)
+        if self._can_bucket:
+            bucket = self.min_bucket
+            while bucket < n:
+                bucket *= 2
+            bucket = min(bucket, self.max_len)
+        else:
+            bucket = n  # exact-length fallback (SSM / ring caches)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :n] = prompt
+        with phase_span("decode_prefill"):
+            tok, c1 = self._prefill(self.params, jnp.asarray(padded),
+                                    jnp.int32(n))
+        return int(tok), c1
+
+    def insert(self, c1, first_tok: int, slot: int) -> None:
+        """Splice a prefilled single-slot cache into ``slot``."""
+        assert 0 <= slot < self.n_slots and not self.live[slot]
+        with phase_span("decode_insert"):
+            self.cache = self._insert(self.cache, c1, jnp.int32(slot))
+        self.live[slot] = True
+        self.last_tok[slot] = first_tok
+
+    def release(self, slot: int) -> None:
+        self.live[slot] = False
+
+    def generate_step(self) -> np.ndarray:
+        """One batched decode step; returns next token per slot (n_slots,).
+
+        Entries for dead slots are garbage — callers gate on their own
+        liveness bookkeeping.
+        """
+        with phase_span("decode_generate"):
+            toks = jnp.asarray(self.last_tok[:, None])
+            live = jnp.asarray(self.live)
+            nxt, self.cache = self._generate(self.params, self.cache, toks,
+                                             live)
+            nxt = np.asarray(nxt)
+        self.last_tok = np.where(self.live, nxt, self.last_tok)
+        return nxt
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching (request bookkeeping over the engine)
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass
 class _Slot:
     request_id: Optional[int] = None
@@ -92,28 +326,38 @@ class _Slot:
 class ContinuousBatcher:
     """Static-shape continuous batching over a fixed slot count.
 
-    Requests are (prompt, max_new_tokens).  Each step decodes ALL slots in
-    one batched decode; finished slots are refilled immediately.  Per-slot
-    KV isolation uses one cache per slot (batch=1 caches), which keeps the
-    implementation exact for every cache family (ring/SSM/cross) at the cost
-    of a python loop over slots for prefill — the decode hot loop is fully
-    batched per slot group.
+    Requests are (prompt, max_new_tokens).  Prefill runs per request into a
+    single-slot cache which is spliced into the shared per-slot cache;
+    every step then decodes ALL live slots in one batched ``generate_step``
+    (no per-slot Python loop on the hot path).  Finished slots are refilled
+    from the queue immediately.
     """
 
     def __init__(self, model: Model, params, n_slots: int = 4,
                  max_len: int = 512,
-                 recipe: Optional[PrecisionRecipe] = None):
-        self.model = model
-        self.params = params
-        self.recipe = recipe or RECIPES["bf16"]
+                 recipe: Optional[PrecisionRecipe] = None,
+                 kv_format: Optional[str] = None, jit: bool = True):
+        self.engine = DecodeEngine(model, params, n_slots=n_slots,
+                                   max_len=max_len, recipe=recipe,
+                                   kv_format=kv_format, jit=jit)
         self.n_slots = n_slots
         self.max_len = max_len
         self.queue: Deque[Tuple[int, np.ndarray, int]] = deque()
         self.slots = [_Slot() for _ in range(n_slots)]
-        self.caches: List[Any] = [None] * n_slots
-        self.last_tok = [None] * n_slots
         self.finished: Dict[int, List[int]] = {}
         self._next_id = 0
+
+    @property
+    def model(self) -> Model:
+        return self.engine.model
+
+    @property
+    def params(self):
+        return self.engine.params
+
+    @property
+    def recipe(self) -> PrecisionRecipe:
+        return self.engine.recipe
 
     # -- client API ---------------------------------------------------------
 
@@ -142,31 +386,23 @@ class ContinuousBatcher:
             if slot.request_id is not None or not self.queue:
                 continue
             rid, prompt, max_new = self.queue.popleft()
-            cache = self.model.init_cache(1, self.max_len)
-            logits, cache = self.model.prefill(
-                self.params, {"tokens": jnp.asarray(prompt[None])}, cache,
-                self.recipe)
-            tok = int(jnp.argmax(logits[0, -1]))
+            tok, c1 = self.engine.prefill(prompt)
             self.slots[i] = _Slot(rid, max_new - 1, [tok])
-            self.caches[i] = cache
-            self.last_tok[i] = tok
             if max_new - 1 <= 0:
                 self._finish(i)
+            else:
+                self.engine.insert(c1, tok, i)
 
     def _decode_step(self) -> None:
         live = [i for i, s in enumerate(self.slots)
                 if s.request_id is not None]
         if not live:
             return
-        for i in live:  # per-slot decode (exact for heterogeneous caches)
-            tok = jnp.asarray([[self.last_tok[i]]], jnp.int32)
-            logits, self.caches[i] = self.model.decode_step(
-                self.params, tok, self.caches[i], self.recipe)
-            nxt = int(jnp.argmax(logits[0, -1]))
+        nxt = self.engine.generate_step()
+        for i in live:
             slot = self.slots[i]
-            slot.generated.append(nxt)
+            slot.generated.append(int(nxt[i]))
             slot.remaining -= 1
-            self.last_tok[i] = nxt
             if slot.remaining <= 0:
                 self._finish(i)
 
@@ -174,5 +410,4 @@ class ContinuousBatcher:
         slot = self.slots[i]
         self.finished[slot.request_id] = slot.generated
         self.slots[i] = _Slot()
-        self.caches[i] = None
-        self.last_tok[i] = None
+        self.engine.release(i)

@@ -1,0 +1,213 @@
+"""Batched decode engine + quantize-once packed serving panels."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packed import PackedTensor, pack_tensor
+from repro.core.quantize import QuantSpec, qdq
+from repro.core.recipe import RECIPES
+from repro.models import build_model
+from repro.train.serve import generate, make_decode_fn, make_prefill_fn
+from repro.train.serving_runtime import (ContinuousBatcher, DecodeEngine,
+                                         quantize_weights_for_serving,
+                                         serving_memory_report)
+
+
+def _cfg(arch, **over):
+    mod = importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+    return mod.REDUCED.replace(dtype="float32", **over)
+
+
+# ---------------------------------------------------------------------------
+# Packed codec: bitwise parity with the training QDQ reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["fp4_e2m1", "fp8_e4m3"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pack_dequant_bitwise_matches_qdq(fmt, dtype):
+    spec = QuantSpec(fmt, "tile", 32)
+    # odd (non-multiple-of-block, odd column count) shape on purpose
+    w = (jax.random.normal(jax.random.PRNGKey(0), (70, 53)) * 3).astype(dtype)
+    ref = qdq(w, spec, 1)
+    pk = pack_tensor(w, spec)
+    got = pk.dequantize()
+    assert got.dtype == ref.dtype
+    assert np.asarray(got).tobytes() == np.asarray(ref).tobytes()
+
+
+def test_stacked_pack_is_per_layer():
+    """Tile blocks must never span scan-stacked layers / MoE experts."""
+    spec = QuantSpec("fp4_e2m1", "tile", 16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 24, 18)) * 2
+    pk = pack_tensor(w, spec)
+    ref = jax.vmap(lambda m: qdq(m, spec, 1))(w)
+    assert np.asarray(pk.dequantize()).tobytes() == np.asarray(ref).tobytes()
+
+
+def test_packed_forward_bitwise_matches_qdq_forward():
+    """The packed serving path must reproduce the legacy QDQ forward
+    bit-for-bit (unroll mode: the scan-stack path additionally QDQs the
+    stacked norm scales, a legacy quirk packed leaves alone)."""
+    cfg = _cfg("tiny", scan_layers=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    r = RECIPES["bf16"]
+    for fmt in ("fp4_e2m1", "fp8_e4m3"):
+        ref, _ = model.forward(
+            quantize_weights_for_serving(model, params, fmt, packed=False),
+            batch, r)
+        out, _ = model.forward(
+            quantize_weights_for_serving(model, params, fmt, packed=True),
+            batch, r)
+        assert np.asarray(out).tobytes() == np.asarray(ref).tobytes(), fmt
+
+
+def test_protected_classes_stay_dense():
+    """Norms, embeddings, routers-by-dtype, mamba conv/dt/A must not pack;
+    the mamba in-projections and out_proj must."""
+    cfg = _cfg("mamba2-780m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qp = quantize_weights_for_serving(model, params, "fp4_e2m1")
+
+    def flat(tree):
+        return {jax.tree_util.keystr(p): leaf
+                for p, leaf in jax.tree_util.tree_flatten_with_path(
+                    tree, is_leaf=lambda x: isinstance(x, PackedTensor))[0]}
+
+    orig, quant = flat(params), flat(qp)
+    protected = ("conv_wx", "conv_wb", "conv_wc", "dt_bias", "a_log",
+                 "d_skip", "embed", "scale")
+    packed_names = ("in_x", "in_z", "out_proj")
+    seen_packed = 0
+    for key, leaf in quant.items():
+        name = key.rsplit("'", 2)[-2] if "'" in key else key
+        if any(name == p for p in protected):
+            assert not isinstance(leaf, PackedTensor), key
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.asarray(orig[key]))
+        if any(name == p for p in packed_names):
+            assert isinstance(leaf, PackedTensor), key
+            seen_packed += 1
+    assert seen_packed  # the eligible class actually packed
+
+
+def test_memory_report_measures_compression():
+    cfg = _cfg("tiny")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    r4 = serving_memory_report(
+        quantize_weights_for_serving(model, params, "fp4_e2m1"))
+    r8 = serving_memory_report(
+        quantize_weights_for_serving(model, params, "fp8_e4m3"))
+    assert 0.20 < r4["vs_bf16"] < 0.30, r4
+    assert 0.45 < r8["vs_bf16"] < 0.55, r8
+    assert r4["packed_params"] == r8["packed_params"] > 0
+    assert r4["packed_bytes"] < r8["packed_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Batched decode engine
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_sequential_generate():
+    """Bucket-padded prefill + batched per-slot decode == one-at-a-time
+    greedy generation, token-exact, across mixed prompt lengths."""
+    cfg = _cfg("tiny")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (5, 12, 9)]
+    n_new = 6
+
+    engine = DecodeEngine(model, params, n_slots=len(prompts), max_len=64,
+                          min_bucket=8)
+    assert engine._can_bucket
+    for s, p in enumerate(prompts):
+        tok, c1 = engine.prefill(p)
+        engine.insert(c1, tok, s)
+    got = [[engine.last_tok[s]] for s in range(len(prompts))]
+    for _ in range(n_new - 1):
+        nxt = engine.generate_step()
+        for s in range(len(prompts)):
+            got[s].append(int(nxt[s]))
+
+    for s, p in enumerate(prompts):
+        ref = generate(model, params, jnp.asarray(p)[None],
+                       max_new_tokens=n_new, jit=False)[0, len(p):]
+        assert got[s] == [int(t) for t in ref], (s, got[s], ref)
+
+
+def test_engine_fp8_kv_logits_close():
+    """FP8 KV cache decode stays within tolerance of the exact-cache
+    logits (per-(token, head) scales over head_dim)."""
+    cfg = _cfg("tiny")
+    model = build_model(cfg)
+    mq = build_model(cfg.replace(kv_cache_format="fp8_e4m3"))
+    params = model.init(jax.random.PRNGKey(0))
+    r = RECIPES["bf16"]
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 12), 0,
+                              cfg.vocab_size)
+
+    c_ref = model.init_cache(2, 32, jnp.float32, per_slot=True)
+    c_q = mq.init_cache(2, 32, jnp.float32, per_slot=True)
+    lg_ref, c_ref = model.prefill(params, {"tokens": toks}, c_ref, r)
+    lg_q, c_q = mq.prefill(params, {"tokens": toks}, c_q, r)
+    errs = [float(jnp.max(jnp.abs(lg_q - lg_ref)))]
+    for _ in range(4):
+        nxt = jnp.argmax(lg_ref[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        lg_ref, c_ref = model.decode_step(params, nxt, c_ref, r)
+        lg_q, c_q = mq.decode_step(params, nxt, c_q, r)
+        errs.append(float(jnp.max(jnp.abs(lg_q - lg_ref)))
+                    )
+    assert max(errs) < 0.5, errs
+    assert max(errs) > 0.0  # quantization actually happened
+
+
+def test_engine_rejects_non_8bit_kv_format():
+    cfg = _cfg("tiny")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        DecodeEngine(model, params, kv_format="fp4_e2m1")
+
+
+def test_mamba_engine_exact_length_fallback():
+    """SSM recurrences can't take bucket padding; the engine must fall
+    back to exact-length prefill and still match sequential decode."""
+    cfg = _cfg("mamba2-780m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (4, 6)]
+    bat = ContinuousBatcher(model, params, n_slots=2, max_len=32)
+    assert not bat.engine._can_bucket
+    rids = [bat.submit(p, 3) for p in prompts]
+    out = bat.run()
+    for rid, p in zip(rids, prompts):
+        ref = generate(model, params, jnp.asarray(p)[None],
+                       max_new_tokens=3, jit=False)[0, len(p):]
+        assert out[rid] == [int(t) for t in ref], (rid, out[rid], ref)
+
+
+def test_serve_fn_cache_reuses_compiled_fns():
+    cfg = _cfg("tiny")
+    model = build_model(cfg)
+    model2 = build_model(cfg)
+    r = RECIPES["bf16"]
+    assert make_decode_fn(model, r) is make_decode_fn(model, r)
+    assert make_prefill_fn(model, r) is make_prefill_fn(model, r)
+    # distinct key dimensions get distinct fns
+    assert make_decode_fn(model, r) is not make_decode_fn(model, r,
+                                                          jit=False)
+    assert make_decode_fn(model, r) is not make_prefill_fn(model, r)
+    assert make_decode_fn(model, r) is not make_decode_fn(model2, r)
