@@ -2,7 +2,6 @@
 rows, optionally mirrored to a machine-readable BENCH JSON file."""
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import platform
@@ -10,7 +9,6 @@ import time
 from typing import Any, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig

@@ -8,7 +8,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-import sys
 from collections import defaultdict
 
 ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")

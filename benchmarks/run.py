@@ -15,7 +15,6 @@ Timing rows carry step-time percentile fields (``p50_us``/``p95_us``/
 kernel, and step sections (``bench.v1``).
 """
 import argparse
-import sys
 
 
 def main() -> None:

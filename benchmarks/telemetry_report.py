@@ -21,7 +21,7 @@ import argparse
 import collections
 import os
 import re
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.telemetry.writer import read_jsonl
 

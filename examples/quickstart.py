@@ -2,7 +2,6 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig, get_config
 from repro.data import SyntheticLM

@@ -1,5 +1,14 @@
-"""Parse collective ops (and their per-shard operand bytes) from post-
-optimization HLO text (``compiled.as_text()``).
+"""Shared HLO-text walker + passes over it (collective bytes, qlint).
+
+``walk_hlo`` parses post-optimization HLO text (``compiled.as_text()``)
+into one :class:`HloOp` record per instruction line — ONE parser that
+every analysis pass shares:
+
+  * :func:`parse_collectives` / :func:`collective_bytes` — the roofline's
+    wire-byte census (PR-6), output bit-for-bit what the pre-walker
+    implementation produced;
+  * ``analysis.qlint`` — kernel-presence / payload-dtype / op-metadata
+    checks over the same records.
 
 Shapes in post-SPMD HLO are per-device shard shapes, so the sums here are
 per-chip bytes moved, matching the roofline convention
@@ -18,19 +27,22 @@ analytic corrections for the remaining interior scans (analysis.roofline).
 """
 from __future__ import annotations
 
+import dataclasses
 import re
 from collections import defaultdict
-from typing import Dict, List, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["parse_collectives", "collective_bytes", "COLLECTIVE_FACTORS"]
+__all__ = ["HloOp", "walk_hlo", "parse_collectives", "collective_bytes",
+           "COLLECTIVE_FACTORS", "shape_bytes", "DTYPE_BYTES"]
 
-_DTYPE_BYTES = {
+DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
 }
+_DTYPE_BYTES = DTYPE_BYTES  # historic private alias
 
 COLLECTIVE_FACTORS = {
     "all-reduce": 2.0,
@@ -40,21 +52,83 @@ COLLECTIVE_FACTORS = {
     "collective-permute": 1.0,
 }
 
-# e.g.:  %all-gather.3 = bf16[4,1024,512]{2,1,0} all-gather(%param.1), ...
-#        %ags = (bf16[8],bf16[8]) all-gather-start(...)
-_KIND_RE = re.compile(
-    r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|"
-    r"collective-permute)(-start|-done)?\(")
+# An instruction call after the '=': the first `mnemonic(` token, e.g.
+#   %ag.3 = bf16[4,1024,512]{2,1,0} all-gather(%param.1), ...
+#   %ags = (bf16[8],bf16[8]) all-gather-start(...)
+# Result-shape tokens (`bf16[4,...]`) never match (no '(' follows), and
+# the lhs name sits before the '=' so it is never scanned.
+_CALL_RE = re.compile(r"[\s)]([a-z][a-z0-9\-]*)\(")
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
 
 
-def _shape_bytes(dtype: str, dims: str) -> int:
-    nb = _DTYPE_BYTES.get(dtype)
+def shape_bytes(dtype: str, dims: str) -> int:
+    """Payload bytes of one ``dtype[dims]`` result shape (0 if unknown)."""
+    nb = DTYPE_BYTES.get(dtype)
     if nb is None:
         return 0
     if not dims:
         return nb
     return int(np.prod([int(d) for d in dims.split(",")])) * nb
+
+
+_shape_bytes = shape_bytes  # historic private alias
+
+
+@dataclasses.dataclass(frozen=True)
+class HloOp:
+    """One parsed HLO instruction line.
+
+    ``mnemonic`` is the instruction as written (``all-gather-start``);
+    ``base``/``variant`` split the async suffix (``all-gather``,
+    ``-start``).  ``shapes`` are the (dtype, dims) result-shape tokens
+    between the ``=`` and the call — for async ``-start`` tuples that
+    includes operand AND destination buffers, so payload accounting takes
+    the max-byte element (see :meth:`payload_shape`).  ``line`` keeps the
+    raw text for pass-specific regexes (shardings, metadata).
+    """
+    mnemonic: str
+    base: str
+    variant: str
+    shapes: Tuple[Tuple[str, str], ...]
+    line: str
+
+    def payload_shape(self) -> Optional[Tuple[str, str]]:
+        """The largest-byte result shape, or None if no shape parsed."""
+        if not self.shapes:
+            return None
+        return max(self.shapes, key=lambda s: shape_bytes(*s))
+
+    @property
+    def op_name(self) -> Optional[str]:
+        """The ``metadata={op_name="..."}`` path (named-scope trail), if
+        present on the line."""
+        m = _OP_NAME_RE.search(self.line)
+        return m.group(1) if m else None
+
+
+def walk_hlo(hlo_text: str) -> Iterator[HloOp]:
+    """Yield one :class:`HloOp` per instruction line of ``hlo_text``.
+
+    Lines without an ``=`` or without a recognizable ``mnemonic(`` call
+    (module/computation headers, braces) are skipped.
+    """
+    for line in hlo_text.splitlines():
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        m = _CALL_RE.search(line, eq)
+        if not m:
+            continue
+        mnemonic = m.group(1)
+        base, variant = mnemonic, ""
+        for suf in ("-start", "-done"):
+            if mnemonic.endswith(suf):
+                base, variant = mnemonic[: -len(suf)], suf
+                break
+        yield HloOp(mnemonic=mnemonic, base=base, variant=variant,
+                    shapes=tuple(_SHAPE_RE.findall(line[eq:m.start()])),
+                    line=line)
 
 
 def parse_collectives(hlo_text: str) -> List[Tuple[str, str, int]]:
@@ -65,19 +139,14 @@ def parse_collectives(hlo_text: str) -> List[Tuple[str, str, int]]:
     skipped.  Bytes are per-shard (post-SPMD HLO shapes).
     """
     out = []
-    for line in hlo_text.splitlines():
-        m = _KIND_RE.search(line)
-        if not m or m.group(2) == "-done":
+    for op in walk_hlo(hlo_text):
+        if op.base not in COLLECTIVE_FACTORS or op.variant == "-done":
             continue
-        eq = line.find("=")
-        if eq < 0:
+        shape = op.payload_shape()
+        if shape is None:
             continue
-        shapes = _SHAPE_RE.findall(line[eq:m.start()])
-        if not shapes:
-            continue
-        dtype, dims = max(shapes, key=lambda s: _shape_bytes(*s))
-        out.append((m.group(1), f"{dtype}[{dims}]",
-                    _shape_bytes(dtype, dims)))
+        dtype, dims = shape
+        out.append((op.base, f"{dtype}[{dims}]", shape_bytes(dtype, dims)))
     return out
 
 

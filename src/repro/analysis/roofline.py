@@ -21,7 +21,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeCell
 

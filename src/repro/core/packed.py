@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -141,7 +141,15 @@ class PackedTensor:
         Table-gather of the grid value, sign applied from the code's top
         bit (reproducing QDQ's -0.0 exactly), then the per-tile rescale in
         the same blocked layout and cast order as ``quantize_dequantize``.
+
+        The body runs under a ``packed_dequant`` named scope — pure graph
+        metadata letting ``analysis.qlint`` tell a serving-panel decode
+        apart from a training-path quantize (``qdq_*`` scopes).
         """
+        with jax.named_scope("packed_dequant"):
+            return self._dequantize_impl(dtype)
+
+    def _dequantize_impl(self, dtype=None) -> jnp.ndarray:
         dt = jnp.dtype(dtype or self.ddtype)
         codes = self.payload
         if _pack2(self.fmt):

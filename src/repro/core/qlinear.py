@@ -38,12 +38,14 @@ are exactly the groupings an FP4/FP8 tensor-core epilogue can rescale.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import routing
 from repro.core.packed import PackedTensor
 from repro.core.quantize import BF16_SPEC, QuantSpec, qdq
 from repro.core.recipe import MatmulRecipe
@@ -52,7 +54,16 @@ from repro.telemetry.profiler import graph_span
 
 __all__ = ["qmatmul", "pallas_qmatmul", "pallas_qmatmul_two_pass",
            "pallas_qmatmul_stats", "qlinear", "packed_linear", "dot_qdq",
-           "kernel_quant_mode", "matmul_impl"]
+           "kernel_quant_mode", "kernel_unsupported_reason", "matmul_impl"]
+
+
+def _role_scope(role: Optional[str]):
+    """``jax.named_scope`` marker attributing ops to a matmul role in the
+    jaxpr/HLO (``qrole_fwd`` / ``qrole_dgrad`` / ``qrole_wgrad``).  Pure
+    metadata: the computation is bit-identical with or without it."""
+    if role is None:
+        return contextlib.nullcontext()
+    return jax.named_scope(f"qrole_{role}")
 
 
 def _maybe_key(key_data: Optional[jnp.ndarray], spec: QuantSpec,
@@ -67,26 +78,44 @@ def dot_qdq(a: jnp.ndarray, b: jnp.ndarray,
             spec_a: QuantSpec, spec_b: QuantSpec,
             *, key_data: Optional[jnp.ndarray] = None,
             salt: int = 0, precision=None,
-            axes_a=None, axes_b=None) -> jnp.ndarray:
+            axes_a=None, axes_b=None,
+            role: Optional[str] = None, route: str = "qdq",
+            reasons: Tuple[str, ...] = (), cell=None) -> jnp.ndarray:
     """QDQ both operands of ``a @ b`` then run the dot in the input dtype.
 
     ``a``: (M, K), ``b``: (K, N).  Reduction axes: 1 for a, 0 for b.
     ``axes_a``/``axes_b``: optional logical (row, col) names for SPMD scale
     placement (see ``quantize.scale_logical_axes``).
+
+    ``role``/``route``/``reasons``/``cell`` are static observability
+    metadata: when a routing census is active (``core.routing.capture``)
+    the call records one event, and the whole dot is wrapped in a
+    ``qrole_<role>`` named scope for jaxpr/HLO attribution.  ``route`` is
+    ``"qdq"`` for a configured QDQ impl and ``"qdq_fallback"`` (with
+    structured ``reasons``) when a pallas impl could not realize the
+    specs; ``cell`` carries the (layer, class) labels captured in scope
+    by ``qlinear`` (custom_vjp rules trace out of scope).
     """
-    with graph_span("quantize"):   # phase metadata for trace attribution
-        aq = qdq(a, spec_a, reduction_axis=1,
-                 stochastic_key=_maybe_key(key_data, spec_a, salt),
-                 axes=axes_a)
-        bq = qdq(b, spec_b, reduction_axis=0,
-                 stochastic_key=_maybe_key(key_data, spec_b, salt + 1),
-                 axes=axes_b)
-    return jax.lax.dot(aq, bq, precision=precision)
+    if role is not None and routing.active() is not None:
+        routing.record(
+            role, route, spec_a.to_str(), spec_b.to_str(), reasons=reasons,
+            sr_a=bool(spec_a.stochastic) and key_data is not None,
+            sr_b=bool(spec_b.stochastic) and key_data is not None,
+            cell=cell)
+    with _role_scope(role):
+        with graph_span("quantize"):   # phase metadata for attribution
+            aq = qdq(a, spec_a, reduction_axis=1,
+                     stochastic_key=_maybe_key(key_data, spec_a, salt),
+                     axes=axes_a)
+            bq = qdq(b, spec_b, reduction_axis=0,
+                     stochastic_key=_maybe_key(key_data, spec_b, salt + 1),
+                     axes=axes_b)
+        return jax.lax.dot(aq, bq, precision=precision)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def qmatmul(x: jnp.ndarray, w: jnp.ndarray, key_data: jnp.ndarray,
-            recipe: MatmulRecipe, axes=None) -> jnp.ndarray:
+            recipe: MatmulRecipe, axes=None, cell=None) -> jnp.ndarray:
     """y = Q(x) @ Q(w) with recipe-defined backward quantization.
 
     x: (M, K) activations, w: (K, N) weights, key_data: uint32[2] raw PRNG
@@ -94,26 +123,31 @@ def qmatmul(x: jnp.ndarray, w: jnp.ndarray, key_data: jnp.ndarray,
     ``axes``: optional logical names ``(row, k, n)`` of the matmul dims —
     static metadata steering operand/scale sharding in all three matmuls
     (fwd here, dgrad/wgrad in the vjp, each in its own orientation).
+    ``cell``: optional static (layer, class) labels for the routing
+    census (``core.routing``) — metadata only, no effect on the graph.
     """
     ax = axes or (None, None, None)
     return dot_qdq(x, w, recipe.fwd_x, recipe.fwd_w, key_data=key_data,
-                   salt=0, axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]))
+                   salt=0, axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]),
+                   role="fwd", cell=cell)
 
 
-def _qmatmul_fwd(x, w, key_data, recipe, axes):
-    y = qmatmul(x, w, key_data, recipe, axes)
+def _qmatmul_fwd(x, w, key_data, recipe, axes, cell):
+    y = qmatmul(x, w, key_data, recipe, axes, cell)
     return y, (x, w, key_data)
 
 
-def _qmatmul_bwd(recipe, axes, res, g):
+def _qmatmul_bwd(recipe, axes, cell, res, g):
     x, w, key_data = res
     row, k, n = axes or (None, None, None)
     # dgrad: dx = Q(g) @ Q(w^T); reduction over N.
     dx = dot_qdq(g, w.T, recipe.dgrad_g, recipe.dgrad_w, key_data=key_data,
-                 salt=2, axes_a=(row, n), axes_b=(n, k))
+                 salt=2, axes_a=(row, n), axes_b=(n, k), role="dgrad",
+                 cell=cell)
     # wgrad: dw = Q(x^T) @ Q(g); reduction over M (tokens).
     dw = dot_qdq(x.T, g, recipe.wgrad_x, recipe.wgrad_g, key_data=key_data,
-                 salt=4, axes_a=(k, row), axes_b=(row, n))
+                 salt=4, axes_a=(k, row), axes_b=(row, n), role="wgrad",
+                 cell=cell)
     return (dx.astype(x.dtype), dw.astype(w.dtype),
             jnp.zeros_like(key_data))
 
@@ -128,6 +162,35 @@ qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
 _KERNEL_BLOCK = 128
 
 
+def kernel_unsupported_reason(spec: QuantSpec) -> Optional[str]:
+    """Why the fused pipeline cannot realize ``spec``, or None if it can.
+
+    Returns a structured ``"<code>: <detail>"`` string — the vocabulary
+    the routing census records for QDQ fallbacks and ``analysis.qlint``
+    surfaces (and tests assert on):
+
+      ``unsupported_dtype``        fp16 is a clip-only codec (no grid the
+                                   integer-RTN kernel can round to);
+      ``unsupported_block``        block/tile granularity with a group
+                                   size other than the kernel's 128;
+      ``unsupported_granularity``  a granularity the kernel has no
+                                   quantize mode for.
+    """
+    if spec.is_passthrough:
+        return None
+    if spec.fmt == "fp16":
+        return ("unsupported_dtype: fp16 is clip-only (no kernel "
+                "rounding grid)")
+    if spec.granularity in ("block", "tile"):
+        if spec.block != _KERNEL_BLOCK:
+            return (f"unsupported_block: {spec.granularity}{spec.block} "
+                    f"(kernel group size is {_KERNEL_BLOCK})")
+        return None
+    if spec.granularity in ("token", "tensor"):
+        return None
+    return f"unsupported_granularity: {spec.granularity!r}"
+
+
 def kernel_quant_mode(spec: QuantSpec) -> Optional[str]:
     """The fused pipeline's quantization mode realizing ``spec``, or None.
 
@@ -139,19 +202,16 @@ def kernel_quant_mode(spec: QuantSpec) -> Optional[str]:
                         (no external scale precompute).
 
     Stochastic rounding is kernel-realizable since the quantize-once
-    rework (in-kernel PRNG noise).  None means unrealizable (fp16
-    clip-only codec, non-128 block sizes) — the caller falls back to QDQ
-    for that role.
+    rework (in-kernel PRNG noise).  None means unrealizable — the caller
+    falls back to QDQ for that role, and
+    :func:`kernel_unsupported_reason` says why (the structured reason the
+    routing census records).
     """
+    if kernel_unsupported_reason(spec) is not None:
+        return None
     if spec.is_passthrough:
         return "pass"
-    if spec.fmt == "fp16":
-        return None
-    if spec.granularity in ("block", "tile"):
-        return spec.granularity if spec.block == _KERNEL_BLOCK else None
-    if spec.granularity in ("token", "tensor"):
-        return spec.granularity
-    return None
+    return spec.granularity
 
 
 def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
@@ -160,7 +220,8 @@ def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
                key_data: Optional[jnp.ndarray] = None,
                salt: int = 0, collect_stats: bool = False,
                pipeline: Optional[str] = None,
-               axes_a=None, axes_b=None):
+               axes_a=None, axes_b=None,
+               role: Optional[str] = None, cell=None):
     """One matmul role through the fused Pallas pipeline when its specs are
     kernel-realizable, else through ``dot_qdq`` (transposes materialized).
 
@@ -180,14 +241,23 @@ def _dot_fused(a: jnp.ndarray, b: jnp.ndarray,
         # Deferred import: kernels.ops pulls in models.attention (cycle via
         # this module at import time).
         from repro.kernels.ops import pallas_qmm
-        return pallas_qmm(a, b, spec_a, spec_b, mode_a=mode_a, mode_b=mode_b,
-                          trans_a=trans_a, trans_b=trans_b,
-                          key_data=key_data, salt=salt, pipeline=pipeline,
-                          collect_stats=collect_stats)
+        with _role_scope(role):
+            return pallas_qmm(a, b, spec_a, spec_b,
+                              mode_a=mode_a, mode_b=mode_b,
+                              trans_a=trans_a, trans_b=trans_b,
+                              key_data=key_data, salt=salt,
+                              pipeline=pipeline,
+                              collect_stats=collect_stats, role=role,
+                              cell=cell)
+    reasons = tuple(
+        f"{operand}: {why}"
+        for operand, spec in (("lhs", spec_a), ("rhs", spec_b))
+        for why in (kernel_unsupported_reason(spec),) if why is not None)
     ae = a.T if trans_a else a
     be = b.T if trans_b else b
     y = dot_qdq(ae, be, spec_a, spec_b, key_data=key_data, salt=salt,
-                axes_a=axes_a, axes_b=axes_b)
+                axes_a=axes_a, axes_b=axes_b,
+                role=role, route="qdq_fallback", reasons=reasons, cell=cell)
     return (y, (None, None)) if collect_stats else y
 
 
@@ -197,29 +267,32 @@ def _make_pallas_qmatmul(pipeline: Optional[str]):
     process default).  Returns ``(qmatmul_fn, bwd_fn)`` — the bwd is shared
     with the stats variant below."""
 
-    @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
     def _pqm(x: jnp.ndarray, w: jnp.ndarray, key_data: jnp.ndarray,
-             recipe: MatmulRecipe, axes=None) -> jnp.ndarray:
+             recipe: MatmulRecipe, axes=None, cell=None) -> jnp.ndarray:
         ax = axes or (None, None, None)
         return _dot_fused(x, w, recipe.fwd_x, recipe.fwd_w,
                           key_data=key_data, salt=0, pipeline=pipeline,
-                          axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]))
+                          axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]),
+                          role="fwd", cell=cell)
 
-    def _fwd(x, w, key_data, recipe, axes):
-        return _pqm(x, w, key_data, recipe, axes), (x, w, key_data)
+    def _fwd(x, w, key_data, recipe, axes, cell):
+        return _pqm(x, w, key_data, recipe, axes, cell), (x, w, key_data)
 
-    def _bwd(recipe, axes, res, g):
+    def _bwd(recipe, axes, cell, res, g):
         x, w, key_data = res
         row, k, n = axes or (None, None, None)
         # dgrad: dx = Q(g) @ Q(w^T); reduction over N (w read transposed
         # in-kernel via the BlockSpec index map).
         dx = _dot_fused(g, w, recipe.dgrad_g, recipe.dgrad_w, trans_b=True,
                         key_data=key_data, salt=2, pipeline=pipeline,
-                        axes_a=(row, n), axes_b=(n, k))
+                        axes_a=(row, n), axes_b=(n, k), role="dgrad",
+                        cell=cell)
         # wgrad: dw = Q(x^T) @ Q(g); reduction over M (tokens).
         dw = _dot_fused(x, g, recipe.wgrad_x, recipe.wgrad_g, trans_a=True,
                         key_data=key_data, salt=4, pipeline=pipeline,
-                        axes_a=(k, row), axes_b=(row, n))
+                        axes_a=(k, row), axes_b=(row, n), role="wgrad",
+                        cell=cell)
         return (dx.astype(x.dtype), dw.astype(w.dtype),
                 jnp.zeros_like(key_data))
 
@@ -242,9 +315,10 @@ pallas_qmatmul_two_pass.__doc__ = (
     at equal tiling; kept selectable for A/B measurement and debugging.""")
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def pallas_qmatmul_stats(x: jnp.ndarray, w: jnp.ndarray,
-                         key_data: jnp.ndarray, recipe: MatmulRecipe):
+                         key_data: jnp.ndarray, recipe: MatmulRecipe,
+                         cell=None):
     """``pallas_qmatmul`` that additionally returns the forward quantize
     pass's telemetry-epilogue vectors ``(y, (stats_x, stats_w))``.
 
@@ -254,17 +328,17 @@ def pallas_qmatmul_stats(x: jnp.ndarray, w: jnp.ndarray,
     ``pallas_qmatmul`` (stat outputs carry no cotangent).
     """
     return _dot_fused(x, w, recipe.fwd_x, recipe.fwd_w, key_data=key_data,
-                      salt=0, collect_stats=True)
+                      salt=0, collect_stats=True, role="fwd", cell=cell)
 
 
-def _pallas_qmatmul_stats_fwd(x, w, key_data, recipe):
-    out = pallas_qmatmul_stats(x, w, key_data, recipe)
+def _pallas_qmatmul_stats_fwd(x, w, key_data, recipe, cell):
+    out = pallas_qmatmul_stats(x, w, key_data, recipe, cell)
     return out, (x, w, key_data)
 
 
-def _pallas_qmatmul_stats_bwd(recipe, res, ct):
+def _pallas_qmatmul_stats_bwd(recipe, cell, res, ct):
     g = ct[0]
-    return _pallas_qmatmul_bwd(recipe, None, res, g)
+    return _pallas_qmatmul_bwd(recipe, None, cell, res, g)
 
 
 pallas_qmatmul_stats.defvjp(_pallas_qmatmul_stats_fwd,
@@ -328,22 +402,33 @@ def packed_linear(x: jnp.ndarray, w: PackedTensor, recipe: MatmulRecipe,
     spec_x = recipe.fwd_x
     x2d = _hint2d(x.reshape(-1, k), axes and axes[:2])
     if spec_x.is_passthrough:
+        if routing.active() is not None:
+            routing.record("fwd", "packed_dot", spec_x.to_str(),
+                           recipe.fwd_w.to_str())
         y = x2d @ w_dq
     else:
         if key_data is None:
             key_data = _zero_key()
+        cell = routing.current_cell()
         if (impl in ("pallas", "pallas_two_pass")
                 and kernel_quant_mode(spec_x) is not None):
             pipeline = "two_pass" if impl == "pallas_two_pass" else None
             ax = axes or (None, None, None)
             y = _dot_fused(x2d, w_dq, spec_x, BF16_SPEC, key_data=key_data,
                            salt=0, pipeline=pipeline,
-                           axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]))
+                           axes_a=(ax[0], ax[1]), axes_b=(ax[1], ax[2]),
+                           role="fwd", cell=cell)
         else:
+            route, reasons = "qdq", ()
+            if impl in ("pallas", "pallas_two_pass"):
+                route = "qdq_fallback"
+                reasons = (f"lhs: {kernel_unsupported_reason(spec_x)}",)
             ax = axes or (None, None, None)
             y = dot_qdq(x2d, w_dq, spec_x, BF16_SPEC, key_data=key_data,
                         salt=0, axes_a=(ax[0], ax[1]),
-                        axes_b=(ax[1], ax[2]))
+                        axes_b=(ax[1], ax[2]),
+                        role="fwd", route=route, reasons=reasons,
+                        cell=cell)
     y = _hint2d(y, axes and (axes[0], axes[2]))
     y = y.reshape(*lead, w_dq.shape[-1])
     if bias is not None:
@@ -375,6 +460,9 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
     lead: Tuple[int, ...] = x.shape[:-1]
     k = x.shape[-1]
     if recipe.is_passthrough:
+        if routing.active() is not None:
+            routing.record("fwd", "dot", recipe.fwd_x.to_str(),
+                           recipe.fwd_w.to_str())
         y = _hint2d(x.reshape(-1, k), axes and axes[:2]) @ w
     else:
         if key_data is None:
@@ -391,13 +479,15 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
         # orientation, only quantized in the backward) keep the tap path.
         fused_fwd = None
         y = None
+        cell = routing.current_cell()
         if impl == "pallas" and telemetry.active() is not None:
             ma = kernel_quant_mode(recipe.fwd_x)
             mb = kernel_quant_mode(recipe.fwd_w)
             if (ma is not None and mb is not None
                     and (ma != "pass" or mb != "pass")):
                 from repro.kernels.fp4_matmul import finalize_quant_stats
-                y, (sa, sb) = pallas_qmatmul_stats(x2d, w, key_data, recipe)
+                y, (sa, sb) = pallas_qmatmul_stats(x2d, w, key_data, recipe,
+                                                   cell)
                 fused_fwd = {
                     "fwd_x": finalize_quant_stats(sa) if sa is not None
                     else None,
@@ -406,7 +496,7 @@ def qlinear(x: jnp.ndarray, w: jnp.ndarray, recipe: MatmulRecipe,
                 }
         telemetry.tap_matmul(x2d, w, recipe, fused_fwd=fused_fwd)
         if y is None:
-            y = matmul_impl(impl)(x2d, w, key_data, recipe, axes)
+            y = matmul_impl(impl)(x2d, w, key_data, recipe, axes, cell)
         y = telemetry.grad_tap(y, recipe)
     y = _hint2d(y, axes and (axes[0], axes[2]))
     y = y.reshape(*lead, w.shape[-1])

@@ -36,9 +36,21 @@ from repro.core import formats as F
 
 __all__ = ["QuantSpec", "qdq", "quantize_dequantize", "compute_scale",
            "scale_from_amax", "pow2_floor", "underflow_rate", "BF16_SPEC",
-           "scale_logical_axes"]
+           "scale_logical_axes", "qdq_scope_name"]
 
 _EPS = 1e-12
+
+
+def qdq_scope_name(spec: "QuantSpec") -> str:
+    """``jax.named_scope`` label marking a simulated quantize of ``spec``.
+
+    ``qdq_`` + the spec's canonical string with non-identifier characters
+    folded to ``_`` (named scopes flow into HLO ``op_name`` metadata, so
+    the label stays regex-friendly), e.g. ``fp4_e2m1@block128:sr`` ->
+    ``qdq_fp4_e2m1_block128_sr``.  ``analysis.qlint`` keys its
+    role-safety checks on this prefix.
+    """
+    return "qdq_" + re.sub(r"[^0-9A-Za-z_]+", "_", spec.to_str())
 
 
 def pow2_floor(s: jnp.ndarray) -> jnp.ndarray:
@@ -285,26 +297,31 @@ def quantize_dequantize(
     """
     if spec.is_passthrough:
         return x2d
-    fmt = spec.format
-    if spec.fmt == "fp16":
-        return F.round_to_format(x2d, fmt)
-    rows, cols = x2d.shape
-    xb, _, _, _ = _blocked_view(x2d, spec.granularity, spec.block,
-                                reduction_axis)
-    scale = compute_scale(x2d, spec, reduction_axis)
-    scale = _hint_scale(scale, spec, reduction_axis, axes).astype(x2d.dtype)
-    key = stochastic_key if spec.stochastic else None
-    y = F.round_to_format(xb / scale, fmt, stochastic_key=key) * scale
-    if spec.granularity in ("block", "tile"):
-        if spec.granularity == "block" and reduction_axis == 1:
-            y = y.reshape(-1, y.shape[1] * y.shape[2])
-        elif spec.granularity == "block":
-            y = y.reshape(y.shape[0] * y.shape[1], -1)
-        else:
-            y = y.reshape(y.shape[0] * y.shape[1],
-                          y.shape[2] * y.shape[3])
-        y = y[:rows, :cols]
-    return y.astype(x2d.dtype)
+    # qdq_<spec> named scope: static metadata marking every simulated
+    # quantize in the jaxpr/HLO (analysis.qlint keys role-safety checks on
+    # it); the computation is bit-identical with or without the scope.
+    with jax.named_scope(qdq_scope_name(spec)):
+        fmt = spec.format
+        if spec.fmt == "fp16":
+            return F.round_to_format(x2d, fmt)
+        rows, cols = x2d.shape
+        xb, _, _, _ = _blocked_view(x2d, spec.granularity, spec.block,
+                                    reduction_axis)
+        scale = compute_scale(x2d, spec, reduction_axis)
+        scale = _hint_scale(scale, spec, reduction_axis,
+                            axes).astype(x2d.dtype)
+        key = stochastic_key if spec.stochastic else None
+        y = F.round_to_format(xb / scale, fmt, stochastic_key=key) * scale
+        if spec.granularity in ("block", "tile"):
+            if spec.granularity == "block" and reduction_axis == 1:
+                y = y.reshape(-1, y.shape[1] * y.shape[2])
+            elif spec.granularity == "block":
+                y = y.reshape(y.shape[0] * y.shape[1], -1)
+            else:
+                y = y.reshape(y.shape[0] * y.shape[1],
+                              y.shape[2] * y.shape[3])
+            y = y[:rows, :cols]
+        return y.astype(x2d.dtype)
 
 
 # Short alias used throughout the codebase.

@@ -98,7 +98,7 @@ from repro.kernels.rounding import (group_scale, hash_uniform, round_to_grid,
 __all__ = ["fp4_matmul", "fused_qmm", "quantize_panels", "compiler_params",
            "finalize_quant_stats", "QUANT_MODES", "STATS_WIDTH",
            "PIPELINES", "default_pipeline", "use_pipeline",
-           "stream_supported"]
+           "stream_supported", "resolve_pipeline"]
 
 QUANT_MODES = ("pass", "block", "tile", "token", "tensor")
 
@@ -176,6 +176,21 @@ def stream_supported(a_mode: str, b_mode: str) -> bool:
     """
     streamable = ("pass", "block", "tile")
     return a_mode in streamable and b_mode in streamable
+
+
+def resolve_pipeline(pipeline: Optional[str], a_mode: str,
+                     b_mode: str) -> str:
+    """The pipeline ``fused_qmm`` will actually run for this call: the
+    explicit choice (or the process default), demoted to ``two_pass`` when
+    the granularity pair is not streamable.  Exposed so observability
+    layers (routing census / qlint) report the EFFECTIVE pipeline, not the
+    requested one."""
+    if pipeline is None:
+        pipeline = default_pipeline()
+    assert pipeline in PIPELINES, pipeline
+    if pipeline == "stream" and not stream_supported(a_mode, b_mode):
+        pipeline = "two_pass"
+    return pipeline
 
 
 def finalize_quant_stats(vec: jnp.ndarray):
@@ -1030,11 +1045,7 @@ def fused_qmm(a: jnp.ndarray, b: jnp.ndarray, *,
     """
     m, k = (a.shape[1], a.shape[0]) if trans_a else a.shape
     _, n = (b.shape[1], b.shape[0]) if trans_b else b.shape
-    if pipeline is None:
-        pipeline = default_pipeline()
-    assert pipeline in PIPELINES, pipeline
-    if pipeline == "stream" and not stream_supported(a_mode, b_mode):
-        pipeline = "two_pass"
+    pipeline = resolve_pipeline(pipeline, a_mode, b_mode)
     if bm is None and bn is None and bk is None:
         from repro.kernels import autotune  # lazy: autotune imports us
         hit = autotune.resolve_tiles(

@@ -12,6 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import routing
 from repro.core.quantize import QuantSpec
 from repro.kernels import fp4_matmul as _mm
 from repro.kernels import quantize as _q
@@ -63,7 +64,8 @@ def pallas_qmm(a: jnp.ndarray, b: jnp.ndarray,
                bm: Optional[int] = None, bn: Optional[int] = None,
                bk: Optional[int] = None,
                collect_stats: bool = False,
-               interpret: Optional[bool] = None):
+               interpret: Optional[bool] = None,
+               role: Optional[str] = None, cell=None):
     """Per-role quantized matmul ``Q(A') @ Q(B')`` through the fused
     pipeline (streaming single-pass by default, two-pass as reference —
     see ``kernels.fp4_matmul``), with padding.
@@ -92,6 +94,13 @@ def pallas_qmm(a: jnp.ndarray, b: jnp.ndarray,
     n = b.shape[0] if trans_b else b.shape[1]
     a_sr = bool(spec_a.stochastic) and mode_a != "pass"
     b_sr = bool(spec_b.stochastic) and mode_b != "pass"
+    if routing.active() is not None:
+        routing.record(
+            role or "?", "pallas", spec_a.to_str(), spec_b.to_str(),
+            mode_a=mode_a, mode_b=mode_b,
+            pipeline=_mm.resolve_pipeline(pipeline, mode_a, mode_b),
+            sr_a=a_sr and key_data is not None,
+            sr_b=b_sr and key_data is not None, cell=cell)
     seed_a = seed_b = None
     if a_sr or b_sr:
         assert key_data is not None, "stochastic spec needs key_data"

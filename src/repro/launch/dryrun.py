@@ -26,7 +26,6 @@ import traceback
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis.hlo import collective_bytes
 from repro.analysis.roofline import (model_flops, roofline_terms,

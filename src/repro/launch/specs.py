@@ -6,7 +6,7 @@ precomputed frame embeddings, [vlm] cells precomputed patch embeddings.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ index-addressed data pipeline and GSPMD sharding need no other coordination.
 """
 import argparse
 
-import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig, get_config
 from repro.data import make_pipeline

@@ -16,7 +16,6 @@ Cache variants:
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -8,7 +8,6 @@ the ``plan`` argument: a layer-resolved ``PrecisionPlan`` (or a
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import routing
 from repro.core.packed import PackedTensor
 from repro.core.qlinear import matmul_impl
 from repro.core.recipe import MatmulRecipe
@@ -56,8 +57,9 @@ def _expert_linear(x: jnp.ndarray, w: jnp.ndarray,
         return jnp.einsum("eck,ekn->ecn", x, w)
     key = jnp.zeros((2,), jnp.uint32)
     mm = matmul_impl(impl)
+    cell = routing.current_cell()  # static labels for the routing census
     telemetry.tap_matmul_batched(x, w, recipe)  # no-op unless collecting
-    y = jax.vmap(lambda a, b: mm(a, b, key, recipe))(x, w)
+    y = jax.vmap(lambda a, b: mm(a, b, key, recipe, None, cell))(x, w)
     return telemetry.grad_tap(y, recipe)
 
 

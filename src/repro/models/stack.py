@@ -26,7 +26,7 @@ bit-identically).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +43,7 @@ def _checkpoint(fn, cfg):
     return jax.checkpoint(fn)
 
 from repro.configs.base import LayerSpec, ModelConfig
+from repro.core import routing
 from repro.core.recipe import LayerRecipe, PrecisionPlan
 from repro.models import attention as attn_lib
 from repro.models import mlp as mlp_lib
@@ -195,7 +196,8 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, row:
                LayerRecipe, x, *, positions, cross_states, cache,
-               cache_len, decode, causal=True, layer_idx=None):
+               cache_len, decode, causal=True, layer_idx=None,
+               audit_label=None):
     """One layer, precision-resolved by its plan ``row``.
     Returns (x, new_cache).
 
@@ -205,10 +207,14 @@ def _run_layer(params, cfg: ModelConfig, spec: LayerSpec, row:
     cache slot (same channel as ``_moe_aux``) so per-layer stats survive
     both the scan and the unroll stacking strategies.  ``layer_idx`` (int
     in unroll mode, traced scalar in a scan body) routes backward-side
-    probe stats into the layer's row.
+    probe stats into the layer's row.  ``audit_label`` is the STATIC layer
+    label for the routing census (``"L3"`` unrolled, ``"L1:8:4"`` for a
+    scan-body position standing for ``range(1, 8, 4)``) — usable where
+    ``layer_idx`` may be traced.
     """
     new_cache: Dict[str, Any] = {}
-    with telemetry.layer_frame(layer_idx) as tel_frame:
+    with routing.layer_scope(audit_label), \
+            telemetry.layer_frame(layer_idx) as tel_frame:
         # Pre-norm outputs re-enter TP matmuls replicated on embed; the
         # hints pin each sublayer input so GSPMD gathers exactly once here
         # instead of propagating a model-sharded layout into the norm.
@@ -299,7 +305,8 @@ def run_stack(params, cfg: ModelConfig, plan: PrecisionPlan,
                 _run_layer, cfg=cfg, spec=spec, row=plan.layers[i],
                 positions=positions, cross_states=cross_states,
                 cache_len=cache_len, decode=decode, causal=causal,
-                layer_idx=i if indexed_probes else None)
+                layer_idx=i if indexed_probes else None,
+                audit_label=f"L{i}")
             if cfg.remat and cfg.remat_policy != "none" and cache is None:
                 ckpt = _checkpoint(
                     lambda p, y, _fn=fn: _fn(p, x=y, cache=None), cfg)
@@ -360,7 +367,9 @@ def run_stack(params, cfg: ModelConfig, plan: PrecisionPlan,
                     positions=pos, cross_states=cross_states,
                     cache=None if c_g is None else c_g[f"l{i:02d}"],
                     cache_len=clen, decode=decode, causal=causal,
-                    layer_idx=lidx)
+                    layer_idx=lidx,
+                    audit_label=(f"L{g0 * period + i}:"
+                                 f"{g1 * period}:{period}"))
                 if isinstance(c_i, dict) and "_moe_aux" in c_i:
                     aux_g.append(c_i.pop("_moe_aux"))
                 if isinstance(c_i, dict) and "_telemetry" in c_i:

@@ -50,6 +50,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import routing
 from repro.core.quantize import QuantSpec, _blocked_view
 from repro.core.recipe import MatmulRecipe
 
@@ -169,16 +170,23 @@ def suppressed():
 
 @contextlib.contextmanager
 def module_scope(name: str):
-    """Label taps inside with a module scope ('attn', 'ffn', ...)."""
-    col = active()
-    if col is None:
-        yield
-        return
-    col._scopes.append(name)
-    try:
-        yield
-    finally:
-        col._scopes.pop()
+    """Label taps inside with a module scope ('attn', 'ffn', ...).
+
+    Also feeds the routing census (``core.routing.class_scope``) so the
+    qlint audit attributes matmul routes to plan classes even with no
+    telemetry collector installed — both sides are no-ops when their
+    respective context is absent.
+    """
+    with routing.class_scope(name):
+        col = active()
+        if col is None:
+            yield
+            return
+        col._scopes.append(name)
+        try:
+            yield
+        finally:
+            col._scopes.pop()
 
 
 @contextlib.contextmanager

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import weakref
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

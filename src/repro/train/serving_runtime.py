@@ -264,6 +264,14 @@ class DecodeEngine:
                                         cache["length"])
         return nxt.astype(jnp.int32), new_cache
 
+    def qlint_report(self, *, compile_hlo: bool = True):
+        """Static precision-flow audit (``analysis.qlint``) of this
+        engine's batched generate-step graph: packed-panel routes,
+        activation-quant kernel presence, zero-fallback serving.  Trace-
+        only — the engine's cache and slots are untouched."""
+        from repro.analysis import qlint
+        return qlint.audit_decode_engine(self, compile_hlo=compile_hlo)
+
     # -- public stages -----------------------------------------------------
 
     def prefill(self, prompt) -> Tuple[int, Any]:

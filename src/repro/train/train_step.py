@@ -28,8 +28,7 @@ path.
 from __future__ import annotations
 
 import contextlib
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -212,6 +212,14 @@ class Trainer:
                 rules=self.rules)
         return self._steps[key]
 
+    def qlint_report(self, *, compile_hlo: bool = False):
+        """Static precision-flow audit (``analysis.qlint``) of the active
+        plan's step graph plus a recompile-budget census over every step
+        graph this trainer has compiled.  Trace-only — nothing executes.
+        """
+        from repro.analysis import qlint
+        return qlint.audit_trainer(self, compile_hlo=compile_hlo)
+
     # ------------------------------------------------------------------
 
     def resume(self) -> Optional[TrainState]:

@@ -1,8 +1,6 @@
 """Checkpointing: atomicity, retention, resume exactness, corruption."""
 import dataclasses
 import os
-import shutil
-import tempfile
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ import pytest
 # installed, skip-marked no-ops otherwise.
 from conftest import given, requires_hypothesis, settings, st
 
-from repro.core.formats import (FORMATS, FP4_E2M1, FP8_E4M3, FP8_E5M2,
+from repro.core.formats import (FORMATS, FP4_E2M1, FP8_E4M3,
                                 format_values, round_to_format)
 
 LOWBIT = ["fp4_e2m1", "fp4_e1m2", "fp6_e2m3", "fp6_e3m2", "fp8_e4m3",

@@ -4,7 +4,6 @@ import importlib
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import TrainConfig

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import ModelConfig, MoESettings
 from repro.core.recipe import RECIPES

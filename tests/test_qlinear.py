@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core.qlinear import dot_qdq, qlinear, qmatmul
+from repro.core.qlinear import qlinear, qmatmul
 from repro.core.quantize import QuantSpec, qdq
 from repro.core.recipe import (MM_BF16, MM_FP4_ALL, MM_FFN_PAPER, MM_FP8,
                                MatmulRecipe, RECIPES)

@@ -1,11 +1,10 @@
 """HLO collective parser + roofline term math + compression numerics."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis.hlo import collective_bytes, parse_collectives
-from repro.analysis.roofline import (HW_V5E, model_flops, roofline_terms,
+from repro.analysis.roofline import (model_flops, roofline_terms,
                                      scan_flop_corrections)
 from repro.configs.base import SHAPE_CELLS, get_config
 

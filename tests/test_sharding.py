@@ -12,7 +12,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import get_config
 from repro.distributed.sharding import default_rules, opt_state_shardings
-from repro.nn.params import ParamSpec
 
 
 @pytest.fixture(scope="module")

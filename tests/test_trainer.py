@@ -1,7 +1,5 @@
 """Trainer: convergence, schedule switch, grad-accum equivalence,
 compression, straggler monitor."""
-import dataclasses
-import tempfile
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,140 @@
+"""No-dependency approximation of the repo's ruff gate.
+
+CI runs the real thing (``ruff check .`` with the ``[tool.ruff]`` config
+in pyproject.toml); this script covers the highest-signal subset of the
+selected families so the gate can run in environments where ruff is not
+installable:
+
+  E9    syntax / indentation errors (via ``compile()``)
+  F401  unused imports (module scope; ``__all__`` and re-export
+        conventions respected)
+  F811  redefinition of an imported name by a later import
+  E711  comparison to None with ==/!=
+  E712  comparison to True/False with ==/!=
+  E722  bare ``except:``
+
+(E731/E741 are in the repo's ruff ignore list and are not checked here.)
+
+Usage::
+
+    python tools/lint.py [paths...]     # default: src tests tools benchmarks examples
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+def _names_loaded(tree: ast.AST) -> set:
+    loaded = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            loaded.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            n = node
+            while isinstance(n, ast.Attribute):
+                n = n.value
+            if isinstance(n, ast.Name):
+                loaded.add(n.id)
+        elif (isinstance(node, (ast.AnnAssign, ast.arg))
+              and isinstance(node.annotation, ast.Constant)
+              and isinstance(node.annotation.value, str)):
+            # quoted annotations count as usage (ruff semantics)
+            try:
+                loaded |= _names_loaded(
+                    ast.parse(node.annotation.value, mode="eval"))
+            except SyntaxError:
+                pass
+    return loaded
+
+
+def _module_imports(tree: ast.Module):
+    """(alias, lineno, public_name) for module-level import bindings."""
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                yield name, node.lineno, a.name
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                name = a.asname or a.name
+                yield name, node.lineno, a.name
+
+
+def _dunder_all(tree: ast.Module) -> set:
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "__all__"
+                and isinstance(node.value, (ast.List, ast.Tuple))):
+            return {e.value for e in node.value.elts
+                    if isinstance(e, ast.Constant)}
+    return set()
+
+
+def check_file(path: Path) -> list:
+    problems = []
+    text = path.read_text()
+    try:
+        tree = ast.parse(text, filename=str(path))
+        compile(text, str(path), "exec")
+    except SyntaxError as e:
+        return [(path, e.lineno or 0, "E9", str(e.msg))]
+
+    loaded = _names_loaded(tree)
+    exported = _dunder_all(tree)
+    seen = {}
+    for name, lineno, orig in _module_imports(tree):
+        if name in seen and seen[name] != lineno:
+            problems.append((path, lineno, "F811",
+                             f"redefinition of imported {name!r}"))
+        seen[name] = lineno
+        if name.startswith("_") or name in exported:
+            continue
+        # "import x as x" is the explicit re-export idiom
+        if orig == name and f"import {name} as {name}" in text:
+            continue
+        if name not in loaded:
+            problems.append((path, lineno, "F401",
+                             f"{name!r} imported but unused"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Compare):
+            for op, cmp_ in zip(node.ops, node.comparators):
+                if not isinstance(op, (ast.Eq, ast.NotEq)):
+                    continue
+                if isinstance(cmp_, ast.Constant):
+                    if cmp_.value is None:
+                        problems.append((path, node.lineno, "E711",
+                                         "comparison to None with ==/!="))
+                    elif cmp_.value is True or cmp_.value is False:
+                        problems.append((path, node.lineno, "E712",
+                                         "comparison to True/False with "
+                                         "==/!="))
+        elif isinstance(node, ast.ExceptHandler) and node.type is None:
+            problems.append((path, node.lineno, "E722", "bare except"))
+    return problems
+
+
+def main(argv) -> int:
+    roots = [Path(p) for p in argv] or [Path("src"), Path("tests"),
+                                        Path("tools"), Path("benchmarks"),
+                                        Path("examples")]
+    files = []
+    for r in roots:
+        files += sorted(r.rglob("*.py")) if r.is_dir() else [r]
+    problems = []
+    for f in files:
+        problems += check_file(f)
+    for path, lineno, code, msg in problems:
+        print(f"{path}:{lineno}: {code} {msg}")
+    print(f"lint: {len(files)} files, {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
